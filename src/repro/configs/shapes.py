@@ -1,0 +1,33 @@
+"""Assigned input-shape presets (the 4 columns of the dry-run grid)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+# long_500k requires sub-quadratic sequence mixing: SSM/hybrid state is
+# O(1); mixtral's sliding-window attention needs only a rolling
+# window-sized cache.  Pure full-attention archs skip it (DESIGN.md §5).
+LONG_CONTEXT_ARCHS = ("mamba2-130m", "zamba2-2.7b", "mixtral-8x7b")
+
+
+def cells_for(arch: str) -> list[str]:
+    cells = ["train_4k", "prefill_32k", "decode_32k"]
+    if arch in LONG_CONTEXT_ARCHS:
+        cells.append("long_500k")
+    return cells

@@ -1,0 +1,21 @@
+"""repro.core — the paper's contribution as composable JAX modules.
+
+Layout:
+  hashing.py      counter-based entropy (the write-free substrate)
+  lfsr.py         16-bit LFSR + swapper selection network (Fig. 10)
+  clt_grng.py     subset-sum Gaussian sampling (Fig. 8/9)
+  offset.py       static offset compensation (§III-B1)
+  quant.py        8b µ / 4b σ / 8b IDAC / 6b ADC numeric path (§IV)
+  cim.py          64-deep chunked-ADC CIM matmul oracle
+  bayes_layer.py  variational training layer (Bayes-by-backprop)
+  sampling.py     serving modes: paper | rank16 | moment
+  uncertainty.py  AURC / AECE / AMCE / risk-coverage (§V-B2)
+  energy.py       analytic hardware model (Table I, §V-A)
+"""
+
+from repro.core.clt_grng import GRNGConfig
+from repro.core.quant import QuantConfig
+from repro.core.sampling import BayesHeadConfig
+from repro.core.bayes_layer import BayesDenseConfig
+
+__all__ = ["GRNGConfig", "QuantConfig", "BayesHeadConfig", "BayesDenseConfig"]

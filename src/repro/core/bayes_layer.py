@@ -1,0 +1,129 @@
+"""Variational Bayesian dense layer (training side of the paper's BNN).
+
+The paper converts only the final projection of its detector to Bayesian
+weights (§V-B1: "converting only the last layer balances computational
+cost with UQ capability") and trains with variational inference
+(Eq. 1).  This module provides:
+
+  * parameter init (µ, ρ) with σ = softplus(ρ),
+  * the reparameterized forward pass  w = µ + σ·ε  where ε comes from
+    the *same CLT-GRNG* used at inference — train/serve distribution
+    match, which the paper relies on for its "CLT ≈ ideal" accuracy
+    claims (Table II),
+  * the closed-form KL(q ‖ N(0, σ_p²)) regularizer,
+  * conversion to the quantized, offset-compensated serving head.
+
+Quantization-aware training uses the STE quantizers in core/quant.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import clt_grng as g
+from repro.core import quant as q
+from repro.core.sampling import BayesHeadConfig, prepare_serving_head
+
+
+@dataclasses.dataclass(frozen=True)
+class BayesDenseConfig:
+    d_in: int
+    d_out: int
+    sigma_init: float = 0.05
+    prior_sigma: float = 0.1
+    grng: g.GRNGConfig = dataclasses.field(default_factory=g.GRNGConfig)
+    quant: q.QuantConfig = dataclasses.field(
+        default_factory=lambda: q.QuantConfig(enabled=False))
+    param_dtype: Any = jnp.float32
+
+
+def _inv_softplus(x: float) -> float:
+    import math
+    return math.log(math.expm1(x))
+
+
+def init(key: jax.Array, cfg: BayesDenseConfig) -> dict:
+    kmu, _ = jax.random.split(key)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.d_in, jnp.float32))
+    mu = jax.random.normal(kmu, (cfg.d_in, cfg.d_out), cfg.param_dtype) * scale
+    rho = jnp.full((cfg.d_in, cfg.d_out), _inv_softplus(cfg.sigma_init),
+                   cfg.param_dtype)
+    return {"mu": mu, "rho": rho}
+
+
+def sigma_of(params: dict) -> jnp.ndarray:
+    return jax.nn.softplus(params["rho"])
+
+
+def sample_weights(params: dict, cfg: BayesDenseConfig, step) -> jnp.ndarray:
+    """Reparameterized weight draw using the CLT-GRNG stream at ``step``.
+
+    ε is a constant w.r.t. (µ, ρ) — gradients flow through the affine
+    reparameterization exactly as in standard Bayes-by-backprop.
+    """
+    sigma = sigma_of(params)
+    eps = g.eps(cfg.grng, cfg.d_in, cfg.d_out, 1, sample0=0)[0]
+    # Advance the stream per training step without re-tracing: hash the
+    # step into the selection seed (write-free: new subset, same devices).
+    del step  # stream offset folded into lfsr seed by caller when needed
+    w = params["mu"] + sigma * jax.lax.stop_gradient(eps)
+    if cfg.quant.enabled:
+        scale = q.symmetric_scale(jax.lax.stop_gradient(w), cfg.quant.mu_bits)
+        w = q.fake_quant_ste(w, scale, cfg.quant.mu_bits)
+    return w
+
+
+def sample_weights_at(params: dict, cfg: BayesDenseConfig,
+                      sample0: jnp.ndarray) -> jnp.ndarray:
+    """Like ``sample_weights`` but with a dynamic (traced) stream offset.
+
+    Uses the hardware's layer-shared selection (one 16-bit selection per
+    training step, random-accessed via lfsr.indexed_selections) and
+    accumulates the subset sum with a scan over the 16 virtual devices —
+    peak temp is one [d_in, d_out] f32 buffer, never [d_in, d_out, 16].
+    """
+    from repro.core.hashing import gaussianish, hash3, uniform_bit
+    from repro.core.lfsr import indexed_selections
+    sigma = sigma_of(params)
+    sel = indexed_selections(cfg.grng.lfsr_seed,
+                             jnp.asarray(sample0, jnp.uint32))     # [16]
+    rows = jnp.arange(cfg.d_in, dtype=jnp.uint32)[:, None]
+    cols = jnp.arange(cfg.d_out, dtype=jnp.uint32)[None, :]
+    grng = cfg.grng
+
+    def body(raw, j):
+        h = hash3(rows, cols, j, grng.seed)
+        i_j = (grng.i_lo + grng.delta_i * uniform_bit(h)
+               + grng.gamma * gaussianish(h))
+        return raw + sel[j] * i_j, None
+
+    raw0 = jnp.zeros((cfg.d_in, cfg.d_out), jnp.float32)
+    raw, _ = jax.lax.scan(body, raw0, jnp.arange(16, dtype=jnp.uint32))
+    eps = (raw - grng.sum_mean) / grng.sum_std
+    return params["mu"] + sigma * jax.lax.stop_gradient(eps)
+
+
+def kl_divergence(params: dict, cfg: BayesDenseConfig) -> jnp.ndarray:
+    """KL( N(µ,σ²) ‖ N(0,σ_p²) ), summed over all weights."""
+    sigma = sigma_of(params)
+    sp = cfg.prior_sigma
+    kl = (jnp.log(sp / sigma) + (sigma**2 + params["mu"] ** 2) / (2 * sp**2)
+          - 0.5)
+    return kl.sum()
+
+
+def apply_train(params: dict, x: jnp.ndarray, cfg: BayesDenseConfig,
+                step) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Training forward: one reparameterized sample. Returns (y, kl)."""
+    w = sample_weights_at(params, cfg, step)
+    y = x @ w.astype(x.dtype)
+    return y, kl_divergence(params, cfg)
+
+
+def to_serving(params: dict, head_cfg: BayesHeadConfig) -> dict:
+    """Freeze the variational posterior into the quantized serving head."""
+    return prepare_serving_head(params["mu"], sigma_of(params), head_cfg)

@@ -1,0 +1,191 @@
+"""Write-free CLT-GRNG — the paper's core contribution, in JAX.
+
+Each Bayesian weight cell (k, n) owns 16 *virtual devices* whose
+currents are fixed deterministic hashes of the coordinate (see
+core/hashing.py — the TPU analogue of "programmed once, never
+rewritten").  A sample of the standard-normal surrogate ε is produced by
+summing the currents of 8 of the 16 devices, the subset chosen by the
+LFSR + swapper network of core/lfsr.py:
+
+    raw(k, n, r)  =  Σ_j  s_r[j] · I(k, n, j)
+    ε(k, n, r)    =  (raw − sum_mean) / sum_std
+
+Device model (paper Fig. 5/6: minimum-size FeFETs are *binary* with
+abrupt switching plus analog variation):
+
+    I(k,n,j) = i_lo + Δi · b(k,n,j) + γ · v(k,n,j)      [µA]
+
+with b a hash bit (high-/low-V_t state, p=1/2) and v ≈ N(0,1) from
+popcount-CLT.  Defaults are fitted to the paper's measured Fig. 9
+statistics: 8-device sum mean 10.1 µA, SD 0.993 µA
+(E[raw] = 8(i_lo + Δi/2),  Var[raw] ≈ 8(Δi²/4 + γ²)).
+
+Selection granularity mirrors the hardware's shared selection lines:
+  * 'layer' — one selection vector per sample shared by every cell in
+    the layer (macro-level sharing; enables the exact rank-16 sampling
+    path in core/sampling.py).
+  * 'tile'  — one selector per 64×64 tile (per-macro sharing).
+  * 'cell'  — idealized independent selections (ablation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import lfsr as lfsr_mod
+from repro.core.hashing import gaussianish, hash3, uniform_bit
+
+
+@dataclasses.dataclass(frozen=True)
+class GRNGConfig:
+    n_devices: int = 16
+    k_select: int = 8
+    # Device current model [µA] — fitted to paper Fig. 9 statistics.
+    i_lo: float = 0.926
+    delta_i: float = 0.673
+    gamma: float = 0.100
+    # Fig. 9 measured sum statistics used for standardization.
+    sum_mean: float = 10.1
+    sum_std: float = 0.993
+    # Entropy source seeds ("programming" seed / selector seed).
+    seed: int = 0xC1A0
+    lfsr_seed: int = 0xACE1
+    # Selection sharing: 'layer' | 'tile' | 'cell'.
+    granularity: str = "layer"
+    tile: int = 64
+
+    def analytic_sum_stats(self) -> tuple[float, float]:
+        """Closed-form mean/SD of the 8-device sum under the device model."""
+        mean = self.k_select * (self.i_lo + 0.5 * self.delta_i)
+        var = self.k_select * (self.delta_i**2 / 4.0 + self.gamma**2)
+        return mean, float(np.sqrt(var))
+
+
+def device_currents(cfg: GRNGConfig, rows: jnp.ndarray, cols: jnp.ndarray) -> jnp.ndarray:
+    """Virtual device currents I(k, n, j) for given global coordinates.
+
+    rows: [...]/int32 global row ids; cols broadcastable. Returns
+    float32 [..., n_devices].  Pure function of coordinates — fusable,
+    shardable, no storage.
+    """
+    j = jnp.arange(cfg.n_devices, dtype=jnp.uint32)
+    h = hash3(rows[..., None], cols[..., None], j, cfg.seed)
+    b = uniform_bit(h)
+    v = gaussianish(h)
+    return cfg.i_lo + cfg.delta_i * b + cfg.gamma * v
+
+
+def device_currents_grid(cfg: GRNGConfig, n_rows: int, n_cols: int,
+                         row0: int = 0, col0: int = 0) -> jnp.ndarray:
+    """[n_rows, n_cols, n_devices] device currents for a coordinate block."""
+    rows = row0 + jnp.arange(n_rows, dtype=jnp.uint32)[:, None]
+    cols = col0 + jnp.arange(n_cols, dtype=jnp.uint32)[None, :]
+    return device_currents(cfg, rows, cols)
+
+
+def selections(cfg: GRNGConfig, num_samples: int, sample0: int = 0,
+               n_rows: int | None = None, n_cols: int | None = None) -> jnp.ndarray:
+    """Selection vectors for ``num_samples`` consecutive samples.
+
+    Returns:
+      granularity 'layer': [R, 16]
+      granularity 'tile' : [R, ceil(n_rows/tile), ceil(n_cols/tile), 16]
+    ('cell' is handled inline by ``eps`` since it has no shared stream.)
+    """
+    if cfg.granularity == "layer":
+        states = lfsr_mod.lfsr_states(cfg.lfsr_seed, sample0 + num_samples)
+        return lfsr_mod.swapper_select(states[sample0:])
+    if cfg.granularity == "tile":
+        assert n_rows is not None and n_cols is not None
+        nt_r = -(-n_rows // cfg.tile)
+        nt_c = -(-n_cols // cfg.tile)
+        seeds = lfsr_mod.tile_seeds(cfg.lfsr_seed, nt_r * nt_c).reshape(nt_r, nt_c)
+        states = jax.vmap(
+            jax.vmap(lambda s: lfsr_mod.lfsr_states(s, sample0 + num_samples))
+        )(seeds)  # [nt_r, nt_c, R0+R]
+        states = jnp.moveaxis(states[..., sample0:], -1, 0)  # [R, nt_r, nt_c]
+        return lfsr_mod.swapper_select(states)
+    raise ValueError(f"selections() not defined for granularity={cfg.granularity}")
+
+
+def _expand_tile_sel(sel_t: jnp.ndarray, n_rows: int, n_cols: int, tile: int) -> jnp.ndarray:
+    """[.., nt_r, nt_c, 16] -> [.., n_rows, n_cols, 16] by tile broadcast."""
+    s = jnp.repeat(sel_t, tile, axis=-3)[..., :n_rows, :, :]
+    s = jnp.repeat(s, tile, axis=-2)[..., :, :n_cols, :]
+    return s
+
+
+def raw_sums(cfg: GRNGConfig, n_rows: int, n_cols: int, num_samples: int,
+             sample0: int = 0, row0: int = 0, col0: int = 0) -> jnp.ndarray:
+    """Un-standardized subset sums. -> [R, n_rows, n_cols] (µA)."""
+    currents = device_currents_grid(cfg, n_rows, n_cols, row0, col0)  # [K,N,16]
+    if cfg.granularity == "layer":
+        sel = selections(cfg, num_samples, sample0)  # [R,16]
+        return jnp.einsum("rj,knj->rkn", sel, currents)
+    if cfg.granularity == "tile":
+        sel = selections(cfg, num_samples, sample0, n_rows, n_cols)  # [R,t,t,16]
+        sel_full = _expand_tile_sel(sel, n_rows, n_cols, cfg.tile)  # [R,K,N,16]
+        return jnp.einsum("rknj,knj->rkn", sel_full, currents)
+    if cfg.granularity == "cell":
+        rows = row0 + jnp.arange(n_rows, dtype=jnp.uint32)[:, None]
+        cols = col0 + jnp.arange(n_cols, dtype=jnp.uint32)[None, :]
+
+        def one_sample(r):
+            sel = lfsr_mod.cell_selections(rows, cols, r, cfg.lfsr_seed)  # [K,N,16]
+            return jnp.einsum("knj,knj->kn", sel, currents)
+
+        rs = sample0 + jnp.arange(num_samples, dtype=jnp.uint32)
+        return jax.vmap(one_sample)(rs)
+    raise ValueError(cfg.granularity)
+
+
+def eps(cfg: GRNGConfig, n_rows: int, n_cols: int, num_samples: int,
+        sample0: int = 0, row0: int = 0, col0: int = 0) -> jnp.ndarray:
+    """Standardized ε samples. -> [R, n_rows, n_cols]."""
+    raw = raw_sums(cfg, n_rows, n_cols, num_samples, sample0, row0, col0)
+    return (raw - cfg.sum_mean) / cfg.sum_std
+
+
+def cell_mean_offset(cfg: GRNGConfig, n_rows: int, n_cols: int,
+                     row0: int = 0, col0: int = 0) -> jnp.ndarray:
+    """Exact static per-cell offset Δε (paper §III-B1), closed form.
+
+    The swapper network selects every position with probability 1/2
+    under a uniform control stream (verified in tests), so
+    E_sel[raw] = (k/n)·Σ_j I_j = Σ_j I_j / 2.  The hardware must
+    *measure* this with N samples (54 + 458N pJ); the virtual-device
+    formulation lets us evaluate it exactly — and also mimic the
+    measured variant, see ``estimate_mean_offset``.
+    """
+    currents = device_currents_grid(cfg, n_rows, n_cols, row0, col0)
+    expect_raw = currents.sum(-1) * (cfg.k_select / cfg.n_devices)
+    return (expect_raw - cfg.sum_mean) / cfg.sum_std
+
+
+def estimate_mean_offset(cfg: GRNGConfig, n_rows: int, n_cols: int,
+                         num_samples: int, sample0: int = 0) -> jnp.ndarray:
+    """N-sample estimate of Δε — the paper's measurement procedure."""
+    return eps(cfg, n_rows, n_cols, num_samples, sample0).mean(axis=0)
+
+
+@partial(jax.jit, static_argnums=(0, 1, 2))
+def calibrate(cfg: GRNGConfig, n_cells: int = 4096, num_samples: int = 64):
+    """Empirically estimate (sum_mean, sum_std) across cells × samples.
+
+    One-time calibration, mirroring the paper's Fig. 9 measurement.
+    Returns (mean, std) of raw sums in µA.
+    """
+    raw = raw_sums(cfg, n_cells, 1, num_samples)
+    return raw.mean(), raw.std()
+
+
+def distribution_sample(cfg: GRNGConfig, n_cells: int, num_samples: int) -> np.ndarray:
+    """Flat array of ε draws for distribution-quality analysis (Fig. 9)."""
+    e = eps(cfg, n_cells, 1, num_samples)
+    return np.asarray(e).reshape(-1)

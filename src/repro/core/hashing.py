@@ -1,0 +1,81 @@
+"""Counter-based integer hashing — the TPU analogue of "programmed once".
+
+The paper's CLT-GRNG derives its entropy from FeFETs that are programmed
+*once* to random threshold-voltage states and then only ever read.  On
+TPU we realize "fixed random device state, zero storage, zero writes" as
+a pure deterministic hash of the device coordinate: the virtual current
+of device ``j`` in cell ``(k, n)`` is a function of ``mix32`` applied to
+``(k, n, j, seed)``.  Every shard of a distributed model regenerates
+bit-identical device states with no communication and no HBM traffic —
+stronger than the hardware, which must physically ship its array.
+
+``mix32`` is the "lowbias32" finalizer (Wellons): three rounds of
+xorshift-multiply.  It is transcendental-free (VPU integer ops only) and
+implemented identically here (jnp) and inside the Pallas kernels, which
+lets the kernel tests assert bit-exact agreement with the oracle.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Knuth/Weyl multiplicative constants for coordinate folding.
+_C1 = jnp.uint32(0x9E3779B9)
+_C2 = jnp.uint32(0x85EBCA6B)
+_C3 = jnp.uint32(0xC2B2AE35)
+
+
+def mix32(x: jnp.ndarray) -> jnp.ndarray:
+    """lowbias32 finalizer. Input/output uint32 arrays."""
+    x = jnp.asarray(x, jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash3(k: jnp.ndarray, n: jnp.ndarray, j: jnp.ndarray, seed) -> jnp.ndarray:
+    """Hash a 3-D coordinate + seed into 32 uniform bits.
+
+    Arguments broadcast against each other; any integer dtype accepted.
+    """
+    k = jnp.asarray(k, jnp.uint32)
+    n = jnp.asarray(n, jnp.uint32)
+    j = jnp.asarray(j, jnp.uint32)
+    s = jnp.uint32(seed)
+    h = mix32(j * _C3 + s)
+    h = mix32(n * _C2 + h)
+    h = mix32(k * _C1 + h)
+    return h
+
+
+def hash2(a: jnp.ndarray, b: jnp.ndarray, seed) -> jnp.ndarray:
+    a = jnp.asarray(a, jnp.uint32)
+    b = jnp.asarray(b, jnp.uint32)
+    h = mix32(b * _C2 + jnp.uint32(seed))
+    h = mix32(a * _C1 + h)
+    return h
+
+
+def uniform_bit(h: jnp.ndarray, bit: int = 31) -> jnp.ndarray:
+    """Extract one Bernoulli(1/2) bit from a hash word (float 0/1)."""
+    return ((h >> jnp.uint32(bit)) & jnp.uint32(1)).astype(jnp.float32)
+
+
+def gaussianish(h: jnp.ndarray) -> jnp.ndarray:
+    """CLT-of-bytes standard-normal surrogate — transcendental-free.
+
+    Sum of the three low bytes of a hash word (Irwin–Hall with n=3):
+    mean 3·127.5, variance 3·(256²−1)/12 ⇒ std ≈ 127.99.  Standardized
+    it is approximately N(0,1) — itself a tiny CLT-GRNG, the same trick
+    the paper plays with FeFET currents replayed at the bit level to
+    model per-device analog variation.  Chosen over popcount for finer
+    granularity (1/128 lattice) and guaranteed Mosaic lowering (adds and
+    shifts only).
+    """
+    b0 = (h & jnp.uint32(0xFF)).astype(jnp.float32)
+    b1 = ((h >> jnp.uint32(8)) & jnp.uint32(0xFF)).astype(jnp.float32)
+    b2 = ((h >> jnp.uint32(16)) & jnp.uint32(0xFF)).astype(jnp.float32)
+    return (b0 + b1 + b2 - 382.5) * (1.0 / 127.99316)

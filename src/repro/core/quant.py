@@ -1,0 +1,104 @@
+"""CIM numeric-path quantization: 8-bit µ, 4-bit σ, 8-bit IDAC, 6-bit ADC.
+
+Reproduces the paper's split-precision tile arithmetic (§IV):
+  * µ subarray stores signed 8-bit weights (differential FeFET pairs),
+    effective precision 6.54 bits after offset compensation (§III-B1);
+  * σε subarray stores unsigned 4-bit deviations;
+  * inputs enter through 8-bit IDACs;
+  * every 64-deep analog partial sum is digitized by a 6-bit SAR ADC
+    before digital accumulation (the tile is 64×64 — column sums never
+    exceed 64 products in the analog domain).
+
+All quantizers come in straight-through (STE) flavours for QAT.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    mu_bits: int = 8
+    sigma_bits: int = 4
+    input_bits: int = 8
+    adc_bits: int = 6
+    # ADC full-scale as a multiple of the partial-sum RMS (calibrated).
+    adc_clip_sigmas: float = 4.0
+    # Depth of the analog accumulation before ADC digitization.
+    chunk: int = 64
+    enabled: bool = True
+
+
+def symmetric_scale(x: jnp.ndarray, bits: int, axis=None) -> jnp.ndarray:
+    """Max-abs scale so that x/scale fits signed ``bits`` integers."""
+    qmax = 2 ** (bits - 1) - 1
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    return jnp.maximum(amax, 1e-12) / qmax
+
+
+def quantize(x: jnp.ndarray, scale: jnp.ndarray, bits: int, signed: bool = True):
+    """Round-to-nearest integer code."""
+    if signed:
+        lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    else:
+        lo, hi = 0, 2**bits - 1
+    return jnp.clip(jnp.round(x / scale), lo, hi)
+
+
+def fake_quant(x: jnp.ndarray, scale: jnp.ndarray, bits: int, signed: bool = True):
+    return quantize(x, scale, bits, signed) * scale
+
+
+def ste(x: jnp.ndarray, xq: jnp.ndarray) -> jnp.ndarray:
+    """Straight-through estimator: forward xq, backward identity."""
+    return x + jax.lax.stop_gradient(xq - x)
+
+
+def fake_quant_ste(x, scale, bits, signed: bool = True):
+    return ste(x, fake_quant(x, scale, bits, signed))
+
+
+def quantize_mu(mu: jnp.ndarray, cfg: QuantConfig, per_channel: bool = True):
+    """Quantize mean weights (per-output-channel scale). Returns (muq, scale)."""
+    axis = tuple(range(mu.ndim - 1)) if per_channel else None
+    scale = symmetric_scale(mu, cfg.mu_bits, axis=axis)
+    return fake_quant(mu, scale, cfg.mu_bits), scale
+
+
+def quantize_sigma(sigma: jnp.ndarray, cfg: QuantConfig, per_channel: bool = True):
+    """Quantize σ ≥ 0 to unsigned 4-bit codes. Returns (σq, scale)."""
+    axis = tuple(range(sigma.ndim - 1)) if per_channel else None
+    qmax = 2**cfg.sigma_bits - 1
+    amax = jnp.max(sigma, axis=axis, keepdims=axis is not None)
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    return quantize(sigma, scale, cfg.sigma_bits, signed=False) * scale, scale
+
+
+def quantize_input(x: jnp.ndarray, cfg: QuantConfig):
+    """IDAC path: per-tensor symmetric 8-bit."""
+    scale = symmetric_scale(x, cfg.input_bits)
+    return fake_quant(x, scale, cfg.input_bits), scale
+
+
+def adc_quantize(psum: jnp.ndarray, full_scale: jnp.ndarray, cfg: QuantConfig):
+    """6-bit mid-tread ADC on an analog partial sum.
+
+    ``full_scale`` is the calibrated ±range of the bitline swing.  Codes
+    saturate (clip) exactly as a SAR ADC does.
+    """
+    levels = 2 ** (cfg.adc_bits - 1) - 1
+    lsb = full_scale / levels
+    code = jnp.clip(jnp.round(psum / lsb), -levels - 1, levels)
+    return code * lsb
+
+
+def adc_full_scale(x_rms: jnp.ndarray, w_rms: jnp.ndarray, cfg: QuantConfig):
+    """Calibrated ADC range: clip_sigmas × RMS of a 64-product sum.
+
+    For x, w zero-mean independent, Var[Σ_{64} x·w] = 64·σx²·σw².
+    """
+    return cfg.adc_clip_sigmas * jnp.sqrt(float(cfg.chunk)) * x_rms * w_rms

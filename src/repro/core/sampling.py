@@ -1,0 +1,182 @@
+"""Bayesian-head execution modes — where the paper's dataflow meets TPU.
+
+The hardware computes X·µ once and re-reads the σε subarray R times
+(§IV, Fig. 11).  Because the selection lines are *shared* across all
+cells (§III-B), sample r of the head output is an affine function of
+the 16 shared selection bits s_r:
+
+    Y_r = X·µ' + (1/ĝ)·( Σ_j s_r[j] · X·(σ⊙I_j)  −  m̂ · X·σ )
+
+with I_j the fixed virtual current of device j per cell and (m̂, ĝ) the
+standardization constants.  Three execution modes exploit this:
+
+  * ``paper``  — faithful baseline: R explicit σε MVMs, ε materialized
+    per sample.  Cost ≈ (1+R)·MVM.  Matches hardware dataflow.
+  * ``rank16`` — beyond-paper, *mathematically identical* samples: the
+    16 basis MVMs M_j = X·(σ⊙I_j) are precomputed once; any number of
+    samples costs only a [B·N,16]×[16,R] mixing matmul.  R-independent:
+    ≈17·MVM total.  This exploits the rank-16 joint structure the
+    shared selection lines create but the paper never uses.
+  * ``moment`` — analytic mean/variance propagation, 2 MVMs, no
+    sampling.  Diagonal-covariance approximation (ignores the rank-16
+    cross-cell covariance); cheap UQ fallback and ablation.
+
+All functions are pure-jnp oracles; kernels/bayes_mvm.py implements the
+fused versions with the CIM 6-bit-ADC numeric path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import clt_grng as g
+from repro.core import quant as q
+from repro.core.offset import compensate_mu
+
+
+@dataclasses.dataclass(frozen=True)
+class BayesHeadConfig:
+    num_samples: int = 20            # paper R = 20
+    mode: str = "rank16"             # 'paper' | 'rank16' | 'moment'
+    grng: g.GRNGConfig = dataclasses.field(default_factory=g.GRNGConfig)
+    quant: q.QuantConfig = dataclasses.field(
+        default_factory=lambda: q.QuantConfig(enabled=False))
+    compute_dtype: Any = jnp.bfloat16
+
+
+def prepare_serving_head(mu: jnp.ndarray, sigma: jnp.ndarray,
+                         cfg: BayesHeadConfig) -> dict:
+    """One-time deployment transform: offset compensation + quantization.
+
+    mu/sigma: [d_in, d_out] variational parameters (σ already softplus'd).
+    Returns the serving pytree {mu_prime, sigma} in compute dtype.
+    """
+    mu_p = compensate_mu(mu, sigma, cfg.grng, exact=True)
+    if cfg.quant.enabled:
+        mu_p, _ = q.quantize_mu(mu_p, cfg.quant)
+        sigma, _ = q.quantize_sigma(sigma, cfg.quant)
+    return {
+        "mu_prime": mu_p.astype(cfg.compute_dtype),
+        "sigma": sigma.astype(cfg.compute_dtype),
+    }
+
+
+def _sigma_eps_mvm(x, sigma, cfg: BayesHeadConfig, r0: int, num: int,
+                   sel=None):
+    """paper mode inner loop: [R] explicit X·(σ⊙ε_r) MVMs via scan."""
+    k, n = sigma.shape
+    if sel is None:
+        sel = g.selections(cfg.grng, num, r0)  # [R,16] (layer granularity)
+
+    def body(_, sel_r):
+        currents = g.device_currents_grid(cfg.grng, k, n)  # fused by XLA
+        raw = jnp.einsum("knj,j->kn", currents, sel_r)
+        eps_r = ((raw - cfg.grng.sum_mean) / cfg.grng.sum_std).astype(x.dtype)
+        y = x @ (sigma * eps_r)
+        return 0, y
+
+    if cfg.grng.granularity == "layer":
+        _, ys = lax.scan(body, 0, sel)
+        return ys  # [R, B, N]
+    # tile/cell granularities: materialize ε per sample (oracle path).
+    def body2(_, r):
+        eps_r = g.eps(cfg.grng, k, n, 1, r0)[0].astype(x.dtype)
+        return 0, x @ (sigma * eps_r)
+    _, ys = lax.scan(body2, 0, r0 + jnp.arange(num))
+    return ys
+
+
+def logit_samples_paper(head: dict, x: jnp.ndarray, cfg: BayesHeadConfig,
+                        num_samples: int | None = None, sample0: int = 0,
+                        sel=None):
+    """Faithful R-pass sampling. x: [B, K] -> [R, B, N]."""
+    num = num_samples or cfg.num_samples
+    y_mu = x @ head["mu_prime"]
+    ys = _sigma_eps_mvm(x, head["sigma"], cfg, sample0, num, sel)
+    return y_mu[None] + ys
+
+
+def logit_samples_rank16(head: dict, x: jnp.ndarray, cfg: BayesHeadConfig,
+                         num_samples: int | None = None, sample0: int = 0,
+                         sel=None):
+    """Exact rank-16 sampling: 16 basis MVMs + tiny mixing matmul.
+
+    Requires layer-granularity shared selection (the hardware default).
+    Produces samples bit-identical in distribution to ``paper`` mode.
+    """
+    assert cfg.grng.granularity == "layer", "rank16 requires shared selection"
+    num = num_samples or cfg.num_samples
+    kdim, n = head["sigma"].shape
+    sigma = head["sigma"]
+    y_mu = x @ head["mu_prime"]                     # [B, N]
+    x_sigma = x @ sigma                             # [B, N]
+    if sel is None:
+        sel = g.selections(cfg.grng, num, sample0)  # [R, 16]
+    gstd, gmean = cfg.grng.sum_std, cfg.grng.sum_mean
+
+    def basis_mvm(j):
+        rows = jnp.arange(kdim, dtype=jnp.uint32)[:, None]
+        cols = jnp.arange(n, dtype=jnp.uint32)[None, :]
+        from repro.core.hashing import gaussianish, hash3, uniform_bit
+        h = hash3(rows, cols, jnp.uint32(j), cfg.grng.seed)
+        i_j = (cfg.grng.i_lo + cfg.grng.delta_i * uniform_bit(h)
+               + cfg.grng.gamma * gaussianish(h)).astype(x.dtype)
+        return x @ (sigma * i_j)                    # [B, N]
+
+    def body(acc, j):
+        m_j = basis_mvm(j)
+        # acc: [R, B, N] — accumulate each sample's share of basis j.
+        acc = acc + sel[:, j][:, None, None].astype(x.dtype) * m_j[None]
+        return acc, None
+
+    acc0 = jnp.zeros((num,) + y_mu.shape, x.dtype)
+    acc, _ = lax.scan(body, acc0, jnp.arange(16))
+    return y_mu[None] + (acc - gmean * x_sigma[None]) / gstd
+
+
+def logit_moments(head: dict, x: jnp.ndarray, cfg: BayesHeadConfig):
+    """Analytic (mean, variance) of the logits. x: [B,K] -> two [B,N].
+
+    Per-cell ε variance under uniform 8-of-16 subset selection of fixed
+    currents is hypergeometric:
+        Var[ε(k,n)] = k(1−k/n)·(n/(n−1))·var_j(I(k,n,j)) / ĝ²
+    Cross-cell covariance (rank-16, from shared selection) is dropped —
+    documented approximation.
+    """
+    kdim, n = head["sigma"].shape
+    grng = cfg.grng
+    rows = jnp.arange(kdim, dtype=jnp.uint32)[:, None]
+    cols = jnp.arange(n, dtype=jnp.uint32)[None, :]
+    currents = g.device_currents(grng, rows, cols)          # [K,N,16]
+    var_i = currents.var(axis=-1)
+    ksel, nd = grng.k_select, grng.n_devices
+    var_eps = (ksel * (1 - ksel / nd) * (nd / (nd - 1)) * var_i
+               / grng.sum_std**2).astype(x.dtype)
+    mean = x @ head["mu_prime"]
+    var = (x * x) @ ((head["sigma"] ** 2) * var_eps)
+    return mean, var
+
+
+def logit_samples(head: dict, x: jnp.ndarray, cfg: BayesHeadConfig,
+                  num_samples: int | None = None, sample0: int = 0,
+                  key: jax.Array | None = None, sel=None):
+    """Dispatch on cfg.mode. 'moment' draws diagonal-Gaussian samples
+    from the analytic moments (needs ``key``).  ``sel`` [R,16] overrides
+    the selection stream (decode loops with traced positions)."""
+    if cfg.mode == "paper":
+        return logit_samples_paper(head, x, cfg, num_samples, sample0, sel)
+    if cfg.mode == "rank16":
+        return logit_samples_rank16(head, x, cfg, num_samples, sample0, sel)
+    if cfg.mode == "moment":
+        num = num_samples or cfg.num_samples
+        mean, var = logit_moments(head, x, cfg)
+        if key is None:
+            key = jax.random.PRNGKey(sample0)
+        z = jax.random.normal(key, (num,) + mean.shape, dtype=mean.dtype)
+        return mean[None] + jnp.sqrt(jnp.maximum(var, 0.0))[None] * z
+    raise ValueError(cfg.mode)

@@ -1,0 +1,110 @@
+"""Uncertainty quantification metrics (paper §V-B2).
+
+Implements exactly the evaluation protocol of the paper:
+
+  * risk–coverage curves and AURC (Ding et al. [46]) — "risk" is the
+    selective error among retained predictions; coverage is the fraction
+    retained after filtering by confidence,
+  * adaptive-binning calibration errors AECE / AMCE (equal-mass bins,
+    robust to non-uniform confidence distributions),
+  * predictive statistics from Monte-Carlo logit samples: mean
+    probabilities, predictive entropy, mutual information (epistemic
+    share), and max-prob confidence.
+
+All metrics are pure jnp and differentiable where meaningful, so they
+can double as validation-time monitors inside jitted eval steps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def predictive_stats(logit_samples: jnp.ndarray) -> dict:
+    """From [R, B, C] logit samples compute predictive quantities."""
+    logp = jax.nn.log_softmax(logit_samples.astype(jnp.float32), axis=-1)
+    # Mean predictive distribution p̄ = E_r softmax(logits_r).
+    logp_mean = jax.nn.logsumexp(logp, axis=0) - jnp.log(logit_samples.shape[0])
+    p_mean = jnp.exp(logp_mean)
+    pred_entropy = -(p_mean * logp_mean).sum(-1)
+    # Expected entropy of individual samples (aleatoric part).
+    ent_each = -(jnp.exp(logp) * logp).sum(-1)
+    exp_entropy = ent_each.mean(0)
+    return {
+        "probs": p_mean,                          # [B, C]
+        "confidence": p_mean.max(-1),             # [B]
+        "prediction": p_mean.argmax(-1),          # [B]
+        "predictive_entropy": pred_entropy,       # [B] total uncertainty
+        "expected_entropy": exp_entropy,          # [B] aleatoric
+        "mutual_information": pred_entropy - exp_entropy,  # [B] epistemic
+        "logit_std": logit_samples.astype(jnp.float32).std(0).mean(-1),
+    }
+
+
+def risk_coverage_curve(confidence: jnp.ndarray, correct: jnp.ndarray):
+    """Selective risk at every coverage level.
+
+    Returns (coverage [B], risk [B]) where entry i is the risk when
+    keeping the i+1 most confident predictions.
+    """
+    order = jnp.argsort(-confidence)
+    correct_sorted = correct[order].astype(jnp.float32)
+    n = confidence.shape[0]
+    cum_correct = jnp.cumsum(correct_sorted)
+    kept = jnp.arange(1, n + 1, dtype=jnp.float32)
+    coverage = kept / n
+    risk = 1.0 - cum_correct / kept
+    return coverage, risk
+
+
+def aurc(confidence: jnp.ndarray, correct: jnp.ndarray) -> jnp.ndarray:
+    """Area under the risk–coverage curve (lower is better)."""
+    coverage, risk = risk_coverage_curve(confidence, correct)
+    return jnp.trapezoid(risk, coverage)
+
+
+def _adaptive_bins(confidence: jnp.ndarray, n_bins: int):
+    """Equal-mass bin assignment by confidence rank."""
+    n = confidence.shape[0]
+    order = jnp.argsort(confidence)
+    ranks = jnp.argsort(order)
+    return jnp.minimum((ranks * n_bins) // n, n_bins - 1)
+
+
+def adaptive_calibration_errors(confidence: jnp.ndarray, correct: jnp.ndarray,
+                                n_bins: int = 15):
+    """(AECE, AMCE) with equal-mass (adaptive) binning — paper's metric."""
+    bins = _adaptive_bins(confidence, n_bins)
+    correct = correct.astype(jnp.float32)
+    one_hot = jax.nn.one_hot(bins, n_bins, dtype=jnp.float32)  # [B, n_bins]
+    counts = one_hot.sum(0)
+    acc = (one_hot * correct[:, None]).sum(0) / jnp.maximum(counts, 1.0)
+    conf = (one_hot * confidence[:, None]).sum(0) / jnp.maximum(counts, 1.0)
+    gap = jnp.abs(acc - conf)
+    weights = counts / confidence.shape[0]
+    aece = (weights * gap).sum()
+    amce = jnp.max(jnp.where(counts > 0, gap, 0.0))
+    return aece, amce
+
+
+def uq_report(logit_samples: jnp.ndarray, labels: jnp.ndarray,
+              n_bins: int = 15) -> dict:
+    """Full paper-style UQ report from MC logit samples + labels."""
+    stats = predictive_stats(logit_samples)
+    correct = (stats["prediction"] == labels)
+    aece, amce = adaptive_calibration_errors(stats["confidence"], correct, n_bins)
+    return {
+        "accuracy": correct.mean(),
+        "aurc": aurc(stats["confidence"], correct),
+        "aece": aece,
+        "amce": amce,
+        "mean_predictive_entropy": stats["predictive_entropy"].mean(),
+        "mean_mutual_information": stats["mutual_information"].mean(),
+    }
+
+
+def deterministic_report(logits: jnp.ndarray, labels: jnp.ndarray,
+                         n_bins: int = 15) -> dict:
+    """Same report for a deterministic model (CNN baseline)."""
+    return uq_report(logits[None], labels, n_bins)

@@ -1,0 +1,5 @@
+from repro.data.tokens import TokenPipelineConfig, batch_at, batch_iterator
+from repro.data.sard import SardConfig, CORRUPTIONS, corrupted_batch
+
+__all__ = ["TokenPipelineConfig", "batch_at", "batch_iterator",
+           "SardConfig", "CORRUPTIONS", "corrupted_batch"]

@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: deterministic CIM MVM (µ-only subarray, paper §V-B1).
+
+The paper maps all deterministic layers onto µ-only subarrays via
+im2col.  The numeric path is: 8-bit weights/inputs, analog 64-product
+column sums, 6-bit SAR ADC per chunk, digital accumulation.  This
+kernel reproduces that inside a 128-aligned blocked matmul: each k-block
+contains bk/64 ADC chunks that are digitized *before* joining the
+VMEM accumulator.
+
+Inputs are pre-(fake)quantized dequant values; the ADC full-scale is a
+runtime scalar (calibrated from activation/weight RMS on the host).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.quant import QuantConfig
+
+
+def _cim_kernel(x_ref, w_ref, fs_ref, o_ref, acc_ref, *,
+                qcfg: QuantConfig, bk: int):
+    kstep = pl.program_id(2)
+
+    @pl.when(kstep == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    fs = fs_ref[0, 0]
+    levels = 2 ** (qcfg.adc_bits - 1) - 1
+    lsb = fs / levels
+
+    for c0 in range(0, bk, qcfg.chunk):      # analog chunks, unrolled
+        psum = jnp.dot(x[:, c0:c0 + qcfg.chunk], w[c0:c0 + qcfg.chunk],
+                       preferred_element_type=jnp.float32)
+        code = jnp.clip(jnp.round(psum / lsb), -levels - 1, levels)
+        acc_ref[...] += code * lsb
+
+    @pl.when(kstep == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("qcfg", "bb", "bk", "bn",
+                                             "interpret"))
+def cim_mvm_pallas(x, w, fs, qcfg: QuantConfig,
+                   bb: int = 128, bk: int = 128, bn: int = 128,
+                   interpret: bool = True):
+    """Chunked-ADC MVM. x:[B,K], w:[K,N], fs:[1,1] -> [B,N] float32.
+
+    K must be a multiple of qcfg.chunk (the physical tile depth); B and N
+    are zero-padded to block multiples.  Zero pads are ADC-safe: a zero
+    partial sum quantizes to code 0.
+    """
+    b, kdim = x.shape
+    n = w.shape[1]
+    assert kdim % qcfg.chunk == 0, "K must be chunk-aligned (tile depth)"
+    assert bk % qcfg.chunk == 0
+    pb, pk, pn = (-b) % bb, (-kdim) % bk, (-n) % bn
+    xp = jnp.pad(x, ((0, pb), (0, pk)))
+    wp = jnp.pad(w, ((0, pk), (0, pn)))
+    bp, kp = xp.shape
+    np_ = wp.shape[1]
+    out = pl.pallas_call(
+        functools.partial(_cim_kernel, qcfg=qcfg, bk=bk),
+        grid=(bp // bb, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bb, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bp, np_), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bb, bn), jnp.float32)],
+        interpret=interpret,
+    )(xp, wp, fs)
+    return out[:b, :n]

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: block CLT-GRNG ε generation.
+
+Generates the standardized subset-sum samples ε[r, k, n] for a weight
+block entirely on-chip: virtual device currents are re-derived from the
+integer hash of the (row, col, device) coordinate (write-free — zero
+HBM traffic for randomness), masked by the shared selection vectors and
+summed.  The only HBM input is the [R, 16] selection table (64·R bytes);
+the output block never round-trips intermediate state.
+
+VMEM budget per grid step (defaults bK=bN=256, R≤32):
+  out block  R·256·256·4  ≤ 8 MB @ R=32  (use bK=bN=128 for large R)
+  hash temporaries 256·256·4 ≈ 0.25 MB ×3
+Matmul-free: the j-loop is 16 unrolled fused multiply-adds on the VPU.
+MXU alignment: block dims are multiples of 128 on the minor axis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.clt_grng import GRNGConfig
+
+_C1 = 0x9E3779B9
+_C2 = 0x85EBCA6B
+_C3 = 0xC2B2AE35
+
+
+def _mix32(x):
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _hash3(k, n, j: int, seed: int):
+    # Explicit uint32 coercion: program_id-derived indices arrive as
+    # int32, and int32 hash arithmetic diverges (arithmetic >> shifts).
+    k = k.astype(jnp.uint32)
+    n = n.astype(jnp.uint32)
+    h = _mix32(jnp.uint32(j) * jnp.uint32(_C3) + jnp.uint32(seed))
+    h = _mix32(n * jnp.uint32(_C2) + h)
+    h = _mix32(k * jnp.uint32(_C1) + h)
+    return h
+
+
+def _device_current(rows, cols, j: int, cfg: GRNGConfig):
+    """Virtual device current I(k, n, j) for a coordinate block."""
+    h = _hash3(rows, cols, j, cfg.seed)
+    bit = ((h >> jnp.uint32(31)) & jnp.uint32(1)).astype(jnp.float32)
+    b0 = (h & jnp.uint32(0xFF)).astype(jnp.float32)
+    b1 = ((h >> jnp.uint32(8)) & jnp.uint32(0xFF)).astype(jnp.float32)
+    b2 = ((h >> jnp.uint32(16)) & jnp.uint32(0xFF)).astype(jnp.float32)
+    gauss = (b0 + b1 + b2 - 382.5) * (1.0 / 127.99316)
+    return cfg.i_lo + cfg.delta_i * bit + cfg.gamma * gauss
+
+
+def _grng_kernel(sel_ref, out_ref, *, cfg: GRNGConfig, bk: int, bn: int,
+                 row0: int, col0: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    rows = (jnp.uint32(row0) + i * bk
+            + jax.lax.broadcasted_iota(jnp.uint32, (bk, bn), 0))
+    cols = (jnp.uint32(col0) + j * bn
+            + jax.lax.broadcasted_iota(jnp.uint32, (bk, bn), 1))
+    sel = sel_ref[...]                       # [R, 16]
+    r = sel.shape[0]
+    raw = jnp.zeros((r, bk, bn), jnp.float32)
+    for d in range(cfg.n_devices):           # 16, unrolled
+        i_d = _device_current(rows, cols, d, cfg)          # [bk, bn]
+        raw = raw + sel[:, d][:, None, None] * i_d[None]
+    out_ref[...] = (raw - cfg.sum_mean) * (1.0 / cfg.sum_std)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "cfg", "n_rows", "n_cols", "row0", "col0", "bk", "bn", "interpret"))
+def grng_eps_pallas(sel: jnp.ndarray, cfg: GRNGConfig, n_rows: int,
+                    n_cols: int, row0: int = 0, col0: int = 0,
+                    bk: int = 256, bn: int = 256,
+                    interpret: bool = True) -> jnp.ndarray:
+    """ε block via Pallas. sel: [R, 16] float32 -> [R, n_rows, n_cols]."""
+    r = sel.shape[0]
+    pad_k = (-n_rows) % bk
+    pad_n = (-n_cols) % bn
+    kp, np_ = n_rows + pad_k, n_cols + pad_n
+    out = pl.pallas_call(
+        functools.partial(_grng_kernel, cfg=cfg, bk=bk, bn=bn,
+                          row0=row0, col0=col0),
+        grid=(kp // bk, np_ // bn),
+        in_specs=[pl.BlockSpec((r, 16), lambda i, j: (0, 0))],
+        out_specs=pl.BlockSpec((r, bk, bn), lambda i, j: (0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, kp, np_), jnp.float32),
+        interpret=interpret,
+    )(sel)
+    return out[:, :n_rows, :n_cols]

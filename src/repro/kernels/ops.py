@@ -1,0 +1,86 @@
+"""Public jit'd entry points for the kernels package.
+
+These wrappers own host-side concerns: selection-table generation,
+ADC full-scale calibration, dtype plumbing, and the interpret-mode
+default (interpret=True unless running on real TPU).  They are the
+drop-in counterparts of the pure-jnp paths in core/sampling.py and
+core/cim.py, asserted allclose in tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import clt_grng as g
+from repro.core.quant import QuantConfig, adc_full_scale
+from repro.kernels.bayes_mvm import bayes_mvm_pallas
+from repro.kernels.cim_mvm import cim_mvm_pallas
+from repro.kernels.clt_grng_kernel import grng_eps_pallas
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def grng_eps(cfg: g.GRNGConfig, n_rows: int, n_cols: int, num_samples: int,
+             sample0: int = 0, row0: int = 0, col0: int = 0,
+             interpret: bool | None = None) -> jnp.ndarray:
+    """CLT-GRNG ε block via the Pallas kernel. -> [R, n_rows, n_cols]."""
+    sel = g.selections(cfg, num_samples, sample0)
+    bk = min(256, max(128, n_rows))
+    bn = min(256, max(128, n_cols))
+    return grng_eps_pallas(
+        sel, cfg, n_rows, n_cols, row0=row0, col0=col0, bk=bk, bn=bn,
+        interpret=_interpret_default() if interpret is None else interpret)
+
+
+def bayes_head_mvm(x: jnp.ndarray, mu_prime: jnp.ndarray, sigma: jnp.ndarray,
+                   cfg: g.GRNGConfig, num_samples: int, sample0: int = 0,
+                   mode: str = "rank16", qcfg: QuantConfig | None = None,
+                   row0: int = 0, col0: int = 0,
+                   interpret: bool | None = None) -> jnp.ndarray:
+    """Fused Bayesian head: [R, B, N] logit samples.
+
+    mode='rank16'  — R-independent fast path (exact distribution).
+    mode='paper'   — faithful per-sample path; pass qcfg to enable the
+                     6-bit chunked-ADC numeric pipeline.
+    """
+    sel = g.selections(cfg, num_samples, sample0)
+    if qcfg is not None and not qcfg.enabled:
+        qcfg = None
+    if qcfg is not None:
+        assert mode == "paper", "ADC path requires hardware sample order"
+        x_rms = jnp.sqrt(jnp.mean(x.astype(jnp.float32) ** 2) + 1e-12)
+        mu_rms = jnp.sqrt(jnp.mean(mu_prime.astype(jnp.float32) ** 2) + 1e-12)
+        # σε RMS: Var[σ·ε] ≈ E[σ²] for standardized ε.
+        se_rms = jnp.sqrt(jnp.mean(sigma.astype(jnp.float32) ** 2) + 1e-12)
+        fs = jnp.stack([adc_full_scale(x_rms, mu_rms, qcfg),
+                        adc_full_scale(x_rms, se_rms, qcfg)]).reshape(1, 2)
+    else:
+        fs = jnp.zeros((1, 2), jnp.float32)
+    return bayes_mvm_pallas(
+        x, mu_prime, sigma, sel, fs, cfg, qcfg=qcfg, mode=mode,
+        row0=row0, col0=col0,
+        interpret=_interpret_default() if interpret is None else interpret)
+
+
+def _measured_full_scale(x, w, qcfg: QuantConfig):
+    """One-time ADC range calibration from measured partial-sum RMS
+    (sampled rows for cost) — see core/cim.py for why the analytic
+    independence model under-scales."""
+    xs = x[: min(16, x.shape[0])].astype(jnp.float32)
+    kc = x.shape[1] // qcfg.chunk
+    xb = xs.reshape(xs.shape[0], kc, qcfg.chunk)
+    wb = w.astype(jnp.float32).reshape(kc, qcfg.chunk, w.shape[1])
+    ps = jnp.einsum("bkc,kcn->bkn", xb, wb)
+    return qcfg.adc_clip_sigmas * jnp.sqrt(jnp.mean(ps ** 2) + 1e-12)
+
+
+def cim_matmul(x: jnp.ndarray, w: jnp.ndarray, qcfg: QuantConfig,
+               interpret: bool | None = None) -> jnp.ndarray:
+    """Deterministic chunked-ADC CIM matmul (µ-only subarray)."""
+    fs = _measured_full_scale(x, w, qcfg).reshape(1, 1)
+    return cim_mvm_pallas(
+        x, w, fs, qcfg,
+        interpret=_interpret_default() if interpret is None else interpret)

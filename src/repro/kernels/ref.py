@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function computes *bit-equivalent semantics* to its kernel
+counterpart (same hash, same selection network, same ADC order of
+operations) with no blocking — the ground truth for the per-kernel
+allclose sweeps in tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import clt_grng as g
+from repro.core import quant as q
+from repro.core.hashing import gaussianish, hash3, uniform_bit
+from repro.core.lfsr import swapper_select, lfsr_states
+
+
+def grng_eps_ref(cfg: g.GRNGConfig, n_rows: int, n_cols: int,
+                 num_samples: int, sample0: int = 0,
+                 row0: int = 0, col0: int = 0) -> jnp.ndarray:
+    """ε block oracle -> [R, n_rows, n_cols] float32 (layer granularity)."""
+    return g.eps(cfg, n_rows, n_cols, num_samples, sample0, row0, col0)
+
+
+def _currents_j(cfg: g.GRNGConfig, rows, cols, j) -> jnp.ndarray:
+    h = hash3(rows, cols, jnp.uint32(j), cfg.seed)
+    return cfg.i_lo + cfg.delta_i * uniform_bit(h) + cfg.gamma * gaussianish(h)
+
+
+def bayes_mvm_ref(x: jnp.ndarray, mu: jnp.ndarray, sigma: jnp.ndarray,
+                  cfg: g.GRNGConfig, num_samples: int, sample0: int = 0,
+                  row0: int = 0, col0: int = 0) -> jnp.ndarray:
+    """Fused Bayesian MVM oracle (no ADC): [R, B, N] float32.
+
+    out[r] = x @ (mu + sigma * eps_r) with layer-shared selection.
+    """
+    kdim, n = mu.shape
+    x = x.astype(jnp.float32)
+    mu = mu.astype(jnp.float32)
+    sigma = sigma.astype(jnp.float32)
+    eps = grng_eps_ref(cfg, kdim, n, num_samples, sample0, row0, col0)
+    w = mu[None] + sigma[None] * eps               # [R, K, N]
+    return jnp.einsum("bk,rkn->rbn", x, w)
+
+
+def bayes_mvm_adc_ref(x: jnp.ndarray, mu: jnp.ndarray, sigma: jnp.ndarray,
+                      cfg: g.GRNGConfig, qcfg: q.QuantConfig,
+                      num_samples: int, sample0: int = 0,
+                      row0: int = 0, col0: int = 0) -> jnp.ndarray:
+    """CIM numeric-path oracle: per-sample σε MVM with 64-deep 6-bit ADC.
+
+    Hardware order of operations (paper §IV-A): for each sample r the
+    µ partial sums and the σε partial sums are *separately* digitized
+    per 64-row chunk, then accumulated digitally.
+    """
+    b, kdim = x.shape
+    _, n = mu.shape
+    chunk = qcfg.chunk
+    assert kdim % chunk == 0, "oracle expects chunk-aligned K"
+    kc = kdim // chunk
+    x32 = x.astype(jnp.float32)
+    eps = grng_eps_ref(cfg, kdim, n, num_samples, sample0, row0, col0)
+
+    xb = x32.reshape(b, kc, chunk)
+    mub = mu.astype(jnp.float32).reshape(kc, chunk, n)
+    x_rms = jnp.sqrt(jnp.mean(x32**2) + 1e-12)
+    fs_mu = q.adc_full_scale(x_rms, jnp.sqrt(jnp.mean(mu.astype(jnp.float32)**2) + 1e-12), qcfg)
+    psum_mu = jnp.einsum("bkc,kcn->bkn", xb, mub)
+    y_mu = q.adc_quantize(psum_mu, fs_mu, qcfg).sum(axis=1)   # [B, N]
+
+    se = sigma.astype(jnp.float32)[None] * eps                 # [R, K, N]
+    seb = se.reshape(num_samples, kc, chunk, n)
+    # Host calibration uses rms(σ) (E[ε²]=1), matching kernels/ops.py.
+    fs_se = q.adc_full_scale(
+        x_rms, jnp.sqrt(jnp.mean(sigma.astype(jnp.float32)**2) + 1e-12), qcfg)
+    psum_se = jnp.einsum("bkc,rkcn->rbkn", xb, seb)
+    y_se = q.adc_quantize(psum_se, fs_se, qcfg).sum(axis=2)    # [R, B, N]
+    return y_mu[None] + y_se
+
+
+def cim_mvm_ref(x: jnp.ndarray, w: jnp.ndarray, qcfg: q.QuantConfig,
+                fs: jnp.ndarray | float) -> jnp.ndarray:
+    """Deterministic chunked-ADC MVM oracle with explicit full scale."""
+    b, kdim = x.shape
+    chunk = qcfg.chunk
+    assert kdim % chunk == 0
+    kc = kdim // chunk
+    xb = x.astype(jnp.float32).reshape(b, kc, chunk)
+    wb = w.astype(jnp.float32).reshape(kc, chunk, w.shape[1])
+    psum = jnp.einsum("bkc,kcn->bkn", xb, wb)
+    return q.adc_quantize(psum, fs, qcfg).sum(axis=1)
+
+
+def selections_ref(lfsr_seed: int, num_samples: int, sample0: int = 0):
+    states = lfsr_states(lfsr_seed, sample0 + num_samples)
+    return swapper_select(states[sample0:])

@@ -1,0 +1,418 @@
+"""Loop-aware cost analysis of post-SPMD HLO.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, no
+matter the trip count — useless for scan-over-layers programs where >95%
+of FLOPs live inside loops (verified: scan L=2 and L=8 report identical
+flops).  This module re-derives the three roofline inputs by walking the
+HLO text with loop multiplicity:
+
+  * flops            — 2·M·N·K for every dot (incl. inside fusions),
+                       × the product of enclosing while trip counts;
+  * hbm bytes        — 2 × result bytes of every materializing
+                       instruction (each post-fusion instruction ≈ one
+                       kernel; its result is written once and read once
+                       by consumers; dynamic-slice results count at
+                       their sliced size, so scanned weight reads are
+                       not overcounted), × trips;
+  * collective bytes — ring-model wire bytes per collective op, × trips.
+
+Trip counts come from each while's condition computation (largest
+``s32[] constant(N)`` ⇒ N).  Conditionals take the max over branches.
+Static model, assumes loop-invariant shapes (true for lax.scan);
+validated against analytic FLOPs in tests/test_hlo_analysis.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1}
+
+_SHAPE_RE = re.compile(r"\b(\w+)\[([\d,]*)\](?:\{[^}]*\})?")
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_OP_RE = re.compile(r"=\s*(?:\([^=]*?\)|\S+)\s+([\w\-]+)\(")
+_OPERANDS_RE = re.compile(r"%([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_ZERO_COST = {"parameter", "constant", "get-tuple-element", "tuple",
+              "bitcast", "after-all", "partition-id", "replica-id", "iota",
+              "tuple-select"}
+
+
+def _strip_meta(line: str) -> str:
+    for marker in (", metadata=", ", backend_config=", ", frontend_attributes="):
+        idx = line.find(marker)
+        if idx >= 0:
+            line = line[:idx]
+    return line
+
+
+def _shapes_in(text: str):
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+        out.append((dt, dims))
+    return out
+
+
+def _bytes_of(shapes) -> float:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return float(total)
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict = dataclasses.field(default_factory=dict)
+
+    def scaled(self, k: float) -> "Costs":
+        coll = {op: {kk: vv * k for kk, vv in rec.items()}
+                for op, rec in self.coll.items()}
+        return Costs(self.flops * k, self.bytes * k, coll)
+
+    def add(self, other: "Costs") -> None:
+        self.flops += other.flops
+        self.bytes += other.bytes
+        for op, rec in other.coll.items():
+            mine = self.coll.setdefault(
+                op, {"count": 0.0, "wire_bytes": 0.0, "payload_bytes": 0.0,
+                     "wire_bytes_tpu": 0.0, "wire_bytes_f32": 0.0})
+            for k, v in rec.items():
+                mine[k] += v
+
+
+class HloAnalyzer:
+    def __init__(self, hlo_text: str, total_devices: int):
+        self.devices = total_devices
+        self.comps: dict[str, list[str]] = {}
+        self.entry: str | None = None
+        self._split(hlo_text)
+        self._memo: dict[str, Costs] = {}
+        # per-computation symbol tables: name -> shapes list
+        self._symtabs: dict[str, dict[str, list]] = {}
+
+    # -- parsing --------------------------------------------------------
+    def _split(self, text: str) -> None:
+        cur = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            stripped = line.strip()
+            if cur is None:
+                is_hdr = (stripped.startswith("ENTRY") or
+                          (stripped.startswith("%") and "->" in stripped
+                           and stripped.endswith("{")))
+                if is_hdr:
+                    name_m = re.match(r"(?:ENTRY\s+)?%([\w\.\-]+)", stripped)
+                    if name_m:
+                        cur = name_m.group(1)
+                        self.comps[cur] = []
+                        if stripped.startswith("ENTRY"):
+                            self.entry = cur
+                continue
+            if stripped == "}":
+                cur = None
+                continue
+            if stripped:
+                self.comps[cur].append(_strip_meta(stripped))
+
+    def _symtab(self, comp: str) -> dict:
+        if comp in self._symtabs:
+            return self._symtabs[comp]
+        tab: dict[str, list] = {}
+        for line in self.comps.get(comp, []):
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            rhs = m.group(2)
+            # result type is everything before the op name's '('
+            head = rhs.split("(", 1)[0]
+            # for "(tuple) op" results the shapes live in the tuple text
+            tab[m.group(1)] = _shapes_in(rhs[:rhs.find(head.split()[-1])]
+                                         if head else rhs) or _shapes_in(rhs)
+        self._symtabs[comp] = tab
+        return tab
+
+    @staticmethod
+    def _result_shapes(line: str) -> list:
+        m = _DEF_RE.match(line)
+        if not m:
+            return []
+        rhs = m.group(2)
+        # result type = prefix of rhs up to the op name token
+        # e.g. "f32[32,128]{1,0} dot(%a, %b), ..." or "(f32[..], f32[..]) tuple(...)"
+        idx = rhs.find("(")
+        if rhs.startswith("("):
+            # tuple type: find matching close paren
+            depth = 0
+            for i, ch in enumerate(rhs):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        return _shapes_in(rhs[:i + 1])
+            return _shapes_in(rhs)
+        head = rhs[:idx] if idx >= 0 else rhs
+        # strip trailing op name token
+        parts = head.rsplit(None, 1)
+        return _shapes_in(parts[0] if len(parts) == 2 else head)
+
+    @staticmethod
+    def _op_name(line: str) -> str:
+        m = _DEF_RE.match(line)
+        if not m:
+            return ""
+        rhs = m.group(2)
+        idx = rhs.find("(")
+        if idx < 0:
+            return ""
+        head = rhs[:idx]
+        if rhs.startswith("("):
+            depth = 0
+            for i, ch in enumerate(rhs):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        rest = rhs[i + 1:].strip()
+                        return rest.split("(", 1)[0].strip()
+            return ""
+        return head.rsplit(None, 1)[-1] if head.strip() else ""
+
+    @staticmethod
+    def _operand_names(line: str) -> list[str]:
+        m = _DEF_RE.match(line)
+        if not m:
+            return []
+        rhs = m.group(2)
+        op = HloAnalyzer._op_name(line)
+        idx = rhs.find(op + "(")
+        if idx < 0:
+            return []
+        args = rhs[idx + len(op) + 1:]
+        depth = 1
+        end = 0
+        for i, ch in enumerate(args):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        return _OPERANDS_RE.findall(args[:end])
+
+    def _trip_count(self, cond_name: str) -> float:
+        consts = [int(m.group(1)) for l in self.comps.get(cond_name, [])
+                  for m in _CONST_RE.finditer(l)]
+        return float(max(consts)) if consts else 1.0
+
+    def _dot_flops(self, line: str, comp: str) -> float:
+        result = self._result_shapes(line)
+        if not result:
+            return 0.0
+        tab = self._symtab(comp)
+        opnames = self._operand_names(line)
+        lhs = tab.get(opnames[0], result) if opnames else result
+        lhs_dims = lhs[0][1] if lhs else []
+        m = _CONTRACT_RE.search(line)
+        k = 1
+        if m and m.group(1):
+            for idx in m.group(1).split(","):
+                d = int(idx)
+                if d < len(lhs_dims):
+                    k *= lhs_dims[d]
+        n_out = 1
+        for d in result[0][1]:
+            n_out *= d
+        return 2.0 * n_out * k
+
+    def _io_bytes(self, line: str, comp: str) -> float:
+        # write-once/read-once model: result bytes, doubled in analyze()
+        return _bytes_of(self._result_shapes(line))
+
+    def _dus_update_bytes(self, callee: str) -> float | None:
+        """If the fused computation performs dynamic-update-slice(s),
+        only the update slice moves through HBM (XLA updates in place;
+        counting the full buffer would overcount by the trip count).
+        Returns the summed update bytes, or None if no DUS present."""
+        tab = self._symtab(callee)
+        total = 0.0
+        found = False
+        for line in self.comps.get(callee, []):
+            if self._op_name(line) != "dynamic-update-slice":
+                continue
+            found = True
+            ops = self._operand_names(line)
+            if len(ops) >= 2:
+                total += _bytes_of(tab.get(ops[1], []))
+        return total if found else None
+
+    def _is_promoted_bf16(self, operand: str, comp: str) -> bool:
+        """XLA CPU's reduction promotion rewrites bf16 collectives as
+        convert(bf16→f32) → collective(f32) → convert(→bf16) — verified
+        by probing an explicit bf16 psum.  On the TPU target the wire
+        payload is bf16; detect the signature so the roofline can report
+        the TPU-adjusted collective term."""
+        for l in self.comps.get(comp, []):
+            m = _DEF_RE.match(l)
+            if not m or m.group(1) != operand:
+                continue
+            if "convert" not in l:
+                return False
+            mc = _CALLS_RE.search(l)
+            if mc:
+                callee = self.comps.get(mc.group(1), [])
+                return any("bf16[" in cl and "parameter(" in cl
+                           for cl in callee)
+            ops = self._operand_names(l)
+            tab = self._symtab(comp)
+            return any(sh[0] == "bf16" for n in ops for sh in tab.get(n, []))
+        return False
+
+    def _collective(self, line: str, op: str, comp: str) -> dict:
+        tab = self._symtab(comp)
+        res = _bytes_of(self._result_shapes(line))
+        opd = sum(_bytes_of(tab.get(n, []))
+                  for n in self._operand_names(line))
+        size = max(res, opd)
+        opnames = self._operand_names(line)
+        promoted = bool(opnames) and all(
+            self._is_promoted_bf16(n, comp) for n in opnames)
+        g = self.devices
+        m = _GROUPS_LIST_RE.search(line)
+        if m:
+            g = len(m.group(1).split(","))
+        else:
+            m = _GROUPS_IOTA_RE.search(line)
+            if m:
+                g = int(m.group(2))
+        if g <= 1:
+            wire = 0.0
+        elif op == "all-reduce":
+            wire = 2.0 * (g - 1) / g * size
+        elif op == "collective-permute":
+            wire = float(size)
+        else:
+            wire = (g - 1) / g * size
+        shapes = self._result_shapes(line) or [("f32", [])]
+        is_f32 = shapes[0][0] == "f32"
+        return {"count": 1.0, "wire_bytes": wire, "payload_bytes": float(size),
+                "wire_bytes_tpu": wire / 2.0 if promoted else wire,
+                "wire_bytes_f32": wire if is_f32 else 0.0}
+
+    # -- cost walk ------------------------------------------------------
+    def comp_costs(self, name: str) -> Costs:
+        if name in self._memo:
+            return self._memo[name]
+        total = Costs()
+        self._memo[name] = total  # cycle guard
+        for line in self.comps.get(name, []):
+            op = self._op_name(line)
+            if not op:
+                continue
+            if op == "while":
+                body = _BODY_RE.search(line)
+                cond = _COND_RE.search(line)
+                trips = self._trip_count(cond.group(1)) if cond else 1.0
+                if body:
+                    total.add(self.comp_costs(body.group(1)).scaled(trips))
+                continue
+            mb = _BRANCHES_RE.search(line)
+            if mb:
+                branch_costs = [self.comp_costs(b.strip().lstrip("%"))
+                                for b in mb.group(1).split(",")]
+                if branch_costs:
+                    total.add(max(branch_costs,
+                                  key=lambda c: c.flops + c.bytes))
+                continue
+            base_op = op[:-6] if op.endswith("-start") else op
+            if base_op in _COLLECTIVES:
+                rec = self._collective(line, base_op, name)
+                mine = total.coll.setdefault(
+                    base_op, {"count": 0.0, "wire_bytes": 0.0,
+                              "payload_bytes": 0.0, "wire_bytes_tpu": 0.0,
+                              "wire_bytes_f32": 0.0})
+                for k, v in rec.items():
+                    mine[k] += v
+                total.bytes += _bytes_of(self._result_shapes(line))
+                continue
+            if op.endswith("-done"):
+                continue
+            mc = _CALLS_RE.search(line)
+            if mc or op in ("fusion", "call"):
+                callee = mc.group(1) if mc else None
+                dus = None
+                if callee:
+                    inner = self.comp_costs(callee)
+                    total.flops += inner.flops
+                    for cop, rec in inner.coll.items():
+                        mine = total.coll.setdefault(
+                            cop, {"count": 0.0, "wire_bytes": 0.0,
+                                  "payload_bytes": 0.0,
+                                  "wire_bytes_tpu": 0.0,
+                                  "wire_bytes_f32": 0.0})
+                        for k, v in rec.items():
+                            mine[k] += v
+                    dus = self._dus_update_bytes(callee)
+                total.bytes += dus if dus is not None else self._io_bytes(
+                    line, name)
+                continue
+            if op == "dynamic-update-slice":
+                ops_ = self._operand_names(line)
+                tab = self._symtab(name)
+                total.bytes += (_bytes_of(tab.get(ops_[1], []))
+                                if len(ops_) >= 2 else
+                                self._io_bytes(line, name))
+                continue
+            if op == "dot":
+                total.flops += self._dot_flops(line, name)
+                total.bytes += self._io_bytes(line, name)
+                continue
+            if op in _ZERO_COST:
+                continue
+            total.bytes += self._io_bytes(line, name)
+        self._memo[name] = total
+        return total
+
+    def entry_costs(self) -> Costs:
+        assert self.entry, "no ENTRY computation found"
+        return self.comp_costs(self.entry)
+
+
+def analyze(hlo_text: str, total_devices: int) -> dict:
+    """Loop-aware per-device costs of a post-SPMD HLO module."""
+    an = HloAnalyzer(hlo_text, total_devices)
+    c = an.entry_costs()
+    return {
+        "flops_per_device": c.flops,
+        "hbm_bytes_per_device": 2.0 * c.bytes,
+        "collectives": c.coll,
+        "wire_bytes_per_device": sum(r["wire_bytes"] for r in c.coll.values()),
+        "wire_bytes_per_device_tpu": sum(
+            r.get("wire_bytes_tpu", r["wire_bytes"]) for r in c.coll.values()),
+        "wire_bytes_f32_per_device": sum(
+            r.get("wire_bytes_f32", 0.0) for r in c.coll.values()),
+    }

@@ -1,0 +1,251 @@
+"""Distributed step builders: train / prefill / decode with shardings.
+
+These produce the jitted callables used by both the real launcher
+(train.py / serve.py) and the multi-pod dry-run (dryrun.py).  All
+abstract-shape plumbing lives here so the dry-run lowers *exactly* the
+functions the launcher executes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.registry import get_api
+from repro.models.transformer import ModelConfig
+from repro.optim import AdamWConfig, adamw_update, init_opt_state, warmup_cosine
+from repro.sharding import specs as S
+
+
+# ----------------------------------------------------------------------
+# Abstract inputs (ShapeDtypeStruct stand-ins — never allocated)
+# ----------------------------------------------------------------------
+def shape_adjusted_config(cfg: ModelConfig, seq_len: int) -> ModelConfig:
+    """Per-cell config tweaks: size learned-pos tables to the cell."""
+    if cfg.learned_pos and cfg.learned_pos < seq_len + 1:
+        cfg = dataclasses.replace(cfg, learned_pos=seq_len + 1)
+    return cfg
+
+
+def mesh_hinted_config(cfg: ModelConfig, mesh: Mesh,
+                       global_batch: int) -> ModelConfig:
+    """Inject activation-sharding hints: DP axes that divide the batch
+    and the model-axis size (for divisibility-guarded constraints)."""
+    dp = S.dp_axes(mesh)
+    size = 1
+    for a in dp:
+        size *= mesh.shape[a]
+    if global_batch % size != 0:
+        dp = ("data",) if global_batch % mesh.shape["data"] == 0 else ()
+    return dataclasses.replace(cfg, batch_axes=tuple(dp),
+                               model_axis_size=mesh.shape["model"])
+
+
+def input_specs(cfg: ModelConfig, seq_len: int, global_batch: int,
+                kind: str) -> dict:
+    """Abstract model inputs for one (arch × shape) cell."""
+    b, s = global_batch, seq_len
+    sds = jax.ShapeDtypeStruct
+    if kind == "train":
+        batch = {"tokens": sds((b, s), jnp.int32),
+                 "labels": sds((b, s), jnp.int32)}
+    elif kind == "prefill":
+        batch = {"tokens": sds((b, s), jnp.int32)}
+    elif kind == "decode":
+        batch = {"tokens": sds((b, 1), jnp.int32)}
+    else:
+        raise ValueError(kind)
+    if cfg.family == "audio":
+        batch["frames"] = sds((b, cfg.n_frames, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["image_embeds"] = sds((b, cfg.n_image_tokens, cfg.d_model),
+                                    jnp.bfloat16)
+    return batch
+
+
+def abstract_params(cfg: ModelConfig, dtype=None):
+    api = get_api(cfg)
+    tree = jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0), cfg))
+    if dtype is not None:
+        tree = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, dtype)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+    return tree
+
+
+def abstract_cache(cfg: ModelConfig, seq_len: int, global_batch: int,
+                   serve_dtype=jnp.bfloat16):
+    """Abstract KV/SSM cache as produced by prefill at this shape."""
+    api = get_api(cfg)
+    params = abstract_params(cfg, serve_dtype)
+    batch = input_specs(cfg, seq_len, global_batch, "prefill")
+    extras = {k: v for k, v in batch.items() if k != "tokens"}
+    # Lower-cost abstract prefill: sequence length 2·chunk is enough to
+    # infer cache shapes when cache_len is passed explicitly.
+    cache, _ = jax.eval_shape(
+        partial(api.prefill, cfg=cfg, cache_len=seq_len),
+        params, batch["tokens"], **extras)
+    return cache
+
+
+# ----------------------------------------------------------------------
+# Train step
+# ----------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    total_steps: int = 10000, warmup_steps: int = 200,
+                    microbatches: int = 1):
+    """§Perf I3: ``microbatches`` > 1 runs gradient accumulation — the
+    activation peak shrinks ~k× (each microbatch's remat residuals are
+    freed before the next) at the cost of re-gathering weights per
+    microbatch."""
+    api = get_api(cfg)
+
+    def grads_of(params, batch, step):
+        def loss_fn(p):
+            return api.train_loss(p, batch, cfg, step=step)
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        step = opt_state["count"]
+        if microbatches == 1:
+            (loss, metrics), grads = grads_of(params, batch, step)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape(microbatches,
+                                    x.shape[0] // microbatches,
+                                    *x.shape[1:]), batch)
+            acc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def mb_body(acc, mbatch):
+                acc_g, acc_loss, _ = acc
+                (loss, metrics), g = grads_of(params, mbatch, step)
+                metrics = jax.tree.map(
+                    lambda m: m.astype(jnp.float32), metrics)
+                acc_g = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), acc_g, g)
+                return (acc_g, acc_loss + loss.astype(jnp.float32),
+                        metrics), None
+
+            (grads, loss_sum, metrics), _ = jax.lax.scan(
+                mb_body, (acc0, jnp.zeros((), jnp.float32),
+                          {"ce": jnp.zeros(()), "kl": jnp.zeros(()),
+                           "aux": jnp.zeros(())}), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+        lr_scale = warmup_cosine(step, warmup_steps=warmup_steps,
+                                 total_steps=total_steps)
+        params, opt_state, opt_metrics = adamw_update(
+            params, grads, opt_state, opt_cfg, lr_scale)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def jit_train_step(cfg: ModelConfig, mesh: Mesh, opt_cfg: AdamWConfig,
+                   seq_len: int, global_batch: int, **kw):
+    """AOT-ready jitted train step + abstract (params, opt, batch)."""
+    cfg = shape_adjusted_config(cfg, seq_len)
+    cfg = mesh_hinted_config(cfg, mesh, global_batch)
+    step_fn = make_train_step(cfg, opt_cfg, **kw)
+    aparams = abstract_params(
+        cfg, jnp.bfloat16 if opt_cfg.master_weights else None)
+    aopt = jax.eval_shape(
+        lambda p: init_opt_state(p, opt_cfg.master_weights), aparams)
+    abatch = input_specs(cfg, seq_len, global_batch, "train")
+
+    pspecs = S.param_specs(aparams, mesh)
+    ospecs = S.opt_state_specs(aopt, mesh)
+    bspecs = S.batch_specs(abatch, mesh)
+    metric_specs = None  # replicated scalars
+
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(S.to_named(pspecs, mesh), S.to_named(ospecs, mesh),
+                      S.to_named(bspecs, mesh)),
+        out_shardings=(S.to_named(pspecs, mesh), S.to_named(ospecs, mesh),
+                       None),
+        donate_argnums=(0, 1),
+    )
+    return jitted, (aparams, aopt, abatch), (pspecs, ospecs, bspecs), cfg
+
+
+# ----------------------------------------------------------------------
+# Serve steps
+# ----------------------------------------------------------------------
+def make_prefill_step(cfg: ModelConfig, cache_len: int):
+    api = get_api(cfg)
+
+    def prefill_step(params, batch):
+        extras = {k: v for k, v in batch.items() if k != "tokens"}
+        cache, last_h = api.prefill(params, batch["tokens"], cfg,
+                                    cache_len=cache_len, **extras)
+        from repro.models.transformer import apply_bayes_head
+        samples = apply_bayes_head(params, last_h, cfg, cache["pos"])
+        return cache, samples
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    api = get_api(cfg)
+
+    def decode_step(params, cache, token):
+        return api.decode_step(params, cache, token, cfg)
+
+    return decode_step
+
+
+def jit_prefill_step(cfg: ModelConfig, mesh: Mesh, seq_len: int,
+                     global_batch: int, serve_dtype=jnp.bfloat16):
+    cfg = shape_adjusted_config(cfg, seq_len)
+    cfg = mesh_hinted_config(cfg, mesh, global_batch)
+    fn = make_prefill_step(cfg, cache_len=seq_len)
+    aparams = abstract_params(cfg, serve_dtype)
+    abatch = input_specs(cfg, seq_len, global_batch, "prefill")
+    acache = jax.eval_shape(fn, aparams, abatch)[0]
+
+    pspecs = S.param_specs(aparams, mesh)
+    bspecs = S.batch_specs(abatch, mesh)
+    cspecs = S.cache_specs(acache, mesh)
+    lspec = S.logits_spec(mesh, global_batch)
+
+    jitted = jax.jit(
+        fn,
+        in_shardings=(S.to_named(pspecs, mesh), S.to_named(bspecs, mesh)),
+        out_shardings=(S.to_named(cspecs, mesh),
+                       NamedSharding(mesh, lspec)),
+    )
+    return jitted, (aparams, abatch), (pspecs, bspecs, cspecs), cfg
+
+
+def jit_decode_step(cfg: ModelConfig, mesh: Mesh, seq_len: int,
+                    global_batch: int, serve_dtype=jnp.bfloat16):
+    cfg = shape_adjusted_config(cfg, seq_len)
+    cfg = mesh_hinted_config(cfg, mesh, global_batch)
+    fn = make_decode_step(cfg)
+    aparams = abstract_params(cfg, serve_dtype)
+    acache = abstract_cache(cfg, seq_len, global_batch, serve_dtype)
+    atoken = jax.ShapeDtypeStruct((global_batch, 1), jnp.int32)
+
+    pspecs = S.param_specs(aparams, mesh)
+    cspecs = S.cache_specs(acache, mesh)
+    tspec = S.batch_specs({"tokens": atoken}, mesh)["tokens"]
+    lspec = S.logits_spec(mesh, global_batch)
+
+    jitted = jax.jit(
+        fn,
+        in_shardings=(S.to_named(pspecs, mesh), S.to_named(cspecs, mesh),
+                      NamedSharding(mesh, tspec)),
+        out_shardings=(NamedSharding(mesh, lspec),
+                       S.to_named(cspecs, mesh)),
+        donate_argnums=(1,),
+    )
+    return jitted, (aparams, acache, atoken), (pspecs, cspecs), cfg

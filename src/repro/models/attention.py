@@ -1,0 +1,154 @@
+"""Attention: GQA + RoPE + qk-norm + sliding window, memory-efficient.
+
+Training/prefill use a flash-style chunked attention (online softmax,
+lax.scan over KV chunks inside lax.map over Q chunks) so that 32k-token
+prefill never materializes an S×S score matrix — required for the
+dry-run memory analysis to be honest at seq 32768.
+
+Decode uses a direct cache read (scores are [B, H, 1, S] — small).  The
+sliding-window (SWA) decode path supports a *rolling* cache of size
+``window`` so mixtral's long_500k cell runs with O(window) state.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def expand_kv(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """Repeat KV heads to the full query head count (Megatron-style GQA:
+    replicating KV across the group lets the head dim shard cleanly on
+    the 'model' axis — per-device bytes are identical to replication,
+    but score/prob tensors become head-sharded instead of replicated)."""
+    hkv = k.shape[2]
+    if hkv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // hkv, axis=2)
+
+
+def chunked_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                      q_offset=0, kv_valid_len=None,
+                      chunk_q: int = 512, chunk_kv: int = 1024):
+    """Flash-style attention. q: [B,Sq,H,dh]; k,v: [B,Sk,H,dh] (callers
+    expand GQA KV heads via ``expand_kv`` so the head dim stays intact —
+    and 'model'-sharded — through every intermediate).
+
+    q_offset: global position of q[0] (for prefill continuation).
+    kv_valid_len: number of valid kv entries (None = Sk).
+    Returns [B, Sq, H, dh] in q.dtype; accumulation in f32.
+    """
+    b, sq, hq, dh = q.shape
+    _, sk, hkv, _ = k.shape
+    assert hkv == hq, "expand KV heads before calling (expand_kv)"
+    scale = 1.0 / math.sqrt(dh)
+    chunk_q = min(chunk_q, sq)
+    chunk_kv = min(chunk_kv, sk)
+
+    pad_q = (-sq) % chunk_q
+    pad_k = (-sk) % chunk_kv
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else k
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else v
+    nq, nk = qp.shape[1] // chunk_q, kp.shape[1] // chunk_kv
+    valid = sk if kv_valid_len is None else kv_valid_len
+
+    # [nq, B, Qc, H, dh] — q chunks as the mapped axis.
+    qs = qp.reshape(b, nq, chunk_q, hq, dh).transpose(1, 0, 2, 3, 4)
+    ks = kp.reshape(b, nk, chunk_kv, hq, dh).transpose(1, 0, 2, 3, 4)
+    vs = vp.reshape(b, nk, chunk_kv, hq, dh).transpose(1, 0, 2, 3, 4)
+
+    def one_q_chunk(args):
+        qc, iq = args                                  # [B,Qc,H,dh]
+        q_pos = (q_offset + iq * chunk_q
+                 + jnp.arange(chunk_q))                # [Qc]
+        qcf = qc.astype(jnp.float32) * scale
+
+        def kv_step(carry, blk):
+            m, l, acc = carry
+            k_blk, v_blk, ik = blk
+            kv_pos = ik * chunk_kv + jnp.arange(chunk_kv)   # [Kc]
+            s = jnp.einsum("bqhd,bkhd->bhqk", qcf,
+                           k_blk.astype(jnp.float32))        # [B,H,Qc,Kc]
+            mask = kv_pos[None, :] < valid                   # padding
+            if causal:
+                mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+            if window is not None:
+                mask = mask & (kv_pos[None, :] > q_pos[:, None] - window)
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))                # [B,H,Qc]
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = (acc * corr[..., None]
+                       + jnp.einsum("bhqk,bkhd->bhqd", p,
+                                    v_blk.astype(jnp.float32)))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hq, chunk_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hq, chunk_q), jnp.float32)
+        a0 = jnp.zeros((b, hq, chunk_q, dh), jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0),
+                                  (ks, vs, jnp.arange(nk)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)         # [B,H,Qc,dh]
+        return out.transpose(0, 2, 1, 3)                     # [B,Qc,H,dh]
+
+    # Flash semantics in the backward too: recompute scores/probs per
+    # q-chunk instead of saving [nq, nk, B, H, Qc, Kc] f32 residuals.
+    one_q_chunk = jax.checkpoint(
+        one_q_chunk, policy=jax.checkpoint_policies.nothing_saveable)
+    outs = lax.map(one_q_chunk, (qs, jnp.arange(nq)))        # [nq,B,Qc,H,dh]
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, nq * chunk_q, hq, dh)
+    return out[:, :sq].astype(q.dtype)
+
+
+def decode_attention(q, cache_k, cache_v, pos, *, window: int | None = None,
+                     rolling: bool = False):
+    """Single-token attention against a KV cache.
+
+    q: [B, 1, Hq, dh]; cache_k/v: [B, Sc, Hkv, dh]; pos: scalar int32 —
+    number of tokens already in the cache (the new token's position,
+    already inserted).  With ``rolling`` the cache is a circular buffer
+    of size Sc=window.
+
+    (§Perf I5 post-mortem: an S-minor cache layout + separate self-token
+    score column measured WORSE under the CPU SPMD partitioner — concat
+    on the sharded S axis forces resharding, and carry-threading the
+    cache copies it wholesale per layer.  Reverted; see EXPERIMENTS.md.)
+    """
+    b, _, hq, dh = q.shape
+    _, sc, hkv, _ = cache_k.shape
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(dh)
+    qf = q.reshape(b, hkv, g, dh).astype(jnp.float32) * scale
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, cache_k.astype(jnp.float32))
+    idx = jnp.arange(sc)
+    if rolling:
+        # Slot s holds global position p = pos - ((pos - s) mod Sc); valid
+        # if 0 <= p <= pos and within the window.
+        p = pos - ((pos - idx) % sc)
+        mask = (p >= 0) & (p <= pos)
+        if window is not None:
+            mask = mask & (p > pos - window)
+    else:
+        mask = idx <= pos
+        if window is not None:
+            mask = mask & (idx > pos - window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, cache_v.astype(jnp.float32))
+    return out.reshape(b, 1, hq, dh).astype(q.dtype)
+
+
+def cache_update(cache_k, cache_v, k_new, v_new, pos, *, rolling: bool = False):
+    """Insert [B, 1, Hkv, dh] entries at position ``pos`` (rolling: pos % Sc)."""
+    sc = cache_k.shape[1]
+    slot = (pos % sc) if rolling else pos
+    ck = lax.dynamic_update_slice(cache_k, k_new, (0, slot, 0, 0))
+    cv = lax.dynamic_update_slice(cache_v, v_new, (0, slot, 0, 0))
+    return ck, cv

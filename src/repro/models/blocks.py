@@ -1,0 +1,136 @@
+"""Shared model building blocks (pure JAX, no flax).
+
+Parameters are plain nested dicts of jnp arrays; every block exposes
+``init_*`` and a functional apply.  Layer stacks are `lax.scan`-stacked
+(leading L dim on every leaf) for compile-time sanity at 94-layer ×
+512-device scale.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _rms_stats(x, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return jax.lax.rsqrt(var + eps)
+
+
+@jax.custom_vjp
+def _rms_norm_core(x, scale, eps):
+    inv = _rms_stats(x, eps).astype(x.dtype)
+    return x * inv * scale.astype(x.dtype)
+
+
+def _rms_fwd(x, scale, eps):
+    inv = _rms_stats(x, eps)
+    y = x * inv.astype(x.dtype) * scale.astype(x.dtype)
+    return y, (x, inv, scale, eps)
+
+
+def _rms_bwd(res, g):
+    # §Perf I2c: autodiff of an f32-upcast norm emits f32 [B,S,D]
+    # cotangents that flow up the residual chain and turn every backward
+    # all-reduce f32 (2× wire).  This custom backward keeps all [B,S,D]
+    # tensors in x.dtype; only [B,S,1] reductions run f32.
+    x, inv, scale, eps = res
+    inv_x = inv.astype(x.dtype)
+    sc = scale.astype(x.dtype)
+    d = x.shape[-1]
+    proj = jnp.sum((g * sc * x).astype(jnp.float32), axis=-1,
+                   keepdims=True)                       # [B,S,1] f32
+    coef = (inv ** 3 * proj / d).astype(x.dtype)        # [B,S,1]
+    dx = g * sc * inv_x - x * coef
+    dscale = jnp.sum((g * x * inv_x).astype(jnp.float32),
+                     axis=tuple(range(g.ndim - 1))).astype(scale.dtype)
+    return dx, dscale, None
+
+
+_rms_norm_core.defvjp(_rms_fwd, _rms_bwd)
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6):
+    """Statistics in f32, application AND backward in x.dtype.
+
+    §Perf I2c: upcasting the whole tensor creates [B,S,D]-f32 consumers
+    (and f32 cotangents) that XLA's partitioner sinks into adjacent
+    collectives.  Both directions stay in x.dtype here; only [B,S,1]
+    reductions are f32.
+    """
+    return _rms_norm_core(x, scale, eps)
+
+
+def init_rms_norm(dim: int) -> jnp.ndarray:
+    return jnp.ones((dim,), jnp.float32)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-5):
+    """Moments in f32, application in x.dtype (see rms_norm note)."""
+    xf = x.astype(jnp.float32)
+    mean = xf.mean(-1, keepdims=True)
+    var = xf.var(-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    return ((x - mean.astype(x.dtype)) * inv.astype(x.dtype)
+            * scale.astype(x.dtype) + bias.astype(x.dtype))
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32) -> jnp.ndarray:
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d_in, jnp.float32))
+    return jax.random.normal(key, (d_in, d_out), dtype) * scale
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32) -> jnp.ndarray:
+    return jax.random.normal(key, (vocab, dim), dtype) * 0.02
+
+
+def swiglu(x: jnp.ndarray, wi: jnp.ndarray, wg: jnp.ndarray,
+           wo: jnp.ndarray) -> jnp.ndarray:
+    """SwiGLU MLP: silu(x·wg) ⊙ (x·wi) · wo."""
+    h = jax.nn.silu(x @ wg) * (x @ wi)
+    return h @ wo
+
+
+def gelu_mlp(x: jnp.ndarray, wi: jnp.ndarray, bi, wo: jnp.ndarray, bo):
+    """GELU MLP with biases (whisper-style)."""
+    h = jax.nn.gelu(x @ wi + bi, approximate=True)
+    return h @ wo + bo
+
+
+# ----------------------------------------------------------------------
+# Rotary position embeddings
+# ----------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: [B, S, H, dh]; positions: [B, S] (or [S]) int32.
+
+    Trig tables in f32, rotation applied in x.dtype (see rms_norm note —
+    an f32 rotation would drag the K all-gathers up to f32).
+    """
+    freqs = rope_frequencies(x.shape[-1], theta)            # [dh/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, S, dh/2]
+    cos = jnp.cos(angles)[..., None, :].astype(x.dtype)     # [B, S, 1, dh/2]
+    sin = jnp.sin(angles)[..., None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1)
+
+
+def causal_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                         vocab_real: int) -> jnp.ndarray:
+    """Mean next-token CE; logits [B, S, Vp] (padded vocab), labels [B, S].
+
+    Padded vocab columns are masked to -inf so they never receive mass.
+    """
+    logits = logits.astype(jnp.float32)
+    vp = logits.shape[-1]
+    if vp > vocab_real:
+        col = jnp.arange(vp)
+        logits = jnp.where(col[None, None, :] < vocab_real, logits, -1e30)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return (logz - gold).mean()

@@ -1,0 +1,197 @@
+"""Mamba2 (state-space duality, SSD) — attention-free trunk.
+
+Implements the chunked SSD algorithm of Dao & Gu (arXiv:2405.21060):
+within a chunk the quadratic dual form runs on the MXU; across chunks a
+cheap [B, H, P, N] state is carried by lax.scan.  Decode is a single
+O(1) recurrent state update — which is why mamba2/zamba2 are the archs
+assigned to the 500k-token long-context cell.
+
+Layer = in_proj → causal depthwise conv (shift-add form) → SSD →
+gated RMSNorm → out_proj, mirroring the reference mamba2 block.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import blocks
+
+
+def mamba_dims(cfg) -> dict:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_headdim
+    conv_dim = d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    d_proj = 2 * d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state + nheads
+    return dict(d_inner=d_inner, nheads=nheads, conv_dim=conv_dim,
+                d_proj=d_proj, d_state=cfg.ssm_state, ngroups=cfg.ssm_ngroups,
+                headdim=cfg.ssm_headdim, d_conv=cfg.ssm_conv)
+
+
+def init_mamba_stack(key, cfg, l: int) -> dict:
+    dims = mamba_dims(cfg)
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    dt = jnp.float32
+    return {
+        "in_proj": jax.vmap(lambda k: blocks.dense_init(k, d, dims["d_proj"], dt))(
+            jax.random.split(ks[0], l)),
+        "conv_w": (jax.random.normal(ks[1], (l, dims["conv_dim"], dims["d_conv"]))
+                   * 0.1).astype(dt),
+        "conv_b": jnp.zeros((l, dims["conv_dim"]), dt),
+        "dt_bias": jnp.zeros((l, dims["nheads"]), dt),
+        "A_log": jnp.zeros((l, dims["nheads"]), dt),       # A = -exp(0) = -1
+        "D": jnp.ones((l, dims["nheads"]), dt),
+        "norm": jnp.ones((l, dims["d_inner"]), dt),
+        "out_proj": jax.vmap(
+            lambda k: blocks.dense_init(k, dims["d_inner"], d, dt))(
+            jax.random.split(ks[2], l)),
+    }
+
+
+def _causal_conv_full(x, w, b):
+    """Depthwise causal conv as shift-adds. x: [B,S,C], w: [C,K]."""
+    k = w.shape[-1]
+    y = jnp.zeros_like(x)
+    for i in range(k):
+        shift = k - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1]]
+        y = y + xi * w[:, i].astype(x.dtype)
+    return y + b.astype(x.dtype)
+
+
+def _segsum_exp(a):
+    """L[i,j] = exp(Σ_{j<t<=i} a_t) for i>=j else 0. a: [..., Q]."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]        # [..., Q, Q]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def ssd_chunked(x, dt, a, b_mat, c_mat, chunk: int, state0=None):
+    """Chunked SSD scan.
+
+    x:  [B, S, H, P]   inputs (pre dt-scaling)
+    dt: [B, S, H]      positive step sizes
+    a:  [H]            negative decay rates
+    b_mat, c_mat: [B, S, G, N]
+    Returns (y [B, S, H, P], final_state [B, H, P, N]).
+    """
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    assert s % chunk == 0, "sequence must be chunk-aligned"
+    nc = s // chunk
+    rep = h // g
+
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    bc = b_mat.reshape(bsz, nc, chunk, g, n)
+    cc = c_mat.reshape(bsz, nc, chunk, g, n)
+    # move chunk axis first for scan
+    xc = jnp.moveaxis(xc, 1, 0)
+    dtc = jnp.moveaxis(dtc, 1, 0)
+    bc = jnp.moveaxis(bc, 1, 0)
+    cc = jnp.moveaxis(cc, 1, 0)
+
+    def chunk_step(state, inp):
+        xq, dtq, bq, cq = inp                      # [B,Q,H,P] [B,Q,H] [B,Q,G,N]
+        adt = dtq * a[None, None, :]               # [B,Q,H]
+        adt_t = jnp.moveaxis(adt, -1, 1)           # [B,H,Q]
+        cum = jnp.cumsum(adt_t, axis=-1)           # [B,H,Q]
+        lmat = _segsum_exp(adt_t)                  # [B,H,Q,Q]
+        bq_h = jnp.repeat(bq, rep, axis=2)         # [B,Q,H,N]
+        cq_h = jnp.repeat(cq, rep, axis=2)
+        xdt = xq * dtq[..., None]                  # [B,Q,H,P]
+
+        scores = jnp.einsum("bzhn,bshn->bhzs", cq_h, bq_h)  # [B,H,Q,Q]
+        y_diag = jnp.einsum("bhzs,bshp->bzhp", scores * lmat, xdt)
+
+        decay_out = jnp.exp(cum)                   # [B,H,Q]
+        y_off = jnp.einsum("bzhn,bhpn,bhz->bzhp", cq_h, state, decay_out)
+
+        decay_st = jnp.exp(cum[..., -1:] - cum)    # [B,H,Q]
+        new_contrib = jnp.einsum("bshn,bhs,bshp->bhpn", bq_h, decay_st, xdt)
+        state = state * jnp.exp(cum[..., -1])[..., None, None] + new_contrib
+        return state, y_diag + y_off
+
+    if state0 is None:
+        state0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    state, ys = lax.scan(chunk_step, state0, (xc, dtc, bc, cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, h, p)
+    return y, state
+
+
+def mamba_block_full(h, lp, cfg, state0=None, conv_state0=None):
+    """Full-sequence mamba2 block. Returns (h, (ssm_state, conv_state))."""
+    dims = mamba_dims(cfg)
+    bsz, s, _ = h.shape
+    d_in, nh, hd = dims["d_inner"], dims["nheads"], dims["headdim"]
+    g, n = dims["ngroups"], dims["d_state"]
+
+    zxbcdt = h @ lp["in_proj"].astype(h.dtype)
+    z, xbc, dt = jnp.split(
+        zxbcdt, [d_in, d_in + dims["conv_dim"]], axis=-1)
+    # conv (with optional carried state: prepend, conv, strip)
+    if conv_state0 is not None:
+        xbc_ext = jnp.concatenate(
+            [conv_state0.astype(xbc.dtype).transpose(0, 2, 1), xbc], axis=1)
+        y = _causal_conv_full(xbc_ext, lp["conv_w"], lp["conv_b"])
+        xbc_conv = y[:, conv_state0.shape[2]:]
+    else:
+        xbc_conv = _causal_conv_full(xbc, lp["conv_w"], lp["conv_b"])
+    xbc_conv = jax.nn.silu(xbc_conv)
+    x, b_mat, c_mat = jnp.split(xbc_conv, [d_in, d_in + g * n], axis=-1)
+
+    x = x.reshape(bsz, s, nh, hd).astype(jnp.float32)
+    b_mat = b_mat.reshape(bsz, s, g, n).astype(jnp.float32)
+    c_mat = c_mat.reshape(bsz, s, g, n).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"][None, None])
+    a = -jnp.exp(lp["A_log"].astype(jnp.float32))
+
+    y, state = ssd_chunked(x, dt, a, b_mat, c_mat, cfg.ssm_chunk, state0)
+    y = y + x * lp["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(bsz, s, d_in).astype(h.dtype)
+    y = blocks.rms_norm(y * jax.nn.silu(z), lp["norm"])
+    out = y @ lp["out_proj"].astype(h.dtype)
+    # conv state: last (K-1) raw xbc inputs, [B, conv_dim, K-1]
+    new_conv_state = xbc[:, -(dims["d_conv"] - 1):].transpose(0, 2, 1)
+    return out, (state, new_conv_state)
+
+
+def mamba_block_decode(h, lp, cfg, ssm_state, conv_state):
+    """Single-token mamba2 step. h: [B, 1, D]. O(1) state update."""
+    dims = mamba_dims(cfg)
+    bsz = h.shape[0]
+    d_in, nh, hd = dims["d_inner"], dims["nheads"], dims["headdim"]
+    g, n, k = dims["ngroups"], dims["d_state"], dims["d_conv"]
+
+    zxbcdt = (h[:, 0] @ lp["in_proj"].astype(h.dtype))
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, d_in + dims["conv_dim"]], axis=-1)
+
+    # conv: state holds last K-1 inputs [B, conv_dim, K-1]
+    w = lp["conv_w"].astype(jnp.float32)                   # [conv_dim, K]
+    hist = conv_state.astype(jnp.float32)
+    xbc32 = xbc.astype(jnp.float32)
+    y = (hist * w[None, :, :k - 1]).sum(-1) + xbc32 * w[None, :, k - 1]
+    y = jax.nn.silu(y + lp["conv_b"].astype(jnp.float32)[None])
+    new_conv_state = jnp.concatenate([hist[:, :, 1:], xbc32[:, :, None]],
+                                     axis=-1)
+
+    x, b_mat, c_mat = jnp.split(y, [d_in, d_in + g * n], axis=-1)
+    x = x.reshape(bsz, nh, hd)
+    b_mat = jnp.repeat(b_mat.reshape(bsz, g, n), nh // g, axis=1)
+    c_mat = jnp.repeat(c_mat.reshape(bsz, g, n), nh // g, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"][None])
+    a = -jnp.exp(lp["A_log"].astype(jnp.float32))
+
+    decay = jnp.exp(dt * a[None])                          # [B, H]
+    ssm_state = (ssm_state * decay[..., None, None]
+                 + jnp.einsum("bhp,bhn,bh->bhpn", x, b_mat, dt))
+    y = jnp.einsum("bhpn,bhn->bhp", ssm_state, c_mat)
+    y = y + x * lp["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(bsz, d_in).astype(h.dtype)
+    y = blocks.rms_norm(y * jax.nn.silu(z), lp["norm"])
+    out = (y @ lp["out_proj"].astype(h.dtype))[:, None]
+    return out, (ssm_state, new_conv_state)

@@ -1,0 +1,42 @@
+"""Family dispatch: one API surface over all model families.
+
+Every family exposes: init(key, cfg) -> params, train_loss(params,
+batch, cfg, step), prefill(params, tokens, cfg, cache_len, **extras),
+decode_step(params, cache, token, cfg).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.models import ssm_lm, transformer
+from repro.models.transformer import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    init: Callable
+    train_loss: Callable
+    prefill: Callable
+    decode_step: Callable
+    needs_frames: bool = False
+    needs_images: bool = False
+
+
+def get_api(cfg: ModelConfig) -> ModelAPI:
+    if cfg.family in ("ssm", "hybrid"):
+        return ModelAPI(
+            init=ssm_lm.init_ssm_lm,
+            train_loss=ssm_lm.train_loss_ssm,
+            prefill=ssm_lm.prefill_ssm,
+            decode_step=ssm_lm.decode_step_ssm,
+        )
+    return ModelAPI(
+        init=transformer.init_transformer,
+        train_loss=transformer.train_loss,
+        prefill=transformer.prefill,
+        decode_step=transformer.decode_step,
+        needs_frames=cfg.family == "audio",
+        needs_images=cfg.family == "vlm",
+    )

@@ -1,0 +1,153 @@
+"""SAR detection model (paper §V-B): conv backbone + Bayesian last layer.
+
+Stands in for YOLO26n at the assignment's scale: a small conv net whose
+*final projection is the paper's Bayesian weight-decomposition layer*
+(convert-only-the-last-layer, §V-B1), trained with Bayes-by-backprop on
+the synthetic SARD task, served through the CLT-GRNG sampling modes.
+
+Deterministic layers optionally execute through the CIM numeric path —
+im2col + 8-bit weights + 64-deep 6-bit-ADC chunked matmul (core/cim.py),
+exactly the paper's µ-only-subarray mapping ("1659 µ-only subarrays …
+via im2col").  This is the configuration used to validate that CIM
+quantization costs ~no accuracy (Table II "This*" rows).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bayes_layer
+from repro.core.bayes_layer import BayesDenseConfig
+from repro.core.cim import cim_matmul
+from repro.core.clt_grng import GRNGConfig
+from repro.core.quant import QuantConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class SarCnnConfig:
+    image_size: int = 32
+    channels: tuple = (16, 32, 64)
+    kernel: int = 3
+    n_classes: int = 2
+    bayesian_head: bool = True
+    sigma_init: float = 0.05
+    prior_sigma: float = 0.1
+    kl_weight: float = 1e-4
+    cim_execution: bool = False          # run convs through the CIM path
+    quant: QuantConfig = dataclasses.field(
+        default_factory=lambda: QuantConfig(enabled=True))
+    grng: GRNGConfig = dataclasses.field(default_factory=GRNGConfig)
+
+    def head_cfg(self) -> BayesDenseConfig:
+        return BayesDenseConfig(
+            d_in=self.channels[-1], d_out=self.n_classes,
+            sigma_init=self.sigma_init, prior_sigma=self.prior_sigma,
+            grng=self.grng)
+
+
+def init_sar_cnn(key, cfg: SarCnnConfig) -> dict:
+    params: dict = {"convs": []}
+    c_in = 1
+    keys = jax.random.split(key, len(cfg.channels) + 1)
+    for i, c_out in enumerate(cfg.channels):
+        scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.kernel**2 * c_in, jnp.float32))
+        params["convs"].append({
+            "w": jax.random.normal(
+                keys[i], (cfg.kernel, cfg.kernel, c_in, c_out)) * scale,
+            "b": jnp.zeros((c_out,)),
+        })
+        c_in = c_out
+    if cfg.bayesian_head:
+        params["head"] = bayes_layer.init(keys[-1], cfg.head_cfg())
+    else:
+        params["head"] = {"w": jax.random.normal(
+            keys[-1], (cfg.channels[-1], cfg.n_classes)) * 0.05,
+            "b": jnp.zeros((cfg.n_classes,))}
+    return params
+
+
+def _im2col(x: jnp.ndarray, k: int, stride: int) -> jnp.ndarray:
+    """[B,H,W,C] -> patches [B, Ho, Wo, k*k*C] (the paper's CIM mapping)."""
+    b, h, w, c = x.shape
+    ho = (h - k) // stride + 1
+    wo = (w - k) // stride + 1
+    idx_h = jnp.arange(ho) * stride
+    idx_w = jnp.arange(wo) * stride
+    patches = []
+    for dy in range(k):
+        for dx in range(k):
+            patches.append(x[:, idx_h[:, None] + dy, idx_w[None, :] + dx, :])
+    return jnp.concatenate(patches, axis=-1)
+
+
+def _conv(x, w, b, cfg: SarCnnConfig, stride: int = 2):
+    k = w.shape[0]
+    if cfg.cim_execution:
+        cols = _im2col(x, k, stride)                    # [B,Ho,Wo,k²C]
+        bsz, ho, wo, d = cols.shape
+        wmat = w.reshape(-1, w.shape[-1])               # [k²C, Cout]
+        pad = (-d) % cfg.quant.chunk                    # tile depth align
+        cols2 = jnp.pad(cols.reshape(-1, d), ((0, 0), (0, pad)))
+        wmat2 = jnp.pad(wmat, ((0, pad), (0, 0)))
+        y = cim_matmul(cols2, wmat2, cfg.quant)
+        y = y.reshape(bsz, ho, wo, -1)
+    else:
+        y = jax.lax.conv_general_dilated(
+            x, w, (stride, stride), "VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return jax.nn.relu(y + b)
+
+
+def features(params, images, cfg: SarCnnConfig) -> jnp.ndarray:
+    h = images
+    for layer in params["convs"]:
+        h = _conv(h, layer["w"], layer["b"], cfg)
+    return h.mean(axis=(1, 2))                          # GAP -> [B, C]
+
+
+def logits_train(params, images, cfg: SarCnnConfig, step):
+    feats = features(params, images, cfg)
+    if cfg.bayesian_head:
+        w = bayes_layer.sample_weights_at(params["head"], cfg.head_cfg(), step)
+        kl = bayes_layer.kl_divergence(params["head"], cfg.head_cfg())
+        return feats @ w, kl
+    return feats @ params["head"]["w"] + params["head"]["b"], jnp.zeros(())
+
+
+def train_loss(params, batch, cfg: SarCnnConfig, step):
+    logits, kl = logits_train(params, batch["images"], cfg, step)
+    labels = batch["labels"]
+    ce = -jnp.take_along_axis(jax.nn.log_softmax(logits), labels[:, None],
+                              axis=1).mean()
+    return ce + cfg.kl_weight * kl / batch["images"].shape[0], {
+        "ce": ce, "kl": kl,
+        "acc": (logits.argmax(-1) == labels).mean()}
+
+
+def logit_samples_serve(params, images, cfg: SarCnnConfig, num_samples: int,
+                        mode: str = "rank16", sample0: int = 0):
+    """MC logit samples through the CLT-GRNG serving path. [R, B, C]."""
+    from repro.core.sampling import BayesHeadConfig, logit_samples
+    from repro.core.bayes_layer import sigma_of, to_serving
+    feats = features(params, images, cfg)
+    if not cfg.bayesian_head:
+        logits = feats @ params["head"]["w"] + params["head"]["b"]
+        return logits[None]
+    hcfg = BayesHeadConfig(num_samples=num_samples, mode=mode, grng=cfg.grng,
+                           compute_dtype=jnp.float32)
+    head = to_serving(params["head"], hcfg)
+    return logit_samples(head, feats, hcfg, sample0=sample0)
+
+
+def logit_samples_ideal(params, images, cfg: SarCnnConfig, num_samples: int,
+                        key) -> jnp.ndarray:
+    """Ideal-Gaussian ablation (paper's 'BNN' rows): w = µ + σ·N(0,1)."""
+    from repro.core.bayes_layer import sigma_of
+    feats = features(params, images, cfg)
+    mu, sigma = params["head"]["mu"], sigma_of(params["head"])
+    eps = jax.random.normal(key, (num_samples,) + mu.shape)
+    w = mu[None] + sigma[None] * eps
+    return jnp.einsum("bd,rdc->rbc", feats, w)

@@ -1,0 +1,175 @@
+"""SSM language models: mamba2-130m (pure SSM) and zamba2-2.7b (hybrid).
+
+zamba2 style: a stack of mamba2 blocks with ONE shared transformer block
+(attention + MLP, parameters reused at every application site) applied
+after every ``hybrid_attn_every`` mamba layers.  Each application site
+keeps its own KV cache; the shared block consumes concat(h, h0) through
+an input projection (the zamba "global skip" to the embeddings).
+
+Both models end in the paper's Bayesian head — the CLT-GRNG technique is
+head-level and attaches to attention-free trunks unchanged
+(DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import bayes_layer
+from repro.models import blocks
+from repro.models.mamba2 import (init_mamba_stack, mamba_block_decode,
+                                 mamba_block_full, mamba_dims)
+from repro.models.transformer import (ModelConfig, _block_decode, _block_full,
+                                      _maybe_remat, _wsc, apply_bayes_head,
+                                      head_logits_train)
+
+
+def init_ssm_lm(key, cfg: ModelConfig) -> dict:
+    keys = jax.random.split(key, 6)
+    params: dict = {
+        "embed": blocks.embed_init(keys[0], cfg.vocab_padded, cfg.d_model),
+        "mamba": init_mamba_stack(keys[1], cfg, cfg.n_layers),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if cfg.hybrid_attn_every:
+        from repro.models.transformer import _init_block_stack
+        shared = _init_block_stack(keys[2], cfg, 1)
+        shared = jax.tree.map(lambda x: x[0], shared)      # drop stack dim
+        params["shared_attn"] = shared
+        params["shared_w_in"] = blocks.dense_init(
+            keys[3], 2 * cfg.d_model, cfg.d_model)
+        params["shared_w_out"] = blocks.dense_init(
+            keys[4], cfg.d_model, cfg.d_model)
+    if cfg.bayesian_head:
+        params["head"] = bayes_layer.init(keys[5], cfg.head_bayes_cfg())
+    else:
+        params["head"] = {"w": blocks.dense_init(
+            keys[5], cfg.d_model, cfg.vocab_padded)}
+    return params
+
+
+def _shared_block_full(h, h0, params, cfg: ModelConfig, positions):
+    u = jnp.concatenate([h, h0], axis=-1) @ params["shared_w_in"].astype(h.dtype)
+    u, _, kv, _ = _block_full(u, params["shared_attn"], cfg, positions,
+                              causal=True)
+    return h + u @ params["shared_w_out"].astype(h.dtype), kv
+
+
+def _shared_block_decode(h, h0, params, cfg: ModelConfig, ck, cv, pos):
+    u = jnp.concatenate([h, h0], axis=-1) @ params["shared_w_in"].astype(h.dtype)
+    u, ck, cv = _block_decode(u, params["shared_attn"], cfg, ck, cv, pos,
+                              rolling=False)
+    return h + u @ params["shared_w_out"].astype(h.dtype), ck, cv
+
+
+def trunk_forward_ssm(params, tokens, cfg: ModelConfig,
+                      collect_cache: bool = False):
+    """-> (hidden [B,S,D], aux 0, caches dict|None)."""
+    b, s = tokens.shape
+    h = _wsc(params["embed"].astype(cfg.dtype)[tokens], cfg, None, None)
+    h0 = h
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def mamba_body(h, lp):
+        out, (st, cst) = mamba_block_full(h, lp, cfg)
+        return _wsc(h + out, cfg, None, None), ((st, cst) if collect_cache else None)
+
+    mamba_body_r = _maybe_remat(mamba_body, cfg)
+    caches: dict | None = {} if collect_cache else None
+
+    if cfg.hybrid_attn_every:
+        every = cfg.hybrid_attn_every
+        n_groups = cfg.n_layers // every
+        grouped = jax.tree.map(
+            lambda x: x.reshape(n_groups, every, *x.shape[1:]), params["mamba"])
+
+        def group_fn(h, gp):
+            h, states = lax.scan(mamba_body_r, h, gp)
+            h, kv = _shared_block_full(h, h0, params, cfg, positions)
+            return h, (states, kv if collect_cache else None)
+
+        h, (states, kvs) = lax.scan(group_fn, h, grouped)
+        if collect_cache:
+            st, cst = states
+            caches["ssm"] = st.reshape(-1, *st.shape[2:])
+            caches["conv"] = cst.reshape(-1, *cst.shape[2:])
+            caches["k"], caches["v"] = kvs          # [n_sites, B, S, Hkv, dh]
+    else:
+        h, states = lax.scan(mamba_body_r, h, params["mamba"])
+        if collect_cache:
+            caches["ssm"], caches["conv"] = states
+
+    h = blocks.rms_norm(h, params["final_norm"])
+    return h, jnp.zeros((), jnp.float32), caches
+
+
+def train_loss_ssm(params, batch, cfg: ModelConfig, step=0):
+    h, _, _ = trunk_forward_ssm(params, batch["tokens"], cfg)
+    logits, kl = head_logits_train(params["head"], h, cfg, step)
+    from repro.models.transformer import _model_ax
+    logits = _wsc(logits, cfg, None, _model_ax(cfg, cfg.vocab_padded))
+    ce = blocks.causal_cross_entropy(logits, batch["labels"], cfg.vocab)
+    n_tokens = batch["tokens"].shape[0] * batch["tokens"].shape[1]
+    return ce + cfg.kl_weight * kl / n_tokens, {"ce": ce, "kl": kl,
+                                                "aux": jnp.zeros(())}
+
+
+def prefill_ssm(params, tokens, cfg: ModelConfig, *, cache_len: int):
+    """Returns (cache, last hidden [B, D]).  SSM state is O(1) in length;
+    only the hybrid's shared-attn sites carry KV caches."""
+    b, s = tokens.shape
+    h, _, caches = trunk_forward_ssm(params, tokens, cfg, collect_cache=True)
+    cache = {"ssm": caches["ssm"], "conv": caches["conv"],
+             "pos": jnp.int32(s)}
+    if "k" in caches:
+        sc = cache_len
+        k, v = caches["k"], caches["v"]
+        if s >= sc:
+            k, v = k[:, :, s - sc:], v[:, :, s - sc:]
+        else:
+            pad = sc - s
+            k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        cache["k"], cache["v"] = k, v
+    return cache, h[:, -1]
+
+
+def decode_step_ssm(params, cache, token, cfg: ModelConfig):
+    """One decode step: O(1) state updates per mamba layer."""
+    pos = cache["pos"]
+    h = params["embed"].astype(cfg.dtype)[token]             # [B, 1, D]
+    h0 = h
+
+    def mamba_body(h, xs):
+        lp, st, cst = xs
+        out, (st, cst) = mamba_block_decode(h, lp, cfg, st, cst)
+        return h + out, (st, cst)
+
+    if cfg.hybrid_attn_every:
+        every = cfg.hybrid_attn_every
+        n_groups = cfg.n_layers // every
+        grouped = jax.tree.map(
+            lambda x: x.reshape(n_groups, every, *x.shape[1:]), params["mamba"])
+        ssm_g = cache["ssm"].reshape(n_groups, every, *cache["ssm"].shape[1:])
+        conv_g = cache["conv"].reshape(n_groups, every, *cache["conv"].shape[1:])
+
+        def group_fn(h, xs):
+            gp, st, cst, ck, cv = xs
+            h, (st, cst) = lax.scan(mamba_body, h, (gp, st, cst))
+            h, ck, cv = _shared_block_decode(h, h0, params, cfg, ck, cv, pos)
+            return h, (st, cst, ck, cv)
+
+        h, (st, cst, ck, cv) = lax.scan(
+            group_fn, h, (grouped, ssm_g, conv_g, cache["k"], cache["v"]))
+        new_cache = dict(cache, ssm=st.reshape(-1, *st.shape[2:]),
+                         conv=cst.reshape(-1, *cst.shape[2:]),
+                         k=ck, v=cv, pos=pos + 1)
+    else:
+        h, (st, cst) = lax.scan(mamba_body, h,
+                                (params["mamba"], cache["ssm"], cache["conv"]))
+        new_cache = dict(cache, ssm=st, conv=cst, pos=pos + 1)
+
+    h = blocks.rms_norm(h, params["final_norm"])
+    return apply_bayes_head(params, h[:, 0], cfg, pos), new_cache

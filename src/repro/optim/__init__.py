@@ -1,0 +1,5 @@
+from repro.optim.adamw import AdamWConfig, adamw_update, global_norm, init_opt_state
+from repro.optim.schedules import warmup_cosine
+
+__all__ = ["AdamWConfig", "adamw_update", "global_norm", "init_opt_state",
+           "warmup_cosine"]

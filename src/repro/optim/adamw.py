@@ -1,0 +1,87 @@
+"""AdamW with global-norm clipping (pure JAX, f32 master weights).
+
+Optimizer moments are plain pytrees sharded exactly like the parameters
+(FSDP on 'data' + TP on 'model' — ZeRO-style), so a 235B model's Adam
+state distributes at ~3.7 GB/device on the production mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # §Perf I2: keep compute params in bf16 and the f32 master copy in
+    # the optimizer state — halves FSDP all-gather wire bytes, gradient
+    # all-reduce bytes, and per-step weight HBM reads.
+    master_weights: bool = False
+
+
+def init_opt_state(params, master_weights: bool = False) -> dict:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "mu": jax.tree.map(f32, params),
+        "nu": jax.tree.map(f32, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+    if master_weights:
+        # caller passes f32 init params; compute copy is cast afterwards
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig, lr_scale=1.0):
+    """Returns (new_params, new_state, metrics).
+
+    With ``master_weights`` the f32 master in ``state`` is the source of
+    truth; ``params`` (bf16) are regenerated from it each step.
+    """
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    count = state["count"] + 1
+    c1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / c1
+        vh = v / c2
+        src = master if master is not None else p.astype(jnp.float32)
+        step = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * src
+        new_master = src - lr * step
+        return new_master.astype(p.dtype), m, v, new_master
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["mu"])
+    flat_v = tdef.flatten_up_to(state["nu"])
+    flat_w = (tdef.flatten_up_to(state["master"])
+              if "master" in state else [None] * len(flat_p))
+    out = [upd(p, g, m, v, w) for p, g, m, v, w in
+           zip(flat_p, flat_g, flat_m, flat_v, flat_w)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_state = {"mu": tdef.unflatten([o[1] for o in out]),
+                 "nu": tdef.unflatten([o[2] for o in out]),
+                 "count": count}
+    if "master" in state:
+        new_state["master"] = tdef.unflatten([o[3] for o in out])
+    return new_p, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,6 @@
+from repro.runtime.straggler import StragglerConfig, StragglerMonitor
+from repro.runtime.elastic import (make_elastic_mesh, remesh_train_state,
+                                   remesh_tree, shrink_mesh)
+
+__all__ = ["StragglerConfig", "StragglerMonitor", "make_elastic_mesh",
+           "remesh_train_state", "remesh_tree", "shrink_mesh"]

@@ -1,0 +1,71 @@
+"""Straggler detection and mitigation policy.
+
+At 1000+ nodes, per-step time is gated by the slowest participant.  The
+monitor tracks an EMA of step durations and flags outliers; the policy
+layer decides what to do — in this framework:
+
+  * ``log``      — record only (default; feeds the metrics stream),
+  * ``rebatch``  — shrink the straggler's microbatch share (cooperating
+    with gradient accumulation),
+  * ``exclude``  — vote the node out and trigger an elastic re-mesh
+    (runtime/elastic.py) from the last checkpoint.
+
+On a single-host dev box the monitor sees jitted step times; the unit
+tests drive it with synthetic timings.  The decision logic is identical
+at scale — detection is host-local and cheap (no collective).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+@dataclasses.dataclass
+class StragglerConfig:
+    ema_decay: float = 0.9
+    threshold: float = 2.0      # flag when step > threshold × EMA
+    patience: int = 3           # consecutive flags before escalation
+    policy: str = "log"         # log | rebatch | exclude
+
+
+class StragglerMonitor:
+    def __init__(self, cfg: StragglerConfig = StragglerConfig()):
+        self.cfg = cfg
+        self.ema: float | None = None
+        self.flags = 0
+        self.events: list[dict] = []
+        self._t0: float | None = None
+
+    def start_step(self) -> None:
+        self._t0 = time.monotonic()
+
+    def end_step(self, step: int, duration: float | None = None) -> dict:
+        """Record a step; returns {'flagged': bool, 'action': str|None}."""
+        if duration is None:
+            duration = time.monotonic() - (self._t0 or time.monotonic())
+        out = {"step": step, "duration": duration, "flagged": False,
+               "action": None}
+        if self.ema is None:
+            self.ema = duration
+            return out
+        if duration > self.cfg.threshold * self.ema:
+            self.flags += 1
+            out["flagged"] = True
+            if self.flags >= self.cfg.patience:
+                out["action"] = self.cfg.policy
+                self.events.append(out)
+                self.flags = 0
+        else:
+            self.flags = 0
+        # EMA excludes flagged steps so a long stall doesn't poison it.
+        if not out["flagged"]:
+            d = self.cfg.ema_decay
+            self.ema = d * self.ema + (1 - d) * duration
+        return out
+
+    def microbatch_share(self, base: int) -> int:
+        """rebatch policy: halve this node's microbatch after escalation."""
+        if self.cfg.policy != "rebatch" or not self.events:
+            return base
+        return max(1, base // 2)

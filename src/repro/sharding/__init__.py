@@ -1,0 +1,6 @@
+from repro.sharding.specs import (batch_specs, cache_specs, dp_axes,
+                                  logits_spec, opt_state_specs, param_specs,
+                                  to_named, validate_specs)
+
+__all__ = ["batch_specs", "cache_specs", "dp_axes", "logits_spec",
+           "opt_state_specs", "param_specs", "to_named", "validate_specs"]

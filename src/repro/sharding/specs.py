@@ -1,0 +1,241 @@
+"""Sharding rules: parameter / optimizer / activation / cache specs.
+
+Mesh axes: ('pod', 'data', 'model') multi-pod, ('data', 'model') single
+pod.  Conventions (DESIGN.md §8):
+
+  * batch dims            -> ('pod','data')   [DP across pods + hosts]
+  * weight "in" dims      -> 'data'           [FSDP / ZeRO: weights and
+                                               Adam moments sharded]
+  * weight "out"/TP dims  -> 'model'          [Megatron-style TP: heads,
+                                               d_ff, experts, vocab]
+  * KV-cache sequence dim -> 'model'          [SP: the cache is the
+                                               dominant decode tensor;
+                                               sharding S keeps kv-head-
+                                               count restrictions out of
+                                               the memory equation]
+  * SSM state             -> heads (or headdim) on 'model'
+
+Every rule degrades gracefully: a dim is only sharded when the axis size
+divides it (``_ok``); otherwise the next candidate dim is tried, then
+replication.  This is what lets one rule set serve vocab=50280 and
+kv_heads=4 alongside 128-expert MoEs on the same 512-chip mesh.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.utils.trees import tree_map_with_name
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def dp_axes(mesh: Mesh):
+    """The data-parallel batch axes present in this mesh."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _ok(dim: int, mesh: Mesh, axis) -> bool:
+    return dim % _axis_size(mesh, axis) == 0
+
+
+def _spec2(shape, mesh, in_axis="data", out_axis="model", lead=0):
+    """[lead..., in, out] weight spec with divisibility fallback."""
+    dims = [None] * lead
+    d_in, d_out = shape[lead], shape[lead + 1]
+    dims.append(in_axis if _ok(d_in, mesh, in_axis) else None)
+    dims.append(out_axis if _ok(d_out, mesh, out_axis) else None)
+    return P(*dims)
+
+
+# ----------------------------------------------------------------------
+# Parameters
+# ----------------------------------------------------------------------
+def param_spec_for(name: str, shape: tuple, mesh: Mesh) -> P:
+    """Single-leaf rule. ``name`` is the slash path in the params tree;
+    leading dim may be a scanned layer stack (handled via ``lead``)."""
+    lead = 1 if re.search(r"(^|/)(blocks|blocks_cross|mamba|encoder/blocks)/",
+                          name) else 0
+    base = name.rsplit("/", 1)[-1]
+
+    # --- MoE experts -------------------------------------------------
+    if re.search(r"moe/(wi|wg|wo)$", name):
+        e, d1, d2 = shape[lead], shape[lead + 1], shape[lead + 2]
+        if _ok(e, mesh, "model"):                 # expert parallelism
+            dims = [None] * lead + ["model",
+                                    "data" if _ok(d1, mesh, "data") else None,
+                                    None]
+        else:                                     # TP inside experts
+            if base == "wo":                      # [E, F, D]
+                dims = [None] * lead + [None,
+                                        "model" if _ok(d1, mesh, "model") else None,
+                                        "data" if _ok(d2, mesh, "data") else None]
+            else:                                 # [E, D, F]
+                dims = [None] * lead + [None,
+                                        "data" if _ok(d1, mesh, "data") else None,
+                                        "model" if _ok(d2, mesh, "model") else None]
+        return P(*dims)
+    if base == "router":
+        return _spec2(shape, mesh, "data", None, lead)
+
+    # --- attention / mlp ---------------------------------------------
+    if base in ("wq", "wk", "wv", "wi", "wg"):
+        return _spec2(shape, mesh, "data", "model", lead)
+    if base in ("wo", "out_proj"):
+        return _spec2(shape, mesh, "model", "data", lead)
+    if base in ("bq", "bk", "bv", "bi"):
+        d = shape[lead]
+        return P(*([None] * lead + ["model" if _ok(d, mesh, "model") else None]))
+
+    # --- embeddings / head -------------------------------------------
+    if base == "embed":
+        return _spec2(shape, mesh, "model", "data", 0)     # [V, D]
+    if name.startswith("head/") or "/head/" in name:
+        return _spec2(shape, mesh, "data", "model", 0)     # [D, Vp]
+    if base == "pos_embed":
+        s, d = shape
+        return P("data" if _ok(s, mesh, "data") else None, None)
+
+    # --- mamba ---------------------------------------------------------
+    if base == "in_proj":
+        return _spec2(shape, mesh, "data", "model", lead)
+    if base == "conv_w":
+        c = shape[lead]
+        return P(*([None] * lead
+                   + ["model" if _ok(c, mesh, "model") else None, None]))
+    if base in ("conv_b", "norm"):
+        c = shape[lead]
+        return P(*([None] * lead + ["model" if _ok(c, mesh, "model") else None]))
+    if base in ("shared_w_in", "shared_w_out"):
+        return _spec2(shape, mesh, "data", "model", 0)
+
+    # --- everything else (norm scales, small vectors): replicate ------
+    return P(*([None] * len(shape)))
+
+
+def param_specs(abstract_params: Any, mesh: Mesh):
+    return tree_map_with_name(
+        lambda name, leaf: param_spec_for(name, tuple(leaf.shape), mesh),
+        abstract_params)
+
+
+def opt_state_specs(abstract_opt: Any, mesh: Mesh):
+    """Adam moments shard exactly like their parameters."""
+    def rule(name, leaf):
+        if name.endswith("count") or leaf.ndim == 0:
+            return P()
+        # strip the leading "mu/" or "nu/" prefix to reuse param rules
+        stripped = name.split("/", 1)[1] if "/" in name else name
+        return param_spec_for(stripped, tuple(leaf.shape), mesh)
+    return tree_map_with_name(rule, abstract_opt)
+
+
+# ----------------------------------------------------------------------
+# Activations / batches / caches
+# ----------------------------------------------------------------------
+def batch_specs(abstract_batch: Any, mesh: Mesh):
+    """tokens/labels [B, S] -> P(dp, None); stub embeddings likewise."""
+    dp = dp_axes(mesh)
+
+    def rule(name, leaf):
+        b = leaf.shape[0]
+        first = dp if _ok(b, mesh, dp) else (
+            "data" if _ok(b, mesh, "data") else None)
+        return P(first, *([None] * (leaf.ndim - 1)))
+
+    return tree_map_with_name(rule, abstract_batch)
+
+
+def cache_specs(abstract_cache: Any, mesh: Mesh):
+    """KV caches: batch->dp, sequence->'model' (SP); SSM state: heads (or
+    headdim) -> 'model'; conv state: channels -> 'model'."""
+    dp = dp_axes(mesh)
+
+    def rule(name, leaf):
+        shape = leaf.shape
+        if leaf.ndim == 0:      # pos counter
+            return P()
+        base = name.rsplit("/", 1)[-1]
+        if base in ("k", "v", "xk", "xv"):
+            # [L, B, S, Hkv, dh] (or [G, ...])
+            l_, b, s, hkv, dh = shape
+            bax = dp if _ok(b, mesh, dp) else (
+                "data" if _ok(b, mesh, "data") else None)
+            sax = "model" if _ok(s, mesh, "model") else None
+            return P(None, bax, sax, None, None)
+        if base == "ssm":
+            # [L, B, H, Pd, N]
+            l_, b, h, pd, n = shape
+            bax = dp if _ok(b, mesh, dp) else (
+                "data" if _ok(b, mesh, "data") else None)
+            if _ok(h, mesh, "model"):
+                return P(None, bax, "model", None, None)
+            if _ok(pd, mesh, "model"):
+                return P(None, bax, None, "model", None)
+            return P(None, bax, None, None, None)
+        if base == "conv":
+            # [L, B, C, K-1]
+            l_, b, c, k = shape
+            bax = dp if _ok(b, mesh, dp) else (
+                "data" if _ok(b, mesh, "data") else None)
+            cax = "model" if _ok(c, mesh, "model") else None
+            return P(None, bax, cax, None)
+        return P(*([None] * leaf.ndim))
+
+    return tree_map_with_name(rule, abstract_cache)
+
+
+def logits_spec(mesh: Mesh, batch: int, with_samples: bool = True):
+    """[R, B, Vp] logit samples: batch on dp, vocab on model."""
+    dp = dp_axes(mesh)
+    bax = dp if batch % _axis_size(mesh, dp) == 0 else (
+        "data" if batch % _axis_size(mesh, "data") == 0 else None)
+    if with_samples:
+        return P(None, bax, "model")
+    return P(bax, "model")
+
+
+def to_named(tree_of_specs: Any, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def validate_specs(abstract_tree: Any, specs: Any, mesh: Mesh) -> list[str]:
+    """Return a list of (path, problem) strings for non-divisible specs."""
+    problems: list[str] = []
+
+    def check(name, leaf):
+        spec = specs_by_name.get(name)
+        return leaf
+
+    flat_specs = {}
+    def gather(name, s):
+        flat_specs[name] = s
+        return s
+    tree_map_with_name(gather, specs)
+    specs_by_name = flat_specs
+
+    def rule(name, leaf):
+        spec = specs_by_name[name]
+        for dim, axis in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+            if axis is not None and dim % _axis_size(mesh, axis) != 0:
+                problems.append(f"{name}: dim {dim} not divisible by {axis}")
+        return leaf
+
+    tree_map_with_name(rule, abstract_tree)
+    return problems

@@ -1,0 +1,17 @@
+from repro.utils.trees import (
+    tree_bytes,
+    tree_count,
+    tree_map_with_name,
+    tree_paths,
+    flatten_dict,
+    unflatten_dict,
+)
+
+__all__ = [
+    "tree_bytes",
+    "tree_count",
+    "tree_map_with_name",
+    "tree_paths",
+    "flatten_dict",
+    "unflatten_dict",
+]

@@ -1,0 +1,94 @@
+"""Pytree utilities shared across the framework.
+
+We deliberately avoid flax/optax — parameter collections are plain nested
+dicts of jnp arrays, and these helpers provide the small amount of tree
+plumbing the rest of the framework needs (path-aware maps for sharding
+rules, size accounting for the roofline/energy models, and dict
+flattening for checkpoint serialization).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Mapping
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    """Render a jax key path as 'a/b/0/c'."""
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(str(p.name))
+        else:  # FlattenedIndexKey and friends
+            parts.append(str(getattr(p, "key", p)))
+    return "/".join(parts)
+
+
+def tree_map_with_name(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+    """Map ``fn(path_string, leaf)`` over a pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: fn(_path_str(path), leaf), tree
+    )
+
+
+def tree_paths(tree: Any) -> list[str]:
+    leaves, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [_path_str(path) for path, _ in leaves]
+
+
+def tree_count(tree: Any) -> int:
+    """Total number of elements across all leaves."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes across all leaves (works on ShapeDtypeStruct too)."""
+    total = 0
+    for x in jax.tree_util.tree_leaves(tree):
+        total += int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
+    return total
+
+
+def flatten_dict(tree: Mapping[str, Any], sep: str = "/") -> dict[str, Any]:
+    """Flatten nested dicts AND lists/tuples (list indices become
+    '#<i>' segments so unflatten can reconstruct the container type)."""
+    out: dict[str, Any] = {}
+
+    def rec(prefix: str, node: Any) -> None:
+        if isinstance(node, Mapping):
+            for k, v in node.items():
+                rec(f"{prefix}{sep}{k}" if prefix else str(k), v)
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                key = f"#{i}"
+                rec(f"{prefix}{sep}{key}" if prefix else key, v)
+        else:
+            out[prefix] = node
+
+    rec("", tree)
+    return out
+
+
+def unflatten_dict(flat: Mapping[str, Any], sep: str = "/") -> dict[str, Any]:
+    out: dict[str, Any] = {}
+    for key, value in flat.items():
+        parts = key.split(sep)
+        node = out
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = value
+
+    def fix(node):
+        if isinstance(node, dict):
+            if node and all(k.startswith("#") for k in node):
+                return [fix(node[f"#{i}"]) for i in range(len(node))]
+            return {k: fix(v) for k, v in node.items()}
+        return node
+
+    return fix(out)

@@ -1,0 +1,47 @@
+"""int8 + error-feedback gradient compression: mechanics + convergence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.compression import (compress_grads, compressed_gradients,
+                                     dequantize_leaf, init_error_state,
+                                     quantize_leaf)
+
+
+def test_quantize_roundtrip_error_bound():
+    g = jax.random.normal(jax.random.PRNGKey(0), (256,))
+    codes, scale = quantize_leaf(g)
+    assert codes.dtype == jnp.int8
+    err = np.abs(np.asarray(dequantize_leaf(codes, scale) - g))
+    assert err.max() <= float(scale) / 2 + 1e-6
+
+
+def test_error_feedback_accumulates():
+    """With error feedback, the *running sum* of compressed gradients
+    tracks the running sum of true gradients (the EF guarantee)."""
+    key = jax.random.PRNGKey(1)
+    g_sum = comp_sum = 0.0
+    err = {"w": jnp.zeros((64,))}
+    for i in range(50):
+        key, k = jax.random.split(key)
+        g = {"w": jax.random.normal(k, (64,)) * 0.01}
+        deq, err = compressed_gradients(g, err)
+        g_sum = g_sum + g["w"]
+        comp_sum = comp_sum + deq["w"]
+    resid = np.abs(np.asarray(comp_sum - g_sum)).max()
+    # Residual bounded by one quantization step, NOT growing with steps.
+    assert resid < 0.01 * 0.02, resid
+
+
+def test_compressed_training_converges():
+    """Train the same tiny model with and without compression; final
+    losses must be close (the paper-scale cross-pod reduction case)."""
+    from repro.launch.train import train
+    exact = train("qwen3-1.7b", smoke=True, steps=30, batch=4, seq=32,
+                  compress=False)
+    comp = train("qwen3-1.7b", smoke=True, steps=30, batch=4, seq=32,
+                 compress=True)
+    assert exact["final_loss"] < exact["history"][0]["loss"]  # it learns
+    assert abs(comp["final_loss"] - exact["final_loss"]) < 0.15 * max(
+        exact["final_loss"], 1e-3)

@@ -1,0 +1,147 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import clt_grng as g
+from repro.core import quant as q
+from repro.core.lfsr import (indexed_selections, lfsr_states, swapper_select)
+from repro.core.uncertainty import (adaptive_calibration_errors, aurc,
+                                    risk_coverage_curve)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ----------------------------------------------------------------------
+# selection network invariants
+# ----------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(st.integers(min_value=1, max_value=0xFFFF))
+def test_swapper_always_selects_exactly_8(state):
+    sel = swapper_select(jnp.uint32(state))
+    assert float(sel.sum()) == 8.0
+    assert set(np.asarray(sel).tolist()) <= {0.0, 1.0}
+
+
+@settings(**SETTINGS)
+@given(st.integers(min_value=1, max_value=0xFFFF),
+       st.integers(min_value=1, max_value=200))
+def test_lfsr_never_hits_zero_and_cycles(seed, steps):
+    states = np.asarray(lfsr_states(seed, steps))
+    assert (states != 0).all()
+    assert (states <= 0xFFFF).all()
+
+
+@settings(**SETTINGS)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_indexed_selections_exactly_8(idx):
+    sel = indexed_selections(0xACE1, jnp.uint32(idx))
+    assert float(sel.sum()) == 8.0
+
+
+# ----------------------------------------------------------------------
+# CLT-GRNG invariants
+# ----------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(st.integers(min_value=0, max_value=2**20),
+       st.integers(min_value=1, max_value=6))
+def test_eps_deterministic_and_seed_sensitive(seed, r):
+    cfg = g.GRNGConfig(seed=seed)
+    a = g.eps(cfg, 8, 8, r)
+    b = g.eps(cfg, 8, 8, r)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    other = g.eps(g.GRNGConfig(seed=seed + 1), 8, 8, r)
+    assert not np.array_equal(np.asarray(a), np.asarray(other))
+
+
+@settings(**SETTINGS)
+@given(st.integers(min_value=0, max_value=2**20))
+def test_device_currents_positive_and_bounded(seed):
+    cfg = g.GRNGConfig(seed=seed)
+    cur = np.asarray(g.device_currents_grid(cfg, 16, 16))
+    assert (cur > 0).all()
+    assert (cur < cfg.i_lo + cfg.delta_i + 4 * cfg.gamma).all()
+
+
+def test_raw_sum_subset_bounds():
+    """Any 8-of-16 sum lies between the 8 smallest and 8 largest currents."""
+    cfg = g.GRNGConfig()
+    cur = np.asarray(g.device_currents_grid(cfg, 4, 4))      # [4,4,16]
+    raw = np.asarray(g.raw_sums(cfg, 4, 4, 32))              # [32,4,4]
+    lo = np.sort(cur, axis=-1)[..., :8].sum(-1)
+    hi = np.sort(cur, axis=-1)[..., 8:].sum(-1)
+    assert (raw >= lo[None] - 1e-4).all()
+    assert (raw <= hi[None] + 1e-4).all()
+
+
+# ----------------------------------------------------------------------
+# quantization invariants
+# ----------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(st.integers(min_value=2, max_value=8), st.integers(0, 2**16))
+def test_fake_quant_idempotent_and_bounded(bits, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64,))
+    scale = q.symmetric_scale(x, bits)
+    xq = q.fake_quant(x, scale, bits)
+    xqq = q.fake_quant(xq, scale, bits)
+    np.testing.assert_allclose(np.asarray(xq), np.asarray(xqq), atol=1e-6)
+    assert float(jnp.abs(xq - x).max()) <= float(scale) * 0.5 + 1e-6
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**16))
+def test_adc_quantize_monotone(seed):
+    x = np.sort(np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (64,))))
+    cfg = q.QuantConfig()
+    y = np.asarray(q.adc_quantize(jnp.asarray(x), jnp.float32(3.0), cfg))
+    assert (np.diff(y) >= -1e-6).all()          # monotone
+    assert (np.abs(y) <= 3.0 * (1 + 1 / 31) + 1e-6).all()  # clipped
+
+
+# ----------------------------------------------------------------------
+# UQ metric invariants
+# ----------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(st.integers(0, 2**16))
+def test_risk_coverage_perfect_ranking_has_lower_aurc(seed):
+    key = jax.random.PRNGKey(seed)
+    n = 128
+    correct = jax.random.bernoulli(key, 0.7, (n,))
+    conf_perfect = correct.astype(jnp.float32) + 0.01 * jax.random.uniform(
+        key, (n,))
+    conf_random = jax.random.uniform(jax.random.fold_in(key, 1), (n,))
+    assert float(aurc(conf_perfect, correct)) <= float(
+        aurc(conf_random, correct)) + 1e-6
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**16))
+def test_full_coverage_risk_is_error_rate(seed):
+    key = jax.random.PRNGKey(seed)
+    correct = jax.random.bernoulli(key, 0.6, (200,))
+    conf = jax.random.uniform(jax.random.fold_in(key, 1), (200,))
+    cov, risk = risk_coverage_curve(conf, correct)
+    np.testing.assert_allclose(float(risk[-1]),
+                               1.0 - float(correct.mean()), atol=1e-6)
+    assert float(cov[-1]) == 1.0
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**16))
+def test_calibration_errors_in_unit_interval(seed):
+    key = jax.random.PRNGKey(seed)
+    conf = jax.random.uniform(key, (256,), minval=0.5, maxval=1.0)
+    correct = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.8, (256,))
+    aece, amce = adaptive_calibration_errors(conf, correct)
+    assert 0.0 <= float(aece) <= 1.0
+    assert float(aece) <= float(amce) + 1e-6
+
+
+def test_perfectly_calibrated_has_low_aece():
+    key = jax.random.PRNGKey(0)
+    conf = jax.random.uniform(key, (20000,), minval=0.05, maxval=0.95)
+    correct = jax.random.bernoulli(jax.random.fold_in(key, 1), conf)
+    aece, _ = adaptive_calibration_errors(conf, correct)
+    assert float(aece) < 0.05

@@ -1,0 +1,146 @@
+"""Per-kernel allclose sweeps: Pallas (interpret) vs pure-jnp oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import clt_grng as g
+from repro.core.quant import QuantConfig
+from repro.kernels import ops, ref
+
+CFG = g.GRNGConfig()
+
+
+# ----------------------------------------------------------------------
+# clt_grng kernel
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(128, 128), (256, 384), (200, 130),
+                                   (64, 512), (1, 1)])
+@pytest.mark.parametrize("r", [1, 8])
+def test_grng_eps_matches_oracle(shape, r):
+    k, n = shape
+    got = ops.grng_eps(CFG, k, n, r, interpret=True)
+    want = ref.grng_eps_ref(CFG, k, n, r)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_grng_eps_offsets_match_global_grid():
+    """Block offsets must reproduce the corresponding global sub-block."""
+    full = ref.grng_eps_ref(CFG, 64, 64, 4)
+    blk = ops.grng_eps(CFG, 32, 32, 4, row0=16, col0=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(blk),
+                               np.asarray(full[:, 16:48, 16:48]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_grng_eps_sample_offset():
+    a = ops.grng_eps(CFG, 32, 32, 6, sample0=0, interpret=True)
+    b = ops.grng_eps(CFG, 32, 32, 2, sample0=4, interpret=True)
+    np.testing.assert_allclose(np.asarray(a[4:]), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# bayes_mvm kernel
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(4, 128, 128), (8, 256, 192),
+                                   (3, 130, 70)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("mode", ["rank16", "paper"])
+def test_bayes_mvm_matches_oracle(shape, dtype, mode):
+    b, k, n = shape
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (b, k), dtype)
+    mu = (jax.random.normal(k2, (k, n)) * 0.05).astype(dtype)
+    sigma = (jax.nn.softplus(jax.random.normal(k3, (k, n)) - 2.0) * 0.1).astype(dtype)
+    r = 5
+    got = ops.bayes_head_mvm(x, mu, sigma, CFG, r, mode=mode, interpret=True)
+    want = ref.bayes_mvm_ref(x, mu, sigma, CFG, r)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol * 10)
+
+
+def test_modes_agree_exactly():
+    """rank16 and paper modes must produce the SAME samples (not just the
+    same distribution) — the rank-16 factorization is exact."""
+    b, k, n, r = 4, 128, 128, 7
+    key = jax.random.PRNGKey(1)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (b, k), jnp.float32)
+    mu = jax.random.normal(k2, (k, n)) * 0.05
+    sigma = jax.nn.softplus(jax.random.normal(k3, (k, n)) - 2.0) * 0.1
+    a = ops.bayes_head_mvm(x, mu, sigma, CFG, r, mode="rank16", interpret=True)
+    p = ops.bayes_head_mvm(x, mu, sigma, CFG, r, mode="paper", interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(p),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_bayes_mvm_adc_matches_oracle():
+    qcfg = QuantConfig(enabled=True)
+    b, k, n, r = 4, 128, 128, 3
+    key = jax.random.PRNGKey(2)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (b, k), jnp.float32)
+    mu = jax.random.normal(k2, (k, n)) * 0.05
+    sigma = jax.nn.softplus(jax.random.normal(k3, (k, n)) - 2.0) * 0.1
+    got = ops.bayes_head_mvm(x, mu, sigma, CFG, r, mode="paper", qcfg=qcfg,
+                             interpret=True)
+    want = ref.bayes_mvm_adc_ref(x, mu, sigma, CFG, qcfg, r)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_bayes_mvm_matches_core_sampling():
+    """Kernel path ≡ core/sampling.py jnp path (serving integration)."""
+    from repro.core.sampling import BayesHeadConfig, logit_samples
+    b, k, n, r = 2, 128, 192, 4
+    key = jax.random.PRNGKey(3)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (b, k), jnp.float32)
+    mu = jax.random.normal(k2, (k, n)) * 0.05
+    sigma = jax.nn.softplus(jax.random.normal(k3, (k, n)) - 2.0) * 0.1
+    hcfg = BayesHeadConfig(num_samples=r, mode="rank16", grng=CFG,
+                           compute_dtype=jnp.float32)
+    head = {"mu_prime": mu, "sigma": sigma}
+    want = logit_samples(head, x, hcfg)
+    got = ops.bayes_head_mvm(x, mu, sigma, CFG, r, mode="rank16",
+                             interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------------------
+# cim_mvm kernel
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(8, 128, 128), (4, 256, 96), (130, 192, 257)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cim_mvm_matches_oracle(shape, dtype):
+    b, k, n = shape
+    qcfg = QuantConfig(enabled=True)
+    key = jax.random.PRNGKey(4)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (b, k), dtype)
+    w = (jax.random.normal(k2, (k, n)) * 0.05).astype(dtype)
+    got = ops.cim_matmul(x, w, qcfg, interpret=True)
+    x32, w32 = x.astype(jnp.float32), w.astype(jnp.float32)
+    fs = ops._measured_full_scale(x, w, qcfg)
+    want = ref.cim_mvm_ref(x32, w32, qcfg, fs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_cim_mvm_snr_reasonable():
+    """6-bit chunked ADC keeps the MVM SNR high enough for inference."""
+    qcfg = QuantConfig(enabled=True)
+    key = jax.random.PRNGKey(5)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (32, 512))
+    w = jax.random.normal(k2, (512, 256)) * 0.05
+    y = ops.cim_matmul(x, w, qcfg, interpret=True)
+    exact = x @ w
+    snr = 10 * np.log10(float(jnp.mean(exact**2) / jnp.mean((y - exact) ** 2)))
+    assert snr > 15.0, f"ADC path SNR too low: {snr:.1f} dB"

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from repro.core.clt_grng import GRNGConfig
 from repro.core.sampling import (BayesHeadConfig, logit_samples_paper,
-                                 logit_samples_rank16)
+                                 logit_samples_rank16, prepare_serving_head)
 from repro.launch.hlo_analysis import analyze
 
 B, K, N = 8, 512, 2048
@@ -47,6 +47,41 @@ def bench() -> list[tuple[str, float, str]]:
         out.append((f"kernel_mode_flops_R{r}", dt_us,
                     f"paper={f_paper:.3e};rank16={f_rank:.3e};"
                     f"speedup={f_paper / f_rank:.2f}x"))
+
+    # basis hoisting: decode-loop FLOPs with the 16 σ⊙I_j matrices
+    # precomputed at deployment (prepare_serving_head hoist_basis) vs
+    # rehashed per call — the serving engine reuses them every step.
+    import dataclasses
+    hcfg = BayesHeadConfig(num_samples=8, grng=cfg0,
+                           compute_dtype=jnp.float32)
+    hcfg_h = dataclasses.replace(hcfg, hoist_basis=True)
+    mu_r = jax.random.normal(k1, (K, N)) * 0.02
+    sg_r = jax.nn.softplus(jax.random.normal(k2, (K, N)) - 3) * 0.1
+    head_hoist = prepare_serving_head(mu_r, sg_r, hcfg_h)
+    t0 = time.time()
+    f_rehash = _flops(
+        lambda h, xx: logit_samples_rank16(h, xx, hcfg), head, x)
+    f_hoist = _flops(
+        lambda h, xx: logit_samples_rank16(h, xx, hcfg_h), head_hoist, x)
+    out.append(("kernel_basis_hoist_flops_R8", (time.time() - t0) * 1e6,
+                f"rehash={f_rehash:.3e};hoisted={f_hoist:.3e};"
+                f"saving={f_rehash / f_hoist:.2f}x"))
+
+    def _wall(fn, *args, reps=20):
+        fn(*args)[0].block_until_ready()   # compile + warm
+        t0 = time.time()
+        for _ in range(reps):
+            r = fn(*args)
+        jax.tree.map(lambda a: a.block_until_ready(), r)
+        return (time.time() - t0) * 1e6 / reps
+
+    j_rehash = jax.jit(lambda h, xx: logit_samples_rank16(h, xx, hcfg))
+    j_hoist = jax.jit(lambda h, xx: logit_samples_rank16(h, xx, hcfg_h))
+    us_rehash = _wall(j_rehash, head, x)
+    us_hoist = _wall(j_hoist, head_hoist, x)
+    out.append(("kernel_basis_hoist_walltime", us_hoist,
+                f"rehash_us={us_rehash:.1f};hoisted_us={us_hoist:.1f};"
+                f"speedup={us_rehash / us_hoist:.2f}x"))
 
     # interpret-mode wall time of the fused Pallas kernel vs oracle
     from repro.kernels import ops, ref

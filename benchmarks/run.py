@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
   fig16_uq           Fig.16    SARD accuracy + UQ (CNN vs BNN vs CLT)
   table2_corr        Fig.17/II corruption robustness
   kernel_bench       --        rank16-vs-paper FLOP scaling, kernels
+  serving_bench      --        adaptive-R vs fixed-R serving engine
   roofline           --        3-term roofline over dry-run artifacts
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only <module>] [--fast]
@@ -25,11 +26,12 @@ MODULES = [
     "fig9_distribution",
     "sec5a_energy",
     "kernel_bench",
+    "serving_bench",
     "fig16_uq",
     "table2_corr",
     "roofline",
 ]
-FAST_SKIP = {"fig16_uq", "table2_corr"}   # require SAR training
+FAST_SKIP = {"fig16_uq", "table2_corr", "serving_bench"}  # SAR training
 
 
 def main() -> None:

@@ -1,10 +1,10 @@
-"""Uncertainty-aware LM serving: batched prefill + decode with the
-Bayesian head sampling R CLT-GRNG draws per token.
+"""Uncertainty-aware LM serving through the continuous-batching engine.
 
-Every generated token comes with predictive confidence and mutual
-information (epistemic uncertainty); tokens above the MI threshold are
-flagged "needs verification" — the paper's SAR decision (Fig. 1) at the
-token level.  Compares the three head execution modes.
+Adaptive fidelity vs the paper's fixed R = 20: every token decision
+starts at a small GRNG sample count and escalates only while the
+accept / flag-for-verification triage (paper Fig. 1) is statistically
+ambiguous.  Prints per-request verdicts with confidence, mutual
+information, and the samples actually spent.
 
 Run: PYTHONPATH=src python examples/serve_uncertainty.py [--arch qwen3-0.6b]
 """
@@ -12,6 +12,7 @@ Run: PYTHONPATH=src python examples/serve_uncertainty.py [--arch qwen3-0.6b]
 import argparse
 
 from repro.launch.serve import serve
+from repro.serving import TriagePolicy
 
 
 def main() -> None:
@@ -21,17 +22,20 @@ def main() -> None:
     ap.add_argument("--gen", type=int, default=6)
     args = ap.parse_args()
 
-    for mode in ("paper", "rank16", "moment"):
+    policy = TriagePolicy(conf_threshold=0.05, mi_threshold=1.0)
+    for adaptive in (True, False):
         out = serve(args.arch, smoke=True, batch=args.batch,
-                    prompt_len=16, gen_len=args.gen, mode=mode)
-        print(f"mode={mode:7s} {out['tokens_per_s']:8.2f} tok/s  "
+                    prompt_len=16, gen_len=args.gen, adaptive=adaptive,
+                    n_requests=2 * args.batch, policy=policy)
+        name = "adaptive" if adaptive else "fixed-R20"
+        print(f"mode={name:9s} {out['tokens_per_s']:8.2f} tok/s  "
+              f"samples/token: {out['mean_samples_per_decision']:5.1f}  "
               f"flagged-for-verification: {100*out['flagged_fraction']:.1f}%")
-        if mode == "paper":
-            v = out["verdicts"][0]
-            print("   first-token verdicts:",
-                  [f"conf={float(c):.2f}/mi={float(m):.3f}"
-                   for c, m in zip(v["confidence"],
-                                   v["mutual_information"])])
+        if adaptive:
+            for v in out["verdicts"][:4]:
+                print(f"   req {v['rid']}: conf={v['confidence']:.2f} "
+                      f"mi={v['mutual_information']:.3f} "
+                      f"samples={v['n_samples']} tokens={v['n_tokens']}")
 
 
 if __name__ == "__main__":

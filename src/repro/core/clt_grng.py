@@ -81,6 +81,17 @@ def device_currents(cfg: GRNGConfig, rows: jnp.ndarray, cols: jnp.ndarray) -> jn
     return cfg.i_lo + cfg.delta_i * b + cfg.gamma * v
 
 
+def device_current_j(cfg: GRNGConfig, rows: jnp.ndarray, cols: jnp.ndarray,
+                     j) -> jnp.ndarray:
+    """Single virtual-device current I(k, n, j) — one hash per cell.
+
+    The scan-friendly slice of ``device_currents`` (used by the rank-16
+    basis construction in core/sampling.py, which visits devices one at
+    a time to bound peak memory)."""
+    h = hash3(rows, cols, jnp.asarray(j, jnp.uint32), cfg.seed)
+    return cfg.i_lo + cfg.delta_i * uniform_bit(h) + cfg.gamma * gaussianish(h)
+
+
 def device_currents_grid(cfg: GRNGConfig, n_rows: int, n_cols: int,
                          row0: int = 0, col0: int = 0) -> jnp.ndarray:
     """[n_rows, n_cols, n_devices] device currents for a coordinate block."""

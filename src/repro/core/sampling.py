@@ -47,6 +47,13 @@ class BayesHeadConfig:
     quant: q.QuantConfig = dataclasses.field(
         default_factory=lambda: q.QuantConfig(enabled=False))
     compute_dtype: Any = jnp.bfloat16
+    # Serving-time memory/compute trade: materialize the 16 σ⊙I_j basis
+    # matrices once at deployment (16× weight memory) so decode steps
+    # never recompute the device-current hashes.  The hardware analogue:
+    # the currents are *physically programmed* — reading them costs
+    # nothing; recomputing the hash per decode step models a chip that
+    # re-programs itself every inference, which is exactly wrong.
+    hoist_basis: bool = False
 
 
 def prepare_serving_head(mu: jnp.ndarray, sigma: jnp.ndarray,
@@ -54,16 +61,26 @@ def prepare_serving_head(mu: jnp.ndarray, sigma: jnp.ndarray,
     """One-time deployment transform: offset compensation + quantization.
 
     mu/sigma: [d_in, d_out] variational parameters (σ already softplus'd).
-    Returns the serving pytree {mu_prime, sigma} in compute dtype.
+    Returns the serving pytree {mu_prime, sigma} in compute dtype; with
+    ``cfg.hoist_basis`` additionally ``sigma_basis`` [d_in, d_out, 16] —
+    the fixed σ⊙I_j matrices the rank-16 sampling path mixes, hoisted so
+    a serving engine reuses them across every decode step
+    (serving/engine.py).
     """
     mu_p = compensate_mu(mu, sigma, cfg.grng, exact=True)
     if cfg.quant.enabled:
         mu_p, _ = q.quantize_mu(mu_p, cfg.quant)
         sigma, _ = q.quantize_sigma(sigma, cfg.quant)
-    return {
+    head = {
         "mu_prime": mu_p.astype(cfg.compute_dtype),
         "sigma": sigma.astype(cfg.compute_dtype),
     }
+    if cfg.hoist_basis and cfg.mode == "rank16":
+        kdim, n = sigma.shape
+        currents = g.device_currents_grid(cfg.grng, kdim, n)  # [K, N, 16]
+        head["sigma_basis"] = (
+            sigma[..., None] * currents).astype(cfg.compute_dtype)
+    return head
 
 
 def _sigma_eps_mvm(x, sigma, cfg: BayesHeadConfig, r0: int, num: int,
@@ -101,6 +118,56 @@ def logit_samples_paper(head: dict, x: jnp.ndarray, cfg: BayesHeadConfig,
     return y_mu[None] + ys
 
 
+def activation_basis(head: dict, x: jnp.ndarray, cfg: BayesHeadConfig) -> dict:
+    """Per-activation rank-16 basis cache: the expensive part of sampling.
+
+    Computes y_mu = X·µ', x_sigma = X·σ and the 16 basis products
+    M_j = X·(σ⊙I_j) once for a batch of activations.  After this, ANY
+    number of additional samples — including escalations at later
+    ``sample0`` offsets — costs only a [R,16]×[16,·] mixing contraction
+    (``mix_samples``).  This is the serving engine's per-slot cache: the
+    Bayesian-head analogue of a KV cache.
+
+    Returns {"y_mu": [B,N], "x_sigma": [B,N], "m": [B,N,16]}.
+    """
+    assert cfg.grng.granularity == "layer", "rank16 requires shared selection"
+    sigma = head["sigma"]
+    y_mu = x @ head["mu_prime"]                     # [B, N]
+    x_sigma = x @ sigma                             # [B, N]
+    if "sigma_basis" in head:                       # hoisted at deployment
+        m = jnp.einsum("bk,knj->bnj", x,
+                       head["sigma_basis"].astype(x.dtype))
+    else:
+        kdim, n = sigma.shape
+
+        def basis_mvm(_, j):
+            i_j = g.device_current_j(
+                cfg.grng,
+                jnp.arange(kdim, dtype=jnp.uint32)[:, None],
+                jnp.arange(n, dtype=jnp.uint32)[None, :], j).astype(x.dtype)
+            return 0, x @ (sigma * i_j)             # [B, N]
+
+        _, m = lax.scan(basis_mvm, 0, jnp.arange(16))   # [16, B, N]
+        m = jnp.moveaxis(m, 0, -1)                      # [B, N, 16]
+    return {"y_mu": y_mu, "x_sigma": x_sigma, "m": m}
+
+
+def mix_samples(abasis: dict, sel: jnp.ndarray, cfg: BayesHeadConfig):
+    """Turn selection vectors into logit samples against a basis cache.
+
+    sel: [R, 16] (shared stream) or [R, B, 16] (per-slot streams — a
+    serving pool whose slots sit at different stream offsets).
+    Returns [R, B, N] samples, exact w.r.t. the paper dataflow.
+    """
+    m, y_mu, x_sigma = abasis["m"], abasis["y_mu"], abasis["x_sigma"]
+    gstd, gmean = cfg.grng.sum_std, cfg.grng.sum_mean
+    if sel.ndim == 2:
+        mix = jnp.einsum("rj,bnj->rbn", sel.astype(m.dtype), m)
+    else:
+        mix = jnp.einsum("rbj,bnj->rbn", sel.astype(m.dtype), m)
+    return y_mu[None] + (mix - gmean * x_sigma[None]) / gstd
+
+
 def logit_samples_rank16(head: dict, x: jnp.ndarray, cfg: BayesHeadConfig,
                          num_samples: int | None = None, sample0: int = 0,
                          sel=None):
@@ -108,35 +175,14 @@ def logit_samples_rank16(head: dict, x: jnp.ndarray, cfg: BayesHeadConfig,
 
     Requires layer-granularity shared selection (the hardware default).
     Produces samples bit-identical in distribution to ``paper`` mode.
+    With a ``sigma_basis``-hoisted head (prepare_serving_head with
+    ``hoist_basis``) the device-current hashes are never recomputed.
     """
     assert cfg.grng.granularity == "layer", "rank16 requires shared selection"
     num = num_samples or cfg.num_samples
-    kdim, n = head["sigma"].shape
-    sigma = head["sigma"]
-    y_mu = x @ head["mu_prime"]                     # [B, N]
-    x_sigma = x @ sigma                             # [B, N]
     if sel is None:
         sel = g.selections(cfg.grng, num, sample0)  # [R, 16]
-    gstd, gmean = cfg.grng.sum_std, cfg.grng.sum_mean
-
-    def basis_mvm(j):
-        rows = jnp.arange(kdim, dtype=jnp.uint32)[:, None]
-        cols = jnp.arange(n, dtype=jnp.uint32)[None, :]
-        from repro.core.hashing import gaussianish, hash3, uniform_bit
-        h = hash3(rows, cols, jnp.uint32(j), cfg.grng.seed)
-        i_j = (cfg.grng.i_lo + cfg.grng.delta_i * uniform_bit(h)
-               + cfg.grng.gamma * gaussianish(h)).astype(x.dtype)
-        return x @ (sigma * i_j)                    # [B, N]
-
-    def body(acc, j):
-        m_j = basis_mvm(j)
-        # acc: [R, B, N] — accumulate each sample's share of basis j.
-        acc = acc + sel[:, j][:, None, None].astype(x.dtype) * m_j[None]
-        return acc, None
-
-    acc0 = jnp.zeros((num,) + y_mu.shape, x.dtype)
-    acc, _ = lax.scan(body, acc0, jnp.arange(16))
-    return y_mu[None] + (acc - gmean * x_sigma[None]) / gstd
+    return mix_samples(activation_basis(head, x, cfg), sel, cfg)
 
 
 def logit_moments(head: dict, x: jnp.ndarray, cfg: BayesHeadConfig):

@@ -34,7 +34,7 @@ import jax.numpy as jnp
 
 from repro.configs import ARCHS, SHAPES, cells_for, get_config
 from repro.launch.hlo_analysis import analyze as hlo_analyze
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, mesh_context
 from repro.launch.steps import (jit_decode_step, jit_prefill_step,
                                 jit_train_step)
 from repro.optim import AdamWConfig
@@ -135,7 +135,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
     t0 = time.time()
 
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         if shape.kind == "train":
             jitted, abstracts, _, cfg2 = jit_train_step(
                 cfg, mesh, AdamWConfig(master_weights=master_weights),

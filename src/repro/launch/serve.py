@@ -1,15 +1,32 @@
-"""Serving driver: batched uncertainty-aware generation.
+"""Serving driver: a thin CLI over the continuous-batching engine.
 
-Implements the paper's deployment story at the framework level: prefill
-a batch of prompts, decode with the Bayesian head sampling R CLT-GRNG
-draws per token, and *filter by predictive confidence* — the SAR
-"verify vs keep searching" decision (paper Fig. 1) becomes a per-token
-verdict stream: tokens whose mutual information exceeds the threshold
-are flagged as needing verification.
+The old driver here was a single-batch sequential loop spending a fixed
+R = 20 GRNG samples on every input.  It is replaced by the
+``repro.serving`` subsystem: fixed decode slots, an admission queue,
+mid-batch retirement, and an adaptive-fidelity controller that starts
+every decision at a small R and escalates only while the accept/flag
+triage is statistically ambiguous (paper Fig. 1).
+
+Two workload modes:
+
+  * LM archs (``--arch qwen3-0.6b`` etc.): continuous-batching token
+    decode; each token decision is triaged, flagged requests retire to
+    the verification queue.
+  * ``--arch sar_cnn``: the paper's aerial search-and-rescue stream —
+    synthetic SARD image patches (data/sard.py), optionally with a
+    corrupted fraction (fog/frost/motion/snow), classified through the
+    Bayesian-head CNN with per-slot escalation depths.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
-      --batch 4 --prompt-len 16 --gen 8 [--mode rank16]
+      --slots 4 --prompt-len 16 --gen 8 --requests 16 [--fixed]
+  PYTHONPATH=src python -m repro.launch.serve --arch sar_cnn \
+      --requests 128 --corrupt-frac 0.25 --corruption fog
+
+Multi-device note: wrap engine construction + run in
+``mesh_context(make_debug_mesh())`` and pass a mesh-hinted config to
+shard the pool batch across 'data' — the engine's jitted pool updates
+are ordinary jit calls and follow the ambient mesh.
 """
 
 from __future__ import annotations
@@ -19,31 +36,43 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import ARCHS, get_config
-from repro.core.uncertainty import predictive_stats
+from repro.core.energy import LayerShape
 from repro.data.tokens import TokenPipelineConfig, batch_at, stub_frames, \
     stub_image_embeds
-from repro.launch.mesh import make_debug_mesh
-from repro.launch.steps import mesh_hinted_config
-from repro.models.registry import get_api
+from repro.serving import (LMServingEngine, Request, SarServingEngine,
+                           ServingMetrics, TriagePolicy)
+
+
+def lm_layer_shapes(cfg) -> list:
+    """Analytic energy layers: d_model-square trunk approximation + the
+    Bayesian vocab head (the R-sampled part)."""
+    shapes = [LayerShape(cfg.d_model, cfg.d_model)] * (4 * cfg.n_layers)
+    shapes.append(LayerShape(cfg.d_model, cfg.vocab_padded, bayesian=True))
+    return shapes
+
+
+def sar_layer_shapes(cfg) -> list:
+    shapes, c_in = [], 1
+    for c_out in cfg.channels:
+        shapes.append(LayerShape(cfg.kernel**2 * c_in, c_out))
+        c_in = c_out
+    shapes.append(LayerShape(cfg.channels[-1], cfg.n_classes, bayesian=True))
+    return shapes
 
 
 def serve(arch: str, *, smoke: bool = True, batch: int = 4,
-          prompt_len: int = 16, gen_len: int = 8, mode: str | None = None,
-          mi_threshold: float = 0.5, seed: int = 0) -> dict:
-    import dataclasses
+          prompt_len: int = 16, gen_len: int = 8, n_requests: int | None = None,
+          adaptive: bool = True, policy: TriagePolicy | None = None,
+          seed: int = 0, cache_margin: int = 4) -> dict:
+    """LM serving through the engine. ``batch`` is the slot count."""
     cfg = get_config(arch, smoke=smoke)
-    if mode is not None:
-        cfg = dataclasses.replace(cfg, head_mode=mode)
-    mesh = make_debug_mesh()
-    cfg = mesh_hinted_config(cfg, mesh, batch)
-    api = get_api(cfg)
-
-    params = api.init(jax.random.PRNGKey(seed), cfg)
+    n_requests = n_requests or 2 * batch
+    policy = policy or TriagePolicy()
     pipe = TokenPipelineConfig(vocab=cfg.vocab, seq_len=prompt_len,
                                global_batch=batch, seed=seed)
-    prompts = batch_at(pipe, 0)["tokens"]
     extras = {}
     if cfg.family == "audio":
         extras["frames"] = stub_frames(pipe, cfg.n_frames, cfg.d_model, 0,
@@ -52,55 +81,143 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
         extras["image_embeds"] = stub_image_embeds(
             pipe, cfg.n_image_tokens, cfg.d_model, 0, batch)
 
-    decode = jax.jit(lambda p, c, t: api.decode_step(p, c, t, cfg),
-                     donate_argnums=(1,))
+    cache_len = prompt_len + gen_len * (1 + cache_margin)
+    if cfg.swa_window is not None:
+        # Rolling caches don't support mid-stream admission (engine
+        # guard); stay within the window.  Oversized prompt+gen then
+        # fails loudly in the engine's capacity check.
+        cache_len = min(cache_len, cfg.swa_window)
+    metrics = ServingMetrics(layers=lm_layer_shapes(cfg))
+    engine = LMServingEngine(
+        jax_params_init(cfg, seed), cfg, n_slots=batch,
+        prompt_len=prompt_len, cache_len=cache_len, policy=policy,
+        adaptive_mode=adaptive, metrics=metrics, extras=extras)
 
-    with jax.set_mesh(mesh):
-        t0 = time.time()
-        cache, last_h = api.prefill(params, prompts, cfg,
-                                    cache_len=prompt_len + gen_len, **extras)
-        token = prompts[:, -1:]
-        generated, verdicts = [], []
-        for _ in range(gen_len):
-            samples, cache = decode(params, cache, token)
-            stats = predictive_stats(samples)
-            token = stats["prediction"][:, None].astype(jnp.int32)
-            generated.append(token)
-            verdicts.append({
-                "confidence": stats["confidence"],
-                "mutual_information": stats["mutual_information"],
-                "needs_verification":
-                    stats["mutual_information"] > mi_threshold,
-            })
-        dt = time.time() - t0
+    rid = 0
+    t0 = time.time()
+    for step in range((n_requests + batch - 1) // batch):
+        prompts = np.asarray(batch_at(pipe, step)["tokens"])
+        for i in range(min(batch, n_requests - rid)):
+            engine.submit(Request(rid=rid, payload=prompts[i],
+                                  arrival_s=time.time(),
+                                  max_new_tokens=gen_len))
+            rid += 1
+    out = engine.run()
+    out["wall_s"] = time.time() - t0
+    out["tokens_per_s"] = out["decisions"] / out["wall_s"]
+    out["flagged_fraction"] = out.get("flag_fraction", float("nan"))
+    out["verdicts"] = [
+        {"rid": r.rid, "verdict": r.verdict, "confidence": r.confidence,
+         "mutual_information": r.mutual_information,
+         "n_samples": r.n_samples, "n_tokens": r.n_decisions}
+        for r in metrics.records]
+    return out
 
-    tokens = jnp.concatenate(generated, axis=1)
-    flags = jnp.stack([v["needs_verification"] for v in verdicts], axis=1)
-    return {
-        "tokens": tokens,
-        "verdicts": verdicts,
-        "flagged_fraction": float(flags.mean()),
-        "wall_s": dt,
-        "tokens_per_s": batch * gen_len / dt,
-    }
+
+def jax_params_init(cfg, seed: int):
+    from repro.models.registry import get_api
+    return get_api(cfg).init(jax.random.PRNGKey(seed), cfg)
+
+
+def make_sar_stream(n_requests: int, *, corrupt_frac: float = 0.0,
+                    corruption: str = "fog", severity: float = 1.0,
+                    image_size: int = 32, seed: int = 7, batch: int = 32,
+                    step0: int = 1000) -> list:
+    """Request stream over synthetic SARD, with a corrupted tail mixed in.
+
+    step0 offsets past the training stream so serving never sees
+    training images.  Returns a list of Requests with
+    ``meta={'corrupted': bool, 'label': int}``.
+    """
+    from repro.data.sard import SardConfig, batch_at as sard_batch, \
+        corrupted_batch
+    dcfg = SardConfig(image_size=image_size, seed=seed)
+    reqs, rid = [], 0
+    n_batches = (n_requests + batch - 1) // batch
+    for b in range(n_batches):
+        clean = sard_batch(dcfg, step0 + b, batch)
+        dirty = corrupted_batch(dcfg, step0 + b, batch, corruption, severity)
+        n_dirty = int(round(batch * corrupt_frac))
+        for i in range(min(batch, n_requests - rid)):
+            corrupted = i < n_dirty
+            img = (dirty if corrupted else clean)["images"][i]
+            reqs.append(Request(
+                rid=rid, payload=np.asarray(img), arrival_s=time.time(),
+                meta={"corrupted": corrupted,
+                      "label": int(clean["labels"][i])}))
+            rid += 1
+    return reqs
+
+
+def serve_sar(*, n_requests: int = 128, n_slots: int = 32,
+              adaptive: bool = True, policy: TriagePolicy | None = None,
+              corrupt_frac: float = 0.0, corruption: str = "fog",
+              params=None, cfg=None, seed: int = 0) -> dict:
+    """SAR image-stream serving. Untrained params unless provided."""
+    from repro.models.sar_cnn import SarCnnConfig, init_sar_cnn
+    cfg = cfg or SarCnnConfig()
+    if params is None:
+        params = init_sar_cnn(jax.random.PRNGKey(3 + seed), cfg)
+    policy = policy or TriagePolicy(conf_threshold=0.7, mi_threshold=0.05)
+    metrics = ServingMetrics(layers=sar_layer_shapes(cfg))
+    engine = SarServingEngine(params, cfg, n_slots=n_slots, policy=policy,
+                              adaptive_mode=adaptive, metrics=metrics)
+    for r in make_sar_stream(n_requests, corrupt_frac=corrupt_frac,
+                             corruption=corruption,
+                             image_size=cfg.image_size):
+        engine.submit(r)
+    t0 = time.time()
+    out = engine.run()
+    out["wall_s"] = time.time() - t0
+    out["flagged_fraction"] = out.get("flag_fraction", float("nan"))
+    return out
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ARCHS, required=True)
+    ap.add_argument("--arch", choices=tuple(ARCHS) + ("sar_cnn",),
+                    required=True)
     ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=None,
+                    help="decode slots (default: 4 for LM, 32 for sar_cnn)")
+    ap.add_argument("--requests", type=int, default=None)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=8)
-    ap.add_argument("--mode", default=None,
-                    choices=(None, "paper", "rank16", "moment"))
+    ap.add_argument("--fixed", action="store_true",
+                    help="fixed R=r_max per decision (paper baseline)")
+    ap.add_argument("--conf-threshold", type=float, default=0.8)
+    ap.add_argument("--mi-threshold", type=float, default=0.5)
+    ap.add_argument("--r-min", type=int, default=4)
+    ap.add_argument("--r-max", type=int, default=20)
+    ap.add_argument("--corrupt-frac", type=float, default=0.0)
+    ap.add_argument("--corruption", default="fog",
+                    choices=("fog", "frost", "motion", "snow"))
     args = ap.parse_args()
-    out = serve(args.arch, smoke=args.smoke, batch=args.batch,
-                prompt_len=args.prompt_len, gen_len=args.gen,
-                mode=args.mode)
-    print(f"[serve] generated {out['tokens'].shape} tokens in "
-          f"{out['wall_s']:.2f}s ({out['tokens_per_s']:.1f} tok/s); "
-          f"{100*out['flagged_fraction']:.1f}% flagged for verification")
+    policy = TriagePolicy(conf_threshold=args.conf_threshold,
+                          mi_threshold=args.mi_threshold,
+                          r_min=args.r_min, r_max=args.r_max)
+
+    if args.arch == "sar_cnn":
+        out = serve_sar(n_requests=args.requests or 128,
+                        n_slots=args.slots or 32,
+                        adaptive=not args.fixed, policy=policy,
+                        corrupt_frac=args.corrupt_frac,
+                        corruption=args.corruption)
+        print(f"[serve:sar] {out['decisions']} decisions in "
+              f"{out['wall_s']:.2f}s ({out['decisions_per_s']:.1f}/s); "
+              f"mean samples/decision {out['mean_samples_per_decision']:.1f}; "
+              f"{100*out['flagged_fraction']:.1f}% flagged; "
+              f"GRNG {out['grng_energy_per_decision_aJ']:.0f} aJ/decision")
+    else:
+        out = serve(args.arch, smoke=args.smoke, batch=args.slots or 4,
+                    prompt_len=args.prompt_len, gen_len=args.gen,
+                    n_requests=args.requests, adaptive=not args.fixed,
+                    policy=policy)
+        print(f"[serve] {out['requests']} requests / {out['decisions']} "
+              f"tokens in {out['wall_s']:.2f}s "
+              f"({out['tokens_per_s']:.1f} tok/s); mean samples/token "
+              f"{out['mean_samples_per_decision']:.1f}; "
+              f"{100*out['flagged_fraction']:.1f}% flagged for verification")
 
 
 if __name__ == "__main__":

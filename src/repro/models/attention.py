@@ -33,7 +33,7 @@ def expand_kv(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
 
 
 def chunked_attention(q, k, v, *, causal: bool = True, window: int | None = None,
-                      q_offset=0, kv_valid_len=None,
+                      q_offset=0, kv_valid_len=None, kv_start=None,
                       chunk_q: int = 512, chunk_kv: int = 1024):
     """Flash-style attention. q: [B,Sq,H,dh]; k,v: [B,Sk,H,dh] (callers
     expand GQA KV heads via ``expand_kv`` so the head dim stays intact —
@@ -41,6 +41,9 @@ def chunked_attention(q, k, v, *, causal: bool = True, window: int | None = None
 
     q_offset: global position of q[0] (for prefill continuation).
     kv_valid_len: number of valid kv entries (None = Sk).
+    kv_start: optional [B] int32 — first valid kv position per batch row
+    (left-padded prompts in a continuous-batching pool; earlier
+    positions are masked out so pad tokens never leak into attention).
     Returns [B, Sq, H, dh] in q.dtype; accumulation in f32.
     """
     b, sq, hq, dh = q.shape
@@ -80,7 +83,11 @@ def chunked_attention(q, k, v, *, causal: bool = True, window: int | None = None
                 mask = mask & (kv_pos[None, :] <= q_pos[:, None])
             if window is not None:
                 mask = mask & (kv_pos[None, :] > q_pos[:, None] - window)
-            s = jnp.where(mask[None, None], s, NEG_INF)
+            mask = mask[None, None]                          # [1,1,Qc,Kc]
+            if kv_start is not None:
+                bmask = kv_pos[None, :] >= kv_start[:, None]  # [B,Kc]
+                mask = mask & bmask[:, None, None, :]
+            s = jnp.where(mask, s, NEG_INF)
             m_new = jnp.maximum(m, s.max(-1))                # [B,H,Qc]
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
@@ -108,13 +115,15 @@ def chunked_attention(q, k, v, *, causal: bool = True, window: int | None = None
 
 
 def decode_attention(q, cache_k, cache_v, pos, *, window: int | None = None,
-                     rolling: bool = False):
+                     rolling: bool = False, start=None):
     """Single-token attention against a KV cache.
 
     q: [B, 1, Hq, dh]; cache_k/v: [B, Sc, Hkv, dh]; pos: scalar int32 —
     number of tokens already in the cache (the new token's position,
     already inserted).  With ``rolling`` the cache is a circular buffer
-    of size Sc=window.
+    of size Sc=window.  ``start`` is an optional [B] int32 of first
+    valid cache positions — slots admitted mid-stream by the serving
+    engine carry left-padded prompts whose pad region must stay masked.
 
     (§Perf I5 post-mortem: an S-minor cache layout + separate self-token
     score column measured WORSE under the CPU SPMD partitioner — concat
@@ -139,7 +148,10 @@ def decode_attention(q, cache_k, cache_v, pos, *, window: int | None = None,
         mask = idx <= pos
         if window is not None:
             mask = mask & (idx > pos - window)
-    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    mask = mask[None, None, None]                      # [1,1,1,Sc]
+    if start is not None and not rolling:
+        mask = mask & (idx[None, :] >= start[:, None])[:, None, None, :]
+    s = jnp.where(mask, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgk,bkhd->bhgd", p, cache_v.astype(jnp.float32))
     return out.reshape(b, 1, hq, dh).astype(q.dtype)

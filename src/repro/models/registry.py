@@ -20,6 +20,7 @@ class ModelAPI:
     train_loss: Callable
     prefill: Callable
     decode_step: Callable
+    decode_hidden: Callable = None   # trunk-only decode (serving engine)
     needs_frames: bool = False
     needs_images: bool = False
 
@@ -31,12 +32,14 @@ def get_api(cfg: ModelConfig) -> ModelAPI:
             train_loss=ssm_lm.train_loss_ssm,
             prefill=ssm_lm.prefill_ssm,
             decode_step=ssm_lm.decode_step_ssm,
+            decode_hidden=ssm_lm.decode_hidden_ssm,
         )
     return ModelAPI(
         init=transformer.init_transformer,
         train_loss=transformer.train_loss,
         prefill=transformer.prefill,
         decode_step=transformer.decode_step,
+        decode_hidden=transformer.decode_hidden,
         needs_frames=cfg.family == "audio",
         needs_images=cfg.family == "vlm",
     )

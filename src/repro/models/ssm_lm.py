@@ -57,10 +57,11 @@ def _shared_block_full(h, h0, params, cfg: ModelConfig, positions):
     return h + u @ params["shared_w_out"].astype(h.dtype), kv
 
 
-def _shared_block_decode(h, h0, params, cfg: ModelConfig, ck, cv, pos):
+def _shared_block_decode(h, h0, params, cfg: ModelConfig, ck, cv, pos,
+                         start=None):
     u = jnp.concatenate([h, h0], axis=-1) @ params["shared_w_in"].astype(h.dtype)
     u, ck, cv = _block_decode(u, params["shared_attn"], cfg, ck, cv, pos,
-                              rolling=False)
+                              rolling=False, start=start)
     return h + u @ params["shared_w_out"].astype(h.dtype), ck, cv
 
 
@@ -116,13 +117,23 @@ def train_loss_ssm(params, batch, cfg: ModelConfig, step=0):
                                                 "aux": jnp.zeros(())}
 
 
-def prefill_ssm(params, tokens, cfg: ModelConfig, *, cache_len: int):
+def prefill_ssm(params, tokens, cfg: ModelConfig, *, cache_len: int,
+                prompt_lengths=None):
     """Returns (cache, last hidden [B, D]).  SSM state is O(1) in length;
-    only the hybrid's shared-attn sites carry KV caches."""
+    only the hybrid's shared-attn sites carry KV caches.
+
+    ``prompt_lengths`` (continuous-batching admission): recorded as the
+    per-slot ``start`` for the hybrid's attention sites.  The recurrent
+    state itself absorbs left-pad tokens — a documented approximation
+    (pad prefix ≈ a short neutral context), unlike the exact RoPE
+    transformer path.
+    """
     b, s = tokens.shape
     h, _, caches = trunk_forward_ssm(params, tokens, cfg, collect_cache=True)
     cache = {"ssm": caches["ssm"], "conv": caches["conv"],
              "pos": jnp.int32(s)}
+    if prompt_lengths is not None:
+        cache["start"] = (s - prompt_lengths).astype(jnp.int32)
     if "k" in caches:
         sc = cache_len
         k, v = caches["k"], caches["v"]
@@ -136,9 +147,16 @@ def prefill_ssm(params, tokens, cfg: ModelConfig, *, cache_len: int):
     return cache, h[:, -1]
 
 
-def decode_step_ssm(params, cache, token, cfg: ModelConfig):
-    """One decode step: O(1) state updates per mamba layer."""
+def decode_hidden_ssm(params, cache, token, cfg: ModelConfig):
+    """Trunk-only decode step (no head): (last hidden [B, D], cache).
+
+    SSM state is strictly slot-local, so the serving engine's mid-batch
+    admission is exact here by construction: scattering a freshly
+    prefilled state row into a pool slot carries everything the
+    recurrence needs.
+    """
     pos = cache["pos"]
+    start = cache.get("start")
     h = params["embed"].astype(cfg.dtype)[token]             # [B, 1, D]
     h0 = h
 
@@ -158,7 +176,8 @@ def decode_step_ssm(params, cache, token, cfg: ModelConfig):
         def group_fn(h, xs):
             gp, st, cst, ck, cv = xs
             h, (st, cst) = lax.scan(mamba_body, h, (gp, st, cst))
-            h, ck, cv = _shared_block_decode(h, h0, params, cfg, ck, cv, pos)
+            h, ck, cv = _shared_block_decode(h, h0, params, cfg, ck, cv, pos,
+                                             start=start)
             return h, (st, cst, ck, cv)
 
         h, (st, cst, ck, cv) = lax.scan(
@@ -172,4 +191,11 @@ def decode_step_ssm(params, cache, token, cfg: ModelConfig):
         new_cache = dict(cache, ssm=st, conv=cst, pos=pos + 1)
 
     h = blocks.rms_norm(h, params["final_norm"])
-    return apply_bayes_head(params, h[:, 0], cfg, pos), new_cache
+    return h[:, 0], new_cache
+
+
+def decode_step_ssm(params, cache, token, cfg: ModelConfig):
+    """One decode step: O(1) state updates per mamba layer."""
+    pos = cache["pos"]
+    x, new_cache = decode_hidden_ssm(params, cache, token, cfg)
+    return apply_bayes_head(params, x, cfg, pos), new_cache

@@ -175,7 +175,10 @@ def _model_ax(cfg: ModelConfig, dim: int):
 def _tp_ok(cfg: ModelConfig, d_in: int, d_out: int) -> bool:
     if not (cfg.explicit_tp and cfg.batch_axes and cfg.model_axis_size > 1):
         return False
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro.launch.mesh import HAS_ABSTRACT_MESH, abstract_mesh_or
+    if not HAS_ABSTRACT_MESH:
+        return False  # explicit-TP is a current-jax-only perf path
+    mesh = abstract_mesh_or()
     data = mesh.shape.get("data", 1)
     return d_out % cfg.model_axis_size == 0 and d_in % data == 0
 
@@ -192,7 +195,9 @@ def _tp_linear(x, w, cfg: ModelConfig, kind: str):
     reduce-scatter of the weight gradient.
     """
     from jax.sharding import PartitionSpec as P
-    mesh = jax.sharding.get_abstract_mesh()
+
+    from repro.launch.mesh import abstract_mesh_or, shard_map_compat
+    mesh = abstract_mesh_or()
     dp = tuple(cfg.batch_axes)
     lead = (dp,) + (None,) * (x.ndim - 2)
 
@@ -200,19 +205,19 @@ def _tp_linear(x, w, cfg: ModelConfig, kind: str):
         def body(x_loc, w_loc):
             w_full = lax.all_gather(w_loc, "data", axis=0, tiled=True)
             return x_loc @ w_full.astype(x_loc.dtype)
-        return jax.shard_map(
+        return shard_map_compat(
             body, mesh=mesh,
             in_specs=(P(*lead, None), P("data", "model")),
-            out_specs=P(*lead, "model"), check_vma=False)(x, w)
+            out_specs=P(*lead, "model"))(x, w)
 
     def body(x_loc, w_loc):
         w_full = lax.all_gather(w_loc, "data", axis=1, tiled=True)
         y = x_loc @ w_full.astype(x_loc.dtype)
         return lax.psum(y, "model")
-    return jax.shard_map(
+    return shard_map_compat(
         body, mesh=mesh,
         in_specs=(P(*lead, "model"), P("model", "data")),
-        out_specs=P(*lead, None), check_vma=False)(x, w)
+        out_specs=P(*lead, None))(x, w)
 
 
 # ----------------------------------------------------------------------
@@ -369,9 +374,10 @@ def _mlp_apply(h, lp, cfg: ModelConfig):
         if cfg.batch_axes and cfg.model_axis_size > 1 and h.shape[1] > 1:
             # Perf I1: manual local dispatch - routing is batch-parallel,
             # so no dispatch collectives; one TP psum + FSDP gathers only.
+            from repro.launch.mesh import abstract_mesh_or
             from repro.models.moe import make_sharded_moe
             moe = make_sharded_moe(
-                jax.sharding.get_abstract_mesh(), top_k=cfg.top_k,
+                abstract_mesh_or(), top_k=cfg.top_k,
                 capacity_factor=cfg.capacity_factor,
                 n_experts=cfg.n_experts, dp_axes=tuple(cfg.batch_axes))
             return moe(h, lp["moe"]["router"].astype(h.dtype),
@@ -416,7 +422,8 @@ def _xattn_full(h, lp, cfg: ModelConfig, memory):
     return o.reshape(*h.shape[:2], -1) @ lp["xattn"]["wo"].astype(h.dtype), (k, v)
 
 
-def _block_full(h, lp, cfg: ModelConfig, positions, causal: bool, memory=None):
+def _block_full(h, lp, cfg: ModelConfig, positions, causal: bool, memory=None,
+                kv_start=None):
     """One block: self-attn [→ cross-attn] → mlp. Returns (h, aux, caches)."""
     hn = _norm(h, lp["ln1"], lp.get("ln1_b"), cfg)
     q, k, v = _project_qkv(hn, lp["attn"], cfg)
@@ -428,7 +435,7 @@ def _block_full(h, lp, cfg: ModelConfig, positions, causal: bool, memory=None):
     ve = _wsc(attn.expand_kv(v, cfg.n_heads), cfg, None,
               _model_ax(cfg, cfg.n_heads), None)
     o = attn.chunked_attention(
-        q, ke, ve, causal=causal, window=cfg.swa_window,
+        q, ke, ve, causal=causal, window=cfg.swa_window, kv_start=kv_start,
         chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv)
     o = _wsc(o, cfg, None, _model_ax(cfg, cfg.n_heads), None)
     of = o.reshape(*h.shape[:2], -1)
@@ -447,7 +454,7 @@ def _block_full(h, lp, cfg: ModelConfig, positions, causal: bool, memory=None):
 
 
 def _block_decode(h, lp, cfg: ModelConfig, ck, cv, pos, rolling, xk=None,
-                  xv=None):
+                  xv=None, start=None):
     """Single-token block against KV cache (+ optional cross memory kv)."""
     hn = _norm(h, lp["ln1"], lp.get("ln1_b"), cfg)
     q, k, v = _project_qkv(hn, lp["attn"], cfg)
@@ -457,7 +464,8 @@ def _block_decode(h, lp, cfg: ModelConfig, ck, cv, pos, rolling, xk=None,
         k = blocks.apply_rope(k, positions, cfg.rope_theta)
     ck, cv = attn.cache_update(ck, cv, k, v, pos, rolling=rolling)
     o = attn.decode_attention(q, ck, cv, pos,
-                              window=cfg.swa_window, rolling=rolling)
+                              window=cfg.swa_window, rolling=rolling,
+                              start=start)
     h = h + o.reshape(*h.shape[:2], -1) @ lp["attn"]["wo"].astype(h.dtype)
     if "xattn" in lp:
         hn = _norm(h, lp["lnx"], lp.get("lnx_b"), cfg)
@@ -514,8 +522,13 @@ def _encode(params, frames, cfg: ModelConfig):
 
 
 def trunk_forward(params, tokens, cfg: ModelConfig, *, frames=None,
-                  image_embeds=None, collect_cache: bool = False):
-    """Token trunk -> (hidden [B,S,D], aux, caches dict|None, memory)."""
+                  image_embeds=None, collect_cache: bool = False,
+                  kv_start=None):
+    """Token trunk -> (hidden [B,S,D], aux, caches dict|None, memory).
+
+    kv_start: optional [B] first-valid positions for left-padded rows
+    (continuous-batching admission) — masks self-attention only.
+    """
     b, s = tokens.shape
     h = _wsc(params["embed"].astype(cfg.dtype)[tokens], cfg, None, None)
     if cfg.learned_pos:
@@ -532,7 +545,7 @@ def trunk_forward(params, tokens, cfg: ModelConfig, *, frames=None,
 
     def self_body(h, lp):
         h, aux, kv, xkv = _block_full(h, lp, cfg, positions, causal=True,
-                                      memory=memory)
+                                      memory=memory, kv_start=kv_start)
         outs = (aux, kv if collect_cache else None,
                 xkv if (collect_cache and xkv is not None) else None)
         return h, outs
@@ -612,18 +625,34 @@ def train_loss(params, batch, cfg: ModelConfig, step=0):
 # Serving
 # ----------------------------------------------------------------------
 def prefill(params, tokens, cfg: ModelConfig, *, cache_len: int,
-            frames=None, image_embeds=None):
+            frames=None, image_embeds=None, prompt_lengths=None):
     """Run the prompt, build KV caches sized ``cache_len``.
 
     Returns (cache dict, last-position hidden [B, D]).  SWA models whose
     cache_len exceeds the window get a rolling cache of size window.
+
+    ``prompt_lengths`` [B]: true prompt lengths of LEFT-padded rows —
+    the continuous-batching admission path (serving/engine.py).  Pad
+    positions are masked out of attention here and recorded as a per-
+    slot ``start`` in the cache so decode keeps masking them.  Exact for
+    RoPE trunks: a slot's tokens shift uniformly, and RoPE scores depend
+    only on relative distance.
     """
     b, s = tokens.shape
     rolling = cfg.swa_window is not None and cache_len > cfg.swa_window
     sc = min(cache_len, cfg.swa_window) if rolling else cache_len
+    kv_start = None
+    if prompt_lengths is not None:
+        if rolling:
+            raise ValueError(
+                "prompt_lengths (left-padded admission) is not supported "
+                f"with a rolling SWA cache (cache_len={cache_len} > "
+                f"window={cfg.swa_window}): decode_attention cannot apply "
+                "the per-slot start mask to a circular buffer")
+        kv_start = (s - prompt_lengths).astype(jnp.int32)    # [B]
     h, _, caches, _ = trunk_forward(
         params, tokens, cfg, frames=frames, image_embeds=image_embeds,
-        collect_cache=True)
+        collect_cache=True, kv_start=kv_start)
 
     def fit(x):  # [L, B, S, Hkv, dh] -> [L, B, sc, Hkv, dh]
         if s >= sc:
@@ -632,6 +661,11 @@ def prefill(params, tokens, cfg: ModelConfig, *, cache_len: int,
 
     cache = {"k": fit(caches["k"]), "v": fit(caches["v"]),
              "pos": jnp.int32(s)}
+    if prompt_lengths is not None:
+        # Front-truncated prompt (s > sc, linear cache): the valid
+        # region shifts with the truncation.
+        cache["start"] = kv_start if s <= sc else jnp.maximum(
+            kv_start - (s - sc), 0)
     if "xk" in caches:
         cache["xk"], cache["xv"] = caches["xk"], caches["xv"]
     return cache, h[:, -1]
@@ -648,15 +682,20 @@ def _head_serving(params, cfg: ModelConfig):
             "sigma": sigma_of(hp).astype(cfg.dtype)}
 
 
-def decode_step(params, cache, token, cfg: ModelConfig):
-    """One decode step. token: [B,1] -> (logit_samples [R,B,Vp], cache).
+def decode_hidden(params, cache, token, cfg: ModelConfig):
+    """One trunk decode step WITHOUT the Bayesian head.
 
-    The selection stream is indexed by decode position (write-free
-    random access — see lfsr.indexed_selections) so every generated
-    token sees fresh CLT-GRNG samples, as the hardware's free-running
-    LFSR would provide.
+    token: [B,1] -> (last hidden [B, D], new cache).  The serving engine
+    uses this split so it can sample the head *adaptively* — a small
+    first draw, then escalations — instead of a fixed R fused into the
+    step (serving/adaptive.py).  ``decode_step`` composes this with
+    ``apply_bayes_head`` and is unchanged in behavior.
+
+    Honors ``cache['start']`` ([B] first-valid positions) written by
+    prefill for left-padded continuous-batching admissions.
     """
     pos = cache["pos"]
+    start = cache.get("start")
     h = params["embed"].astype(cfg.dtype)[token]             # [B, 1, D]
     if cfg.learned_pos:
         pe = lax.dynamic_slice_in_dim(params["pos_embed"], pos, 1, axis=0)
@@ -676,7 +715,8 @@ def decode_step(params, cache, token, cfg: ModelConfig):
 
         def self_body(h, xs):
             lp, ck, cv = xs
-            h, ck, cv = _block_decode(h, lp, cfg, ck, cv, pos, rolling)
+            h, ck, cv = _block_decode(h, lp, cfg, ck, cv, pos, rolling,
+                                      start=start)
             return h, (ck, cv)
 
         def group_body(h, xs):
@@ -694,7 +734,7 @@ def decode_step(params, cache, token, cfg: ModelConfig):
         def body(h, xs):
             lp, ck, cv, xk, xv = xs
             h, ck, cv = _block_decode(h, lp, cfg, ck, cv, pos, rolling,
-                                      xk=xk, xv=xv)
+                                      xk=xk, xv=xv, start=start)
             return h, (ck, cv)
 
         h, (ck, cv) = lax.scan(body, h, (params["blocks"], cache["k"],
@@ -704,7 +744,8 @@ def decode_step(params, cache, token, cfg: ModelConfig):
     else:
         def body(h, xs):
             lp, ck, cv = xs
-            h, ck, cv = _block_decode(h, lp, cfg, ck, cv, pos, rolling)
+            h, ck, cv = _block_decode(h, lp, cfg, ck, cv, pos, rolling,
+                                      start=start)
             return h, (ck, cv)
 
         h, (ck, cv) = lax.scan(body, h, (params["blocks"], cache["k"],
@@ -715,7 +756,19 @@ def decode_step(params, cache, token, cfg: ModelConfig):
         h = blocks.layer_norm(h, params["final_norm"], params["final_norm_b"])
     else:
         h = blocks.rms_norm(h, params["final_norm"])
-    x = h[:, 0]                                              # [B, D]
+    return h[:, 0], new_cache                                # [B, D]
+
+
+def decode_step(params, cache, token, cfg: ModelConfig):
+    """One decode step. token: [B,1] -> (logit_samples [R,B,Vp], cache).
+
+    The selection stream is indexed by decode position (write-free
+    random access — see lfsr.indexed_selections) so every generated
+    token sees fresh CLT-GRNG samples, as the hardware's free-running
+    LFSR would provide.
+    """
+    pos = cache["pos"]
+    x, new_cache = decode_hidden(params, cache, token, cfg)
     return apply_bayes_head(params, x, cfg, pos), new_cache
 
 

@@ -1,0 +1,30 @@
+"""Adaptive-fidelity Bayesian serving subsystem.
+
+Modules:
+  engine    continuous-batching scheduler (slots, admission, retirement)
+  adaptive  incremental predictive stats + sequential escalation
+  triage    the paper Fig. 1 accept / escalate / flag policy
+  metrics   per-request latency, samples/decision, energy accounting
+
+The escalation math leans on the rank-16 structure of the shared
+selection lines (core/sampling.py): per-slot activation bases make
+additional samples nearly free, and ``sample0`` stream offsets make
+escalation an exact extension of the fixed-R draw.
+"""
+
+from repro.serving.adaptive import (escalation_schedule, finalize,
+                                    init_stats, stream_selections,
+                                    update_stats)
+from repro.serving.engine import (LMServingEngine, Request,
+                                  SarServingEngine)
+from repro.serving.metrics import (RequestRecord, ServingMetrics,
+                                   decision_energy)
+from repro.serving.triage import (ACCEPT, ESCALATE, FLAG, TriagePolicy,
+                                  decide, fixed_r_decide)
+
+__all__ = [
+    "ACCEPT", "ESCALATE", "FLAG", "LMServingEngine", "Request",
+    "RequestRecord", "SarServingEngine", "ServingMetrics", "TriagePolicy",
+    "decide", "decision_energy", "escalation_schedule", "finalize",
+    "fixed_r_decide", "init_stats", "stream_selections", "update_stats",
+]

@@ -1,0 +1,150 @@
+"""Adaptive-fidelity sampling: spend GRNG draws only where they matter.
+
+Fixed R = 20 (the paper's deployment point) charges every input the
+worst-case sampling cost; Bayes2IMC and FeBiM both identify exactly this
+overhead as the barrier to in-memory BNN deployment.  This module
+implements the alternative the rank-16 structure makes nearly free
+(core/sampling.py): start each decision at a small R, maintain the
+predictive statistics *incrementally*, and escalate in geometric rounds
+only while the accept/flag decision is statistically ambiguous
+(serving/triage.py).
+
+Two properties keep this exact rather than approximate:
+
+  * **Stream extension.**  Escalations draw samples at later ``sample0``
+    offsets of the same free-running LFSR selection stream
+    (lfsr.indexed_selections), so the union of all rounds is
+    *identically* the prefix a single large draw would have produced —
+    escalation extends, never redraws.  A request that escalates to
+    R = 20 computes bit-for-bit the fixed-R=20 predictive distribution.
+  * **Incremental sufficiency.**  predictive_stats needs only the
+    arithmetic mean of per-sample softmax probabilities and the mean
+    per-sample entropy; both are running sums.  ``finalize`` of the
+    accumulated state equals core.uncertainty.predictive_stats of the
+    concatenated samples (tested in tests/test_serving.py).
+
+Standard errors: the MC noise of confidence is estimated from the
+per-sample variance of the predicted class's probability; the noise of
+mutual information from the per-sample entropy variance (the aleatoric
+term — the dominant MC-variance contribution; the H(p̄) term's noise is
+second-order in 1/n).  Both shrink as 1/√n, driving the sequential
+test's ambiguity band to zero.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lfsr import indexed_selections
+from repro.serving.triage import TriagePolicy
+
+_EPS = 1e-12
+
+
+def escalation_schedule(policy: TriagePolicy) -> tuple:
+    """Round sizes (r_1, r_2, ...) summing to exactly r_max.
+
+    Geometric with ratio ``r_growth`` starting at ``r_min`` — e.g. the
+    defaults (4, 20, 2) give (4, 8, 8): a cheap first look, then two
+    escalations for the ambiguous tail.  Used by the LM engine, whose
+    pool escalates in lockstep per token; the SAR engine instead draws
+    constant r_min-sized rounds so slots can sit at different depths
+    (see SarServingEngine docstring).
+    """
+    rounds, total, step = [], 0, policy.r_min
+    while total < policy.r_max:
+        step = min(step, policy.r_max - total)
+        rounds.append(step)
+        total += step
+        step *= policy.r_growth
+    return tuple(rounds)
+
+
+def init_stats(batch: int, n_classes: int) -> dict:
+    """Zeroed running-sufficient-statistics for ``batch`` slots."""
+    z = jnp.zeros
+    return {
+        "n": z((batch,), jnp.int32),
+        "sum_p": z((batch, n_classes), jnp.float32),
+        "sum_psq": z((batch, n_classes), jnp.float32),
+        "sum_ent": z((batch,), jnp.float32),
+        "sum_entsq": z((batch,), jnp.float32),
+    }
+
+
+def update_stats(stats: dict, logit_samples: jnp.ndarray,
+                 mask=None) -> dict:
+    """Fold [R, B, C] new logit samples into the running sums.
+
+    ``mask`` [B] (optional): True for slots whose stats SHOULD advance;
+    False rows keep their old sums (retired / inactive slots inside a
+    fixed-shape pool round).
+    """
+    logp = jax.nn.log_softmax(logit_samples.astype(jnp.float32), axis=-1)
+    p = jnp.exp(logp)                                     # [R, B, C]
+    ent = -(p * logp).sum(-1)                             # [R, B]
+    r = logit_samples.shape[0]
+    upd = {
+        "n": stats["n"] + r,
+        "sum_p": stats["sum_p"] + p.sum(0),
+        "sum_psq": stats["sum_psq"] + (p * p).sum(0),
+        "sum_ent": stats["sum_ent"] + ent.sum(0),
+        "sum_entsq": stats["sum_entsq"] + (ent * ent).sum(0),
+    }
+    if mask is None:
+        return upd
+    keep = jnp.asarray(mask)
+    return jax.tree.map(
+        lambda new, old: jnp.where(
+            keep.reshape((-1,) + (1,) * (new.ndim - 1)), new, old),
+        upd, stats)
+
+
+def finalize(stats: dict) -> dict:
+    """Predictive quantities + MC standard errors from running sums.
+
+    Matches core.uncertainty.predictive_stats on the same samples
+    (probs / confidence / prediction / entropies / MI), adding
+    ``confidence_se`` and ``mutual_information_se`` for the sequential
+    test, and ``n`` (samples drawn so far).
+    """
+    n = jnp.maximum(stats["n"], 1).astype(jnp.float32)
+    p_mean = stats["sum_p"] / n[:, None]                  # [B, C]
+    pred = p_mean.argmax(-1)
+    conf = p_mean.max(-1)
+    logp_mean = jnp.log(jnp.maximum(p_mean, _EPS))
+    pred_entropy = -(p_mean * logp_mean).sum(-1)
+    exp_entropy = stats["sum_ent"] / n
+
+    p_pred = jnp.take_along_axis(stats["sum_p"], pred[:, None], 1)[:, 0] / n
+    psq_pred = jnp.take_along_axis(stats["sum_psq"], pred[:, None], 1)[:, 0] / n
+    var_conf = jnp.maximum(psq_pred - p_pred**2, 0.0)
+    var_ent = jnp.maximum(stats["sum_entsq"] / n - exp_entropy**2, 0.0)
+
+    return {
+        "probs": p_mean,
+        "confidence": conf,
+        "prediction": pred,
+        "predictive_entropy": pred_entropy,
+        "expected_entropy": exp_entropy,
+        "mutual_information": pred_entropy - exp_entropy,
+        "confidence_se": jnp.sqrt(var_conf / n),
+        "mutual_information_se": jnp.sqrt(var_ent / n),
+        "n": stats["n"],
+    }
+
+
+def stream_selections(grng_cfg, base: jnp.ndarray, n_drawn: jnp.ndarray,
+                      num: int) -> jnp.ndarray:
+    """Per-slot selection vectors for the NEXT ``num`` samples.
+
+    base [B]: each slot's reserved region of the global selection stream
+    (decision_id · r_max — see engine.py); n_drawn [B]: samples already
+    consumed.  Returns [num, B, 16] — consecutive stream positions per
+    slot, so escalation extends the exact stream a single large draw
+    would read.
+    """
+    idx = (base[None, :] + n_drawn[None, :]
+           + jnp.arange(num, dtype=jnp.uint32)[:, None])  # [num, B]
+    return indexed_selections(grng_cfg.lfsr_seed, idx.astype(jnp.uint32))

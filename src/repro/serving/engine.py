@@ -1,0 +1,478 @@
+"""Continuous-batching serving engine with adaptive-fidelity slots.
+
+The paper's deployment target is a latency/energy-constrained edge
+engine; the ROADMAP's is a service under heavy traffic.  Both reduce to
+the same scheduling problem: keep a fixed pool of decode slots full,
+retire a request the moment its decision is made, and refill the slot
+from the admission queue without stalling the others.  This module
+implements that engine twice over one scheduler skeleton:
+
+``SarServingEngine`` — the paper's workload.  A request is one aerial
+image patch; its per-slot state is the rank-16 **activation basis**
+(core/sampling.activation_basis): 16 basis products computed once at
+admission, after which every escalation round costs only a [r,16]
+mixing contraction.  Slots sit at *different* escalation depths — an
+easy image retires after the first 4-sample round while its neighbor
+escalates to 20 — which is where adaptive fidelity buys throughput.
+
+``LMServingEngine`` — token streams.  Slots share a synchronized decode
+clock (the KV cache layout has one scalar ``pos``); per-token head
+sampling escalates in geometric rounds with early exit when every
+active slot has decided.  Mid-stream admission is *exact* for RoPE
+trunks: a new prompt is prefilled left-padded at the fixed admission
+length, its cached K re-rotated by the pool-clock offset (RoPE scores
+depend only on relative distance, so a uniform rotation re-bases the
+stream), rolled into place, and masked via the per-slot ``start``
+recorded by prefill (models/attention.py).  SSM slots are recurrent
+state rows — scatter alone is exact.  Trunks whose positions cannot be
+re-based (learned absolute positions, e.g. whisper) still serve
+correctly: admission simply waits for the pool to drain and rebase to
+delta = 0, where left-padded prefill needs no re-basing.
+
+Slot state lives in donated device buffers: admission scatters rows
+into the pool pytree with ``.at[idx].set(..., mode='drop')`` (a fixed
+out-of-range index parks unused admission rows), and every jitted pool
+update donates its inputs, so the engine never holds two copies of a
+KV cache.  All jitted shapes are fixed by (n_slots, prompt_len,
+round sizes): the compile set is O(len(schedule)), not O(traffic).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sampling import (BayesHeadConfig, activation_basis,
+                                 mix_samples)
+from repro.serving import adaptive, triage
+from repro.serving.metrics import RequestRecord, ServingMetrics
+from repro.serving.triage import ACCEPT, ESCALATE, FLAG, TriagePolicy
+
+
+@dataclasses.dataclass
+class Request:
+    """One unit of admission: an image (SAR) or a prompt (LM)."""
+    rid: int
+    payload: Any                      # [H,W,1] image | [L] token ids
+    arrival_s: float = 0.0
+    max_new_tokens: int = 8           # LM only
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request | None = None
+    admit_s: float = 0.0
+    n_samples: int = 0                # accumulated over the request
+    n_decisions: int = 0              # tokens decided (LM) / 1 (SAR)
+
+
+class _EngineBase:
+    """Queue + slot bookkeeping shared by both engines."""
+
+    def __init__(self, n_slots: int, policy: TriagePolicy,
+                 metrics: ServingMetrics | None):
+        self.n_slots = n_slots
+        self.policy = policy
+        self.queue: deque[Request] = deque()
+        self.slots = [_Slot() for _ in range(n_slots)]
+        self.free: list[int] = list(range(n_slots))
+        self.metrics = metrics or ServingMetrics()
+        self._decision_counter = 0
+
+    def submit(self, request: Request) -> None:
+        if request.arrival_s == 0.0:
+            request.arrival_s = time.time()
+        self.queue.append(request)
+
+    @property
+    def n_active(self) -> int:
+        return self.n_slots - len(self.free)
+
+    def _next_bases(self, count: int) -> np.ndarray:
+        """Reserve fresh selection-stream regions: each decision owns
+        [id·r_max, (id+1)·r_max) of the global stream."""
+        ids = np.arange(self._decision_counter,
+                        self._decision_counter + count, dtype=np.uint32)
+        self._decision_counter += count
+        return ids * np.uint32(self.policy.r_max)
+
+    def _retire(self, slot_idx: int, verdict: int, fin: dict,
+                extra_samples: int) -> None:
+        slot = self.slots[slot_idx]
+        req = slot.req
+        now = time.time()
+        self.metrics.mark(now)
+        self.metrics.record(RequestRecord(
+            rid=req.rid, verdict=int(verdict),
+            n_samples=slot.n_samples + extra_samples,
+            n_decisions=max(slot.n_decisions, 1),
+            arrival_s=req.arrival_s, admit_s=slot.admit_s, done_s=now,
+            prediction=int(fin["prediction"][slot_idx]),
+            confidence=float(fin["confidence"][slot_idx]),
+            mutual_information=float(fin["mutual_information"][slot_idx]),
+        ))
+        slot.req = None
+        slot.n_samples = slot.n_decisions = 0
+        self.free.append(slot_idx)
+
+
+# ----------------------------------------------------------------------
+# SAR image-stream engine
+# ----------------------------------------------------------------------
+class SarServingEngine(_EngineBase):
+    """Adaptive-fidelity victim/no-victim triage over an image stream.
+
+    adaptive=False reproduces the paper's fixed-R dataflow inside the
+    same scheduler (one r_max-sample round, decide immediately) so the
+    bench compares policies, not implementations.
+
+    Escalation here is CONSTANT-STEP (r_min samples per tick), not the
+    geometric ``escalation_schedule`` the LM engine uses: slots sit at
+    different escalation depths inside one fixed-shape pool round, so
+    every tick must draw the same per-slot count.  ``policy.r_growth``
+    therefore has no effect on this engine.
+    """
+
+    def __init__(self, params, cfg, *, n_slots: int = 32,
+                 policy: TriagePolicy = TriagePolicy(),
+                 adaptive_mode: bool = True, metrics: ServingMetrics = None):
+        super().__init__(n_slots, policy, metrics)
+        from repro.core.bayes_layer import to_serving
+        from repro.models.sar_cnn import features
+        self.cfg = cfg
+        self.adaptive_mode = adaptive_mode
+        self.hcfg = BayesHeadConfig(
+            num_samples=policy.r_max, mode="rank16", grng=cfg.grng,
+            compute_dtype=jnp.float32, hoist_basis=True)
+        head = to_serving(params["head"], self.hcfg)
+        self.r_step = policy.r_min if adaptive_mode else policy.r_max
+
+        def featurize(p, images):
+            return activation_basis(head, features(p, images, cfg),
+                                    self.hcfg)
+
+        self._featurize = jax.jit(lambda imgs: featurize(params, imgs))
+
+        def scatter(pool, rows, idx):
+            return jax.tree.map(
+                lambda p, r: p.at[idx].set(r, mode="drop"), pool, rows)
+
+        self._scatter = jax.jit(scatter, donate_argnums=(0,))
+
+        grng = cfg.grng
+        r_step = self.r_step
+        pol = policy
+
+        def round_fn(pool, stats, base, active):
+            sel = adaptive.stream_selections(grng, base, stats["n"], r_step)
+            samples = mix_samples(pool, sel, self.hcfg)     # [r, S, C]
+            stats = adaptive.update_stats(stats, samples, mask=active)
+            fin = adaptive.finalize(stats)
+            if adaptive_mode:
+                verdict = triage.decide(fin, pol, final=fin["n"] >= pol.r_max)
+            else:
+                verdict = triage.fixed_r_decide(fin, pol)
+            return stats, verdict, fin
+
+        self._round = jax.jit(round_fn, donate_argnums=(1,))
+
+        def stats_reset(stats, idx):
+            return jax.tree.map(
+                lambda s: s.at[idx].set(0, mode="drop"), stats)
+
+        self._stats_reset = jax.jit(stats_reset, donate_argnums=(0,))
+        self.pool = None
+        self.stats = None
+        self.base = None
+
+    # -- admission ------------------------------------------------------
+    def _admit(self) -> None:
+        take = min(len(self.free), len(self.queue))
+        if take == 0:
+            return
+        reqs = [self.queue.popleft() for _ in range(take)]
+        imgs = np.stack([np.asarray(r.payload) for r in reqs])
+        if take < self.n_slots:                       # fixed-shape batch
+            pad = np.repeat(imgs[-1:], self.n_slots - take, axis=0)
+            imgs = np.concatenate([imgs, pad], axis=0)
+        rows = self._featurize(jnp.asarray(imgs))
+        idx = np.full((self.n_slots,), self.n_slots, np.int32)  # drop
+        now = time.time()
+        bases = self._next_bases(take)
+        for j, req in enumerate(reqs):
+            s = self.free.pop()
+            idx[j] = s
+            self.slots[s].req = req
+            self.slots[s].admit_s = now
+            self.base[s] = bases[j]
+        idxj = jnp.asarray(idx)
+        if self.pool is None:
+            n_classes = rows["y_mu"].shape[-1]
+            self.pool = jax.tree.map(jnp.zeros_like, rows)
+            self.stats = adaptive.init_stats(self.n_slots, n_classes)
+        self.pool = self._scatter(self.pool, rows, idxj)
+        self.stats = self._stats_reset(self.stats, idxj)
+        self.metrics.mark(now)
+
+    # -- main loop ------------------------------------------------------
+    def run(self, max_ticks: int = 100_000) -> dict:
+        self.base = np.zeros((self.n_slots,), np.uint32)
+        for _ in range(max_ticks):
+            self._admit()
+            if self.n_active == 0:
+                if not self.queue:
+                    break
+                continue
+            active = np.zeros((self.n_slots,), bool)
+            for i, s in enumerate(self.slots):
+                active[i] = s.req is not None
+            self.stats, verdict, fin = self._round(
+                self.pool, self.stats, jnp.asarray(self.base),
+                jnp.asarray(active))
+            verdict = np.asarray(verdict)
+            fin = {k: np.asarray(v) for k, v in fin.items()}
+            for i in np.nonzero(active)[0]:
+                self.slots[i].n_samples += self.r_step
+                if verdict[i] != ESCALATE:
+                    self.slots[i].n_decisions = 1
+                    # n_samples already accumulated; fin["n"] agrees
+                    self._retire(i, verdict[i], fin, extra_samples=0)
+        return self.metrics.summary()
+
+
+# ----------------------------------------------------------------------
+# LM token-stream engine
+# ----------------------------------------------------------------------
+def _rotate_k(k, delta, theta):
+    """Re-base cached RoPE'd keys by ``delta`` positions: rotations about
+    a fixed plane compose additively, so R_Δ(R_i·k) = R_{i+Δ}·k."""
+    from repro.models.blocks import apply_rope
+    lead = k.shape[:-3]                       # [..., Sc, H, dh]
+    flat = k.reshape((-1,) + k.shape[-3:])
+    pos = jnp.full((flat.shape[0], flat.shape[1]), delta, jnp.int32)
+    return apply_rope(flat, pos, theta).reshape(k.shape)
+
+
+class LMServingEngine(_EngineBase):
+    """Continuous-batching LM decode with adaptive per-token fidelity."""
+
+    def __init__(self, params, cfg, *, n_slots: int = 4,
+                 prompt_len: int = 16, cache_len: int = 64,
+                 policy: TriagePolicy = TriagePolicy(),
+                 adaptive_mode: bool = True,
+                 metrics: ServingMetrics = None, extras: dict | None = None):
+        super().__init__(n_slots, policy, metrics)
+        from repro.models.registry import get_api
+        from repro.models.transformer import _head_serving
+        assert cfg.bayesian_head, "adaptive serving needs the Bayesian head"
+        if cfg.swa_window is not None and cache_len > cfg.swa_window:
+            # Rolling (circular) SWA caches break two admission
+            # invariants: the roll+rerotate alignment assumes a linear
+            # layout, and decode_attention's per-slot 'start' mask is
+            # only defined for linear caches.  Refuse loudly rather
+            # than serve silently-wrong attention.
+            raise ValueError(
+                f"cache_len={cache_len} exceeds swa_window="
+                f"{cfg.swa_window}: the rolling-cache decode path does "
+                "not support continuous-batching admission; use "
+                f"cache_len <= {cfg.swa_window} or a non-SWA arch")
+        self.cfg = cfg
+        self.adaptive_mode = adaptive_mode
+        self.prompt_len = prompt_len
+        self.cache_len = cache_len
+        # Mid-stream (delta > 0) admission re-bases cached keys by a
+        # uniform RoPE rotation — only exact for rotary trunks without
+        # learned absolute positions.  Other trunks still get continuous
+        # batching, but admission waits for the pool to drain and
+        # rebase (delta == 0), where left-padded prefill is exact.
+        self.midstream_ok = bool(cfg.use_rope) and not cfg.learned_pos
+        api = get_api(cfg)
+        self.hcfg = BayesHeadConfig(
+            num_samples=policy.r_max, mode="rank16", grng=cfg.grng,
+            compute_dtype=cfg.dtype, hoist_basis=False)
+        head = _head_serving(params, cfg)
+        extras = extras or {}
+        self.schedule = (adaptive.escalation_schedule(policy)
+                         if adaptive_mode else (policy.r_max,))
+
+        self._prefill = jax.jit(
+            lambda tokens, lengths: api.prefill(
+                params, tokens, cfg, cache_len=cache_len,
+                prompt_lengths=lengths, **extras))
+
+        def align_scatter(pool, new, idx, delta):
+            """Roll+rerotate admission rows into the pool timeline."""
+            out = {}
+            for key, leaf in pool.items():
+                nw = new[key]
+                if key == "pos":
+                    out[key] = leaf
+                elif key == "start":
+                    out[key] = leaf.at[idx].set(nw + delta, mode="drop")
+                elif key in ("k", "v"):
+                    rolled = jnp.roll(nw, delta, axis=2)
+                    if key == "k" and cfg.use_rope:
+                        rolled = _rotate_k(rolled, delta, cfg.rope_theta)
+                    out[key] = leaf.at[:, idx].set(rolled, mode="drop")
+                else:                       # xk/xv/ssm/conv: slot-local
+                    out[key] = leaf.at[:, idx].set(nw, mode="drop")
+            return out
+
+        self._align_scatter = jax.jit(align_scatter, donate_argnums=(0,))
+
+        self._decode_hidden = jax.jit(
+            lambda cache, token: api.decode_hidden(params, cache, token,
+                                                   cfg),
+            donate_argnums=(0,))
+        self._basis = jax.jit(
+            lambda h: activation_basis(head, h.astype(jnp.float32),
+                                       self.hcfg))
+        self._scatter_hidden = jax.jit(
+            lambda pool, rows, idx: pool.at[idx].set(
+                rows.astype(pool.dtype), mode="drop"),
+            donate_argnums=(0,))
+
+        grng, pol = cfg.grng, policy
+
+        def round_fn(abasis, stats, base, active, undecided, r_k):
+            sel = adaptive.stream_selections(grng, base, stats["n"], r_k)
+            samples = mix_samples(abasis, sel, self.hcfg)
+            stats = adaptive.update_stats(stats, samples,
+                                          mask=active & undecided)
+            fin = adaptive.finalize(stats)
+            if adaptive_mode:
+                verdict = triage.decide(fin, pol, final=fin["n"] >= pol.r_max)
+            else:
+                verdict = triage.fixed_r_decide(fin, pol)
+            return stats, verdict, fin
+
+        self._rounds = {
+            r_k: jax.jit(lambda ab, st, b, a, u, _r=r_k:
+                         round_fn(ab, st, b, a, u, _r),
+                         donate_argnums=(1,))
+            for r_k in set(self.schedule)
+        }
+        self.cache = None
+        self.token = None
+        self.hidden = None
+        self.base = None
+        self.vocab_padded = cfg.vocab_padded
+
+    # -- admission ------------------------------------------------------
+    def _pad_prompt(self, tokens: np.ndarray) -> tuple[np.ndarray, int]:
+        tokens = np.asarray(tokens, np.int32)[-self.prompt_len:]
+        length = tokens.shape[0]
+        if length < self.prompt_len:
+            tokens = np.concatenate(
+                [np.zeros((self.prompt_len - length,), np.int32), tokens])
+        return tokens, length
+
+    def _admit(self) -> None:
+        if not self.queue:
+            return
+        pos = int(self.cache["pos"]) if self.cache is not None else \
+            self.prompt_len
+        # FIFO admission with a PER-REQUEST capacity bound: a request
+        # admitted at clock ``pos`` writes cache entries up to
+        # pos + max_new_tokens - 1.  Stop at the first request that
+        # would overflow (it waits for the pool to drain and rebase).
+        if self.prompt_len + self.queue[0].max_new_tokens > self.cache_len:
+            bad = self.queue[0]
+            raise ValueError(
+                f"request {bad.rid}: max_new_tokens={bad.max_new_tokens} "
+                f"cannot fit even a fresh pool (prompt_len="
+                f"{self.prompt_len}, cache_len={self.cache_len})")
+        if self.cache is not None and pos > self.prompt_len \
+                and not self.midstream_ok:
+            return          # non-re-basable trunk: wait for pool rebase
+        reqs = []
+        while (self.queue and len(reqs) < len(self.free)
+               and pos + self.queue[0].max_new_tokens <= self.cache_len):
+            reqs.append(self.queue.popleft())
+        take = len(reqs)
+        if take == 0:
+            return
+        toks = np.zeros((self.n_slots, self.prompt_len), np.int32)
+        lens = np.full((self.n_slots,), self.prompt_len, np.int32)
+        for j, r in enumerate(reqs):
+            toks[j], lens[j] = self._pad_prompt(r.payload)
+        new_cache, last_h = self._prefill(jnp.asarray(toks),
+                                          jnp.asarray(lens))
+        now = time.time()
+        idx = np.full((self.n_slots,), self.n_slots, np.int32)
+        for j, req in enumerate(reqs):
+            s = self.free.pop()
+            idx[j] = s
+            self.slots[s].req = req
+            self.slots[s].admit_s = now
+        idxj = jnp.asarray(idx)
+        if self.cache is None:
+            self.cache = new_cache
+            self.hidden = jnp.zeros((self.n_slots, last_h.shape[-1]),
+                                    last_h.dtype)
+        else:
+            delta = pos - self.prompt_len
+            self.cache = self._align_scatter(self.cache, new_cache, idxj,
+                                             jnp.int32(delta))
+        # the prefill hidden decides each admitted slot's FIRST token —
+        # no re-feed of the last prompt token into decode.
+        self.hidden = self._scatter_hidden(self.hidden, last_h, idxj)
+        self.metrics.mark(now)
+
+    # -- main loop ------------------------------------------------------
+    def run(self, max_ticks: int = 10_000) -> dict:
+        """Tick = decide (head-sample self.hidden) → commit/retire →
+        decode committed tokens into the next hidden.  The first
+        decision of every request comes from its PREFILL hidden, so
+        each prompt token enters the KV cache exactly once."""
+        self.base = np.zeros((self.n_slots,), np.uint32)
+        tick = 0
+        while tick < max_ticks:
+            tick += 1
+            self._admit()
+            if self.n_active == 0:
+                if not self.queue:
+                    break
+                self.cache = None                      # rebase the pool
+                continue
+            active = np.array([s.req is not None for s in self.slots])
+            # one token decision for every active slot
+            abasis = self._basis(self.hidden)
+            self.stats = adaptive.init_stats(self.n_slots, self.vocab_padded)
+            self.base = self._next_bases(self.n_slots)
+            undecided = active.copy()
+            spent = np.zeros((self.n_slots,), np.int64)
+            fin = verdict = None
+            for r_k in self.schedule:
+                st, v, fin = self._rounds[r_k](
+                    abasis, self.stats, jnp.asarray(self.base),
+                    jnp.asarray(active), jnp.asarray(undecided))
+                self.stats = st
+                verdict = np.asarray(v)
+                spent[undecided] += r_k
+                undecided = undecided & (verdict == ESCALATE)
+                if not undecided.any():
+                    break
+            fin = {k: np.asarray(v) for k, v in fin.items()}
+            self.token = jnp.asarray(
+                fin["prediction"].astype(np.int32)[:, None])
+            for i in np.nonzero(active)[0]:
+                slot = self.slots[i]
+                slot.n_samples += int(spent[i])
+                slot.n_decisions += 1
+                done = slot.n_decisions >= slot.req.max_new_tokens
+                if verdict[i] == FLAG or (verdict[i] == ACCEPT and done):
+                    self._retire(i, verdict[i], fin, extra_samples=0)
+            if self.n_active == 0 and not self.queue:
+                break                       # nothing left to decode for
+            # advance the pool clock: committed tokens -> next hidden
+            self.hidden, self.cache = self._decode_hidden(self.cache,
+                                                          self.token)
+        return self.metrics.summary()

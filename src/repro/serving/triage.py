@@ -1,0 +1,93 @@
+"""Confidence triage: the paper's Fig. 1 three-way decision as a policy.
+
+The deployment story of the paper is an aerial platform that must
+decide, per detection, whether to (a) trust the result and move on,
+(b) spend more compute (here: more CLT-GRNG samples; on the drone: a
+costly descend-and-verify maneuver), or (c) hand the case to a human /
+high-fidelity verifier.  We parameterize that as a three-way verdict
+over the running predictive statistics (serving/adaptive.py):
+
+  ACCEPT    confidence ≥ τ_conf  and  mutual information ≤ τ_mi,
+            certain at the current sample count,
+  FLAG      confidently *outside* the accept region — epistemic
+            uncertainty τ_mi exceeded or confidence unreachable,
+  ESCALATE  the accept/flag boundary is within ±z·SE of the estimate:
+            draw more samples (sequential-test stopping rule).
+
+Escalation is only available while n < r_max; at the sample budget the
+verdict collapses to accept/flag on the point estimates — exactly what
+a fixed-R=20 system would have decided, so adaptive fidelity changes
+*cost*, never the asymptotic decision rule.
+
+All functions are pure jnp over [B]-shaped stats — jit/vmap friendly,
+usable inside the engine's round function.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+ACCEPT, ESCALATE, FLAG = 0, 1, 2
+VERDICT_NAMES = {ACCEPT: "accept", ESCALATE: "escalate", FLAG: "flag"}
+
+
+@dataclasses.dataclass(frozen=True)
+class TriagePolicy:
+    """Thresholds for the three-way decision (paper Fig. 1).
+
+    conf_threshold / mi_threshold define the accept region; ``z`` is the
+    width (in standard errors of the MC estimate) of the ambiguity band
+    that triggers escalation; r_min/r_max/r_growth define the
+    escalation schedule (adaptive.escalation_schedule).
+    """
+    conf_threshold: float = 0.8
+    mi_threshold: float = 0.5
+    z: float = 1.0
+    r_min: int = 4
+    r_max: int = 20
+    r_growth: int = 2
+
+    def __post_init__(self):
+        if self.r_min < 1:
+            raise ValueError(f"r_min must be >= 1, got {self.r_min}")
+        if self.r_max < self.r_min:
+            raise ValueError(
+                f"r_max ({self.r_max}) must be >= r_min ({self.r_min})")
+        if self.r_growth < 1:
+            raise ValueError(f"r_growth must be >= 1, got {self.r_growth}")
+
+
+def decide(stats: dict, policy: TriagePolicy, *, final) -> jnp.ndarray:
+    """Three-way verdict [B] from running stats (adaptive.finalize).
+
+    ``final`` (bool or [B] bool): sample budget exhausted — no more
+    escalation available; decide on point estimates.
+    """
+    conf = stats["confidence"]
+    mi = stats["mutual_information"]
+    conf_se = policy.z * stats["confidence_se"]
+    mi_se = policy.z * stats["mutual_information_se"]
+    tau_c, tau_mi = policy.conf_threshold, policy.mi_threshold
+
+    in_accept = (conf >= tau_c) & (mi <= tau_mi)
+    accept_certain = (conf - conf_se >= tau_c) & (mi + mi_se <= tau_mi)
+    flag_certain = (conf + conf_se < tau_c) | (mi - mi_se > tau_mi)
+
+    final = jnp.broadcast_to(jnp.asarray(final), conf.shape)
+    verdict = jnp.full(conf.shape, ESCALATE, jnp.int32)
+    verdict = jnp.where(accept_certain, ACCEPT, verdict)
+    verdict = jnp.where(flag_certain, FLAG, verdict)
+    # Budget exhausted: collapse the ambiguous band onto point estimates.
+    forced = jnp.where(in_accept, ACCEPT, FLAG)
+    return jnp.where(final & (verdict == ESCALATE), forced, verdict)
+
+
+def fixed_r_decide(stats: dict, policy: TriagePolicy) -> jnp.ndarray:
+    """The non-adaptive baseline: accept/flag on point estimates only —
+    what the paper's fixed R = 20 dataflow computes.  Used by the
+    serving bench to match flagged fractions across modes."""
+    in_accept = ((stats["confidence"] >= policy.conf_threshold)
+                 & (stats["mutual_information"] <= policy.mi_threshold))
+    return jnp.where(in_accept, ACCEPT, FLAG).astype(jnp.int32)

@@ -1,0 +1,295 @@
+"""Serving subsystem: adaptive statistics, engine invariants, triage.
+
+Three claims are load-bearing and tested here:
+
+  1. the incremental (running-sum) predictive statistics equal
+     core.uncertainty.predictive_stats on the same samples, and
+     escalation via ``sample0`` stream offsets EXTENDS the GRNG stream —
+     the union of rounds is bit-identical to one large draw, so a fully
+     escalated request computes exactly the fixed-R distribution;
+  2. the continuous-batching engine's slot bookkeeping: every request
+     retires exactly once, sample spend is bounded by the policy, slots
+     return to the free pool, and mid-batch admission is numerically
+     faithful for RoPE transformers;
+  3. the triage policy is monotone in its thresholds and collapses to
+     the fixed-R rule at the sample budget — on clean AND corrupted
+     SARD batches.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sampling import (BayesHeadConfig, activation_basis,
+                                 logit_samples_rank16, mix_samples,
+                                 prepare_serving_head)
+from repro.core.uncertainty import predictive_stats
+from repro.serving import (ACCEPT, ESCALATE, FLAG, Request,
+                           SarServingEngine, TriagePolicy, decide,
+                           escalation_schedule, finalize, fixed_r_decide,
+                           init_stats, stream_selections, update_stats)
+
+
+def _head_and_x(k=32, n=8, b=5, hoist=True):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    mu = jax.random.normal(k1, (k, n)) * 0.05
+    sg = jax.nn.softplus(jax.random.normal(k2, (k, n)) - 3) * 0.2
+    cfg = BayesHeadConfig(num_samples=20, mode="rank16",
+                          compute_dtype=jnp.float32, hoist_basis=hoist)
+    head = prepare_serving_head(mu, sg, cfg)
+    x = jax.random.normal(k3, (b, k))
+    return head, x, cfg
+
+
+# ----------------------------------------------------------------------
+# 1. adaptive statistics
+# ----------------------------------------------------------------------
+def test_running_stats_match_predictive_stats():
+    head, x, cfg = _head_and_x()
+    samples = logit_samples_rank16(head, x, cfg, num_samples=20)
+    ref = predictive_stats(samples)
+    stats = init_stats(x.shape[0], samples.shape[-1])
+    # fold in uneven chunks — escalation-round shaped
+    for lo, hi in ((0, 4), (4, 12), (12, 20)):
+        stats = update_stats(stats, samples[lo:hi])
+    fin = finalize(stats)
+    for key in ("probs", "confidence", "predictive_entropy",
+                "expected_entropy", "mutual_information"):
+        np.testing.assert_allclose(np.asarray(fin[key]),
+                                   np.asarray(ref[key]), atol=1e-5,
+                                   err_msg=key)
+    np.testing.assert_array_equal(np.asarray(fin["prediction"]),
+                                  np.asarray(ref["prediction"]))
+    assert int(fin["n"][0]) == 20
+
+
+def test_stream_extension_matches_single_draw():
+    """Rounds at consecutive sample0 offsets == one large draw."""
+    head, x, cfg = _head_and_x()
+    ab = activation_basis(head, x, cfg)
+    b = x.shape[0]
+    base = jnp.asarray(np.arange(b, dtype=np.uint32) * 100)
+    full = mix_samples(ab, stream_selections(cfg.grng, base,
+                                             jnp.zeros(b, jnp.int32), 12),
+                       cfg)
+    parts = []
+    drawn = jnp.zeros(b, jnp.int32)
+    for r in (4, 8):
+        parts.append(mix_samples(
+            ab, stream_selections(cfg.grng, base, drawn, r), cfg))
+        drawn = drawn + r
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(parts, 0)),
+                               np.asarray(full), rtol=1e-6)
+
+
+def test_hoisted_basis_matches_rehash():
+    head_h, x, cfg_h = _head_and_x(hoist=True)
+    head_r, _, cfg_r = _head_and_x(hoist=False)
+    assert "sigma_basis" in head_h and "sigma_basis" not in head_r
+    s_h = logit_samples_rank16(head_h, x, cfg_h)
+    s_r = logit_samples_rank16(head_r, x, cfg_r)
+    np.testing.assert_allclose(np.asarray(s_h), np.asarray(s_r), atol=1e-5)
+
+
+def test_escalation_schedule_sums_to_budget():
+    pol = TriagePolicy(r_min=4, r_max=20, r_growth=2)
+    sched = escalation_schedule(pol)
+    assert sum(sched) == 20 and sched[0] == 4
+    sched1 = escalation_schedule(TriagePolicy(r_min=20, r_max=20))
+    assert sched1 == (20,)
+
+
+# ----------------------------------------------------------------------
+# 2. engine invariants (SAR stream)
+# ----------------------------------------------------------------------
+def _sar_setup():
+    from repro.models.sar_cnn import SarCnnConfig, init_sar_cnn
+    cfg = SarCnnConfig()
+    params = init_sar_cnn(jax.random.PRNGKey(3), cfg)
+    return params, cfg
+
+
+def _sar_requests(n, corrupt_frac=0.0):
+    from repro.launch.serve import make_sar_stream
+    return make_sar_stream(n, corrupt_frac=corrupt_frac, batch=16)
+
+
+def _run_engine(params, cfg, reqs, policy, adaptive):
+    eng = SarServingEngine(params, cfg, n_slots=8, policy=policy,
+                           adaptive_mode=adaptive)
+    for r in reqs:
+        eng.submit(r)
+    summary = eng.run()
+    return eng, summary
+
+
+def test_engine_slot_retirement_invariants():
+    params, cfg = _sar_setup()
+    reqs = _sar_requests(20)
+    policy = TriagePolicy(conf_threshold=0.6, mi_threshold=0.05,
+                          r_min=4, r_max=20)
+    eng, summary = _run_engine(params, cfg, reqs, policy, adaptive=True)
+    # every request retired exactly once, queue drained, slots all free
+    assert summary["requests"] == 20 and summary["decisions"] == 20
+    assert sorted(r.rid for r in eng.metrics.records) == list(range(20))
+    assert len(eng.free) == eng.n_slots and not eng.queue
+    for rec in eng.metrics.records:
+        assert policy.r_min <= rec.n_samples <= policy.r_max
+        assert rec.n_samples % policy.r_min == 0
+        assert rec.verdict in (ACCEPT, FLAG)
+        assert rec.done_s >= rec.admit_s >= 0
+
+
+def test_engine_full_escalation_equals_fixed_r():
+    """With an unbounded ambiguity band the adaptive engine escalates
+    every request to r_max; its per-request stats must then be
+    IDENTICAL to the fixed-R engine's (same stream regions, same
+    samples — exactness of stream extension, end to end)."""
+    params, cfg = _sar_setup()
+    policy = TriagePolicy(conf_threshold=0.6, mi_threshold=0.05,
+                          r_min=4, r_max=20, z=1e9)
+    eng_a, _ = _run_engine(params, cfg, _sar_requests(12), policy, True)
+    fixed_pol = TriagePolicy(conf_threshold=0.6, mi_threshold=0.05,
+                             r_min=4, r_max=20)
+    eng_f, _ = _run_engine(params, cfg, _sar_requests(12), fixed_pol, False)
+    recs_a = {r.rid: r for r in eng_a.metrics.records}
+    recs_f = {r.rid: r for r in eng_f.metrics.records}
+    assert set(recs_a) == set(recs_f)
+    for rid in recs_a:
+        assert recs_a[rid].n_samples == 20 == recs_f[rid].n_samples
+        assert recs_a[rid].prediction == recs_f[rid].prediction
+        np.testing.assert_allclose(recs_a[rid].confidence,
+                                   recs_f[rid].confidence, atol=1e-5)
+        np.testing.assert_allclose(recs_a[rid].mutual_information,
+                                   recs_f[rid].mutual_information,
+                                   atol=1e-5)
+        assert recs_a[rid].verdict == recs_f[rid].verdict
+
+
+def test_engine_oversubscribed_queue_drains():
+    params, cfg = _sar_setup()
+    reqs = _sar_requests(30, corrupt_frac=0.3)   # 30 reqs, 8 slots
+    policy = TriagePolicy(conf_threshold=0.6, mi_threshold=0.05)
+    eng, summary = _run_engine(params, cfg, reqs, policy, adaptive=True)
+    assert summary["requests"] == 30
+    assert summary["mean_samples_per_decision"] <= policy.r_max
+
+
+# ----------------------------------------------------------------------
+# 2b. LM engine: mid-batch admission + retirement
+# ----------------------------------------------------------------------
+def test_lm_admission_alignment_is_faithful():
+    """Left-pad + roll + RoPE re-rotation + start-mask admission equals
+    an isolated decode of the same prompt (bf16 tolerance)."""
+    from repro.configs import get_config
+    from repro.models.registry import get_api
+    from repro.serving.engine import _rotate_k
+
+    cfg = get_config("qwen3-0.6b", smoke=True)
+    api = get_api(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    P0, CL, delta = 12, 32, 7
+    prompt = jax.random.randint(jax.random.PRNGKey(5), (1, 8), 0, cfg.vocab)
+
+    cache_ref, _ = api.prefill(params, prompt, cfg, cache_len=CL)
+    padded = jnp.concatenate(
+        [jnp.zeros((1, P0 - 8), jnp.int32), prompt], 1)
+    cache_adm, _ = api.prefill(params, padded, cfg, cache_len=CL,
+                               prompt_lengths=jnp.array([8]))
+    k = _rotate_k(jnp.roll(cache_adm["k"], delta, axis=2), delta,
+                  cfg.rope_theta)
+    cache_adm = dict(cache_adm, k=k,
+                     v=jnp.roll(cache_adm["v"], delta, axis=2),
+                     pos=jnp.int32(P0 + delta),
+                     start=cache_adm["start"] + delta)
+    tok = prompt[:, -1:]
+    for _ in range(2):
+        x_ref, cache_ref = api.decode_hidden(params, cache_ref, tok, cfg)
+        x_adm, cache_adm = api.decode_hidden(params, cache_adm, tok, cfg)
+        ref = np.asarray(x_ref, np.float32)
+        adm = np.asarray(x_adm, np.float32)
+        denom = max(np.abs(ref).max(), 1e-3)
+        assert np.abs(ref - adm).max() / denom < 0.05   # bf16 rounding
+        tok = jnp.argmax(x_ref @ params["head"]["mu"].astype(x_ref.dtype),
+                         -1)[:, None] % cfg.vocab
+
+
+def test_lm_engine_continuous_batching():
+    from repro.configs import get_config
+    from repro.models.registry import get_api
+    from repro.serving import LMServingEngine
+
+    cfg = get_config("qwen3-0.6b", smoke=True)
+    api = get_api(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (3, 8), 0, cfg.vocab), np.int32)
+    # accept-always policy: every token decides at the first round
+    policy = TriagePolicy(conf_threshold=0.0, mi_threshold=1e9,
+                          r_min=4, r_max=8)
+    eng = LMServingEngine(params, cfg, n_slots=2, prompt_len=8,
+                          cache_len=24, policy=policy, adaptive_mode=True)
+    for i in range(3):
+        eng.submit(Request(rid=i, payload=prompts[i],
+                           arrival_s=time.time(), max_new_tokens=2))
+    summary = eng.run()
+    assert summary["requests"] == 3           # 3rd admitted mid-stream
+    assert summary["decisions"] == 6          # 2 tokens each
+    assert summary["accept_fraction"] == 1.0
+    assert summary["mean_samples_per_decision"] == 4.0
+    assert len(eng.free) == eng.n_slots and not eng.queue
+
+
+# ----------------------------------------------------------------------
+# 3. triage thresholds on clean vs corrupted SARD
+# ----------------------------------------------------------------------
+def _batch_stats(corruption=None):
+    from repro.data.sard import SardConfig, batch_at, corrupted_batch
+    from repro.models.sar_cnn import (SarCnnConfig, init_sar_cnn,
+                                      logit_samples_serve)
+    cfg = SarCnnConfig()
+    params = init_sar_cnn(jax.random.PRNGKey(3), cfg)
+    dcfg = SardConfig(image_size=32, seed=7)
+    batch = (batch_at(dcfg, 500, 64) if corruption is None
+             else corrupted_batch(dcfg, 500, 64, corruption, 1.0))
+    samples = logit_samples_serve(params, batch["images"], cfg, 20)
+    stats = init_stats(64, samples.shape[-1])
+    return finalize(update_stats(stats, samples))
+
+
+@pytest.mark.parametrize("corruption", [None, "fog"])
+def test_triage_threshold_monotone_and_final_collapse(corruption):
+    fin = _batch_stats(corruption)
+    prev_flagged = -1.0
+    for tau in (0.3, 0.6, 0.9):
+        pol = TriagePolicy(conf_threshold=tau, mi_threshold=1e9)
+        v_fixed = np.asarray(fixed_r_decide(fin, pol))
+        flagged = (v_fixed == FLAG).mean()
+        assert flagged >= prev_flagged          # monotone in τ_conf
+        prev_flagged = flagged
+        # at the sample budget the sequential rule collapses to fixed-R
+        v_final = np.asarray(decide(fin, pol, final=True))
+        assert (v_final != ESCALATE).all()
+        np.testing.assert_array_equal(v_final, v_fixed)
+
+
+def test_triage_ambiguity_band_escalates():
+    fin = _batch_stats()
+    med = float(np.median(np.asarray(fin["confidence"])))
+    pol = TriagePolicy(conf_threshold=med, mi_threshold=1e9, z=1e9)
+    v = np.asarray(decide(fin, pol, final=False))
+    assert (v == ESCALATE).all()                 # unbounded band
+    v2 = np.asarray(decide(fin, pol, final=True))
+    assert (v2 != ESCALATE).all()                # budget forces decision
+
+
+def test_triage_mi_threshold_flags_epistemic():
+    fin = _batch_stats()
+    mi = np.asarray(fin["mutual_information"])
+    tau_mi = float(np.percentile(mi, 50))
+    pol = TriagePolicy(conf_threshold=0.0, mi_threshold=tau_mi)
+    v = np.asarray(fixed_r_decide(fin, pol))
+    assert (v == FLAG).sum() == (mi > tau_mi).sum()

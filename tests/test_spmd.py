@@ -30,14 +30,14 @@ def test_sharded_moe_matches_gspmd_oracle():
     run_spmd("""
 import jax, jax.numpy as jnp, numpy as np
 from repro.models.moe import init_moe, moe_apply, make_sharded_moe
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh_compat, mesh_context
+mesh = make_mesh_compat((4, 2), ("data", "model"))
 E, D, F, k = 4, 32, 64, 2
 p = init_moe(jax.random.PRNGKey(0), 1, D, F, E)
 r, wi, wg, wo = p["router"][0], p["wi"][0], p["wg"][0], p["wo"][0]
 x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, D))
 y_ref, _ = moe_apply(x, r, wi, wg, wo, top_k=k, capacity_factor=8.0)
-with jax.set_mesh(mesh):
+with mesh_context(mesh):
     moe = make_sharded_moe(mesh, top_k=k, capacity_factor=8.0,
                            n_experts=E, dp_axes=("data",))
     y, _ = jax.jit(moe)(x, r, wi, wg, wo)
@@ -60,8 +60,8 @@ from repro.data.tokens import TokenPipelineConfig, batch_at
 
 cfg0 = get_config("qwen3-0.6b", smoke=True)
 opt_cfg = AdamWConfig()
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh_compat, mesh_context
+mesh = make_mesh_compat((2, 2), ("data", "model"))
 pipe = TokenPipelineConfig(vocab=cfg0.vocab, seq_len=16, global_batch=4)
 batch = batch_at(pipe, 0)
 
@@ -71,7 +71,7 @@ opt = init_opt_state(params)
 ref_step = make_train_step(cfg0, opt_cfg)
 p_ref, o_ref, m_ref = jax.jit(ref_step)(params, opt, batch)
 
-with jax.set_mesh(mesh):
+with mesh_context(mesh):
     jitted, _, _, cfg2 = jit_train_step(cfg0, mesh, opt_cfg, 16, 4)
     p_sh, o_sh, m_sh = jitted(params, opt, batch)
 assert abs(float(m_ref["loss"]) - float(m_sh["loss"])) < 2e-2, (
@@ -112,8 +112,8 @@ from repro.models.registry import get_api
 from repro.data.tokens import TokenPipelineConfig, batch_at
 
 cfg0 = get_config("qwen3-1.7b", smoke=True)
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh_compat, mesh_context
+mesh = make_mesh_compat((2, 2), ("data", "model"))
 pipe = TokenPipelineConfig(vocab=cfg0.vocab, seq_len=16, global_batch=8)
 batch = batch_at(pipe, 0)
 api = get_api(cfg0)
@@ -125,11 +125,11 @@ def fresh():
     return p, init_opt_state(p)
 
 params, opt = fresh()
-with jax.set_mesh(mesh):
+with mesh_context(mesh):
     j1, _, _, _ = jit_train_step(cfg0, mesh, AdamWConfig(), 16, 8)
     p1, o1, m1 = j1(params, opt, batch)
 params, opt = fresh()
-with jax.set_mesh(mesh):
+with mesh_context(mesh):
     j4, _, _, _ = jit_train_step(cfg0, mesh, AdamWConfig(), 16, 8,
                                  microbatches=4)
     p4, o4, m4 = j4(params, opt, batch)

@@ -1,0 +1,232 @@
+"""Monte-Carlo chip-variation sweep: does calibration hold the fleet?
+
+The paper characterizes ONE die.  A deployment ships a population, and
+the question that decides deployed accuracy (cf. Bayes2IMC / FeBiM) is
+whether per-instance calibration — the paper's own §III-B1 measurement,
+re-run per chip (hw/calib.py) — recovers the golden-chip operating
+point across process corner, temperature, read noise, and programming
+error.  This benchmark samples ≥16 chip instances per severity level,
+deploys the SAME trained SAR Bayesian-head CNN onto each twice
+(golden factory transform vs per-instance recalibration), and measures
+accuracy / adaptive-ECE / mutual information / flagged fraction on
+clean and fog-corrupted SARD streams.
+
+The conv trunk runs ideal (the head is the paper's Bayesian story and
+the variation target); per-chip degradation enters through the GRNG
+arrays, the standardization constants, and conductance programming
+noise on the stored (µ', σ).
+
+Outputs:
+  * CSV rows through benchmarks/run.py (``bench()``),
+  * a JSON report (per-instance rows + aggregates) at
+    artifacts/hw_variation/report.json — uploaded as a CI artifact.
+
+Env knobs (CI smoke): HW_VARIATION_INSTANCES (default 16),
+HW_VARIATION_SEVERITIES (comma floats, default "1.0,2.5").
+
+Run: PYTHONPATH=src python -m benchmarks.hw_variation [--instances N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bayes_layer import sigma_of
+from repro.core.sampling import BayesHeadConfig, logit_samples
+from repro.core.uncertainty import uq_report
+from repro.data.sard import SardConfig, batch_at, corrupted_batch
+from repro.hw import (VariationSpec, calibration_report, compile_network,
+                      prepare_instance_head, sample_instances)
+from repro.models.sar_cnn import SarCnnConfig, features
+from repro.serving import TriagePolicy, finalize, fixed_r_decide, init_stats, \
+    update_stats
+from repro.serving.triage import FLAG
+
+ART = Path("artifacts/hw_variation")
+EVAL_STEP0 = 700            # past training and serving streams
+EVAL_BATCH = 96
+R_SAMPLES = 20
+SEED = 2026
+POLICY = TriagePolicy(conf_threshold=0.7, mi_threshold=0.05)
+
+
+def _n_instances() -> int:
+    return int(os.environ.get("HW_VARIATION_INSTANCES", "16"))
+
+
+def _severities() -> tuple[float, ...]:
+    raw = os.environ.get("HW_VARIATION_SEVERITIES", "1.0,2.5")
+    return tuple(float(s) for s in raw.split(","))
+
+
+def _eval_head(head, scfg, feats, labels) -> dict:
+    samples = logit_samples(head, feats, scfg, num_samples=R_SAMPLES)
+    uq = uq_report(samples, labels)
+    stats = init_stats(feats.shape[0], samples.shape[-1])
+    fin = finalize(update_stats(stats, samples))
+    flagged = float((np.asarray(fixed_r_decide(fin, POLICY)) == FLAG).mean())
+    return {
+        "accuracy": float(uq["accuracy"]),
+        "aece": float(uq["aece"]),
+        "aurc": float(uq["aurc"]),
+        "mean_mutual_information": float(uq["mean_mutual_information"]),
+        "flagged_fraction": flagged,
+    }
+
+
+def _eval_sets(params, cfg):
+    """(name, feats, labels) eval sets — trunk is chip-independent, so
+    features are computed once and reused across the whole fleet.  Fog
+    severity 0.3 keeps the corrupted stream informative (0.688 golden
+    accuracy) rather than saturated at chance."""
+    dcfg = SardConfig(image_size=cfg.image_size, seed=7)
+    clean = batch_at(dcfg, EVAL_STEP0, EVAL_BATCH)
+    fog = corrupted_batch(dcfg, EVAL_STEP0, EVAL_BATCH, "fog", 0.3)
+    return [
+        ("clean", features(params, clean["images"], cfg), clean["labels"]),
+        ("fog", features(params, fog["images"], cfg), clean["labels"]),
+    ]
+
+
+def run_sweep(n_instances: int | None = None,
+              severities: tuple[float, ...] | None = None,
+              calib_samples: int = 64) -> dict:
+    from benchmarks.serving_bench import trained_params
+    cfg = SarCnnConfig()
+    params = trained_params(cfg)
+    base_hcfg = BayesHeadConfig(num_samples=R_SAMPLES, mode="rank16",
+                                grng=cfg.grng, compute_dtype=jnp.float32)
+    n_instances = n_instances or _n_instances()
+    severities = severities or _severities()
+    eval_sets = _eval_sets(params, cfg)
+    mu, sg = params["head"]["mu"], sigma_of(params["head"])
+
+    # Golden-chip reference: the characterized-die operating point every
+    # deployed instance should reproduce.  "Recovery" below is measured
+    # as |metric(chip) − metric(golden)| — raw ECE can accidentally dip
+    # on a broken chip (a systematic logit offset deflates confidence),
+    # deviation from golden cannot.
+    from repro.core.sampling import prepare_serving_head
+    gold = prepare_serving_head(mu, sg, base_hcfg)
+    golden = {name: _eval_head(gold, base_hcfg, f, l)
+              for name, f, l in eval_sets}
+    rows = [dict(severity=0.0, chip_id=-1, calibrated=True, data=name,
+                 **golden[name]) for name, _, _ in eval_sets]
+
+    for sev in severities:
+        chips = sample_instances(SEED, n_instances,
+                                 VariationSpec().scaled(sev))
+        for chip in chips:
+            crep = calibration_report(chip, base_hcfg.grng,
+                                      n_samples=calib_samples)
+            for calibrated in (False, True):
+                head, scfg = prepare_instance_head(
+                    mu, sg, base_hcfg, chip, calibrated=calibrated,
+                    n_offset_samples=calib_samples)
+                for name, feats, labels in eval_sets:
+                    m = _eval_head(head, scfg, feats, labels)
+                    rows.append(dict(
+                        severity=sev, chip_id=chip.chip_id,
+                        calibrated=calibrated, data=name,
+                        chip_temp_c=chip.temp_c,
+                        chip_read_sigma=chip.read_sigma,
+                        residual_eps=(crep.residual_eps_cal if calibrated
+                                      else crep.residual_eps_uncal),
+                        calib_energy_J=crep.energy_J if calibrated else 0.0,
+                        acc_dev=abs(m["accuracy"]
+                                    - golden[name]["accuracy"]),
+                        aece_dev=abs(m["aece"] - golden[name]["aece"]),
+                        flagged_dev=abs(m["flagged_fraction"]
+                                        - golden[name]["flagged_fraction"]),
+                        **m))
+
+    # Aggregates: mean over instances per (severity, calibrated, data).
+    agg = {}
+    for sev in severities:
+        for calibrated in (False, True):
+            for name, _, _ in eval_sets:
+                sel = [r for r in rows
+                       if r["severity"] == sev and r["chip_id"] >= 0
+                       and r["calibrated"] == calibrated
+                       and r["data"] == name]
+                key = f"sev{sev}_{'cal' if calibrated else 'uncal'}_{name}"
+                agg[key] = {
+                    m: float(np.mean([r[m] for r in sel]))
+                    for m in ("accuracy", "aece", "aurc",
+                              "mean_mutual_information", "flagged_fraction",
+                              "residual_eps", "acc_dev", "aece_dev",
+                              "flagged_dev")}
+                agg[key]["accuracy_std"] = float(
+                    np.std([r["accuracy"] for r in sel]))
+
+    # Deployed-area context from the tile compiler.
+    from repro.launch.serve import sar_layer_shapes
+    tile_report = compile_network(sar_layer_shapes(cfg)).report(
+        r_samples=R_SAMPLES)
+    report = {
+        "n_instances": n_instances,
+        "severities": list(severities),
+        "eval_batch": EVAL_BATCH,
+        "r_samples": R_SAMPLES,
+        "golden": golden,
+        "tilemap": {k: v for k, v in tile_report.items()
+                    if isinstance(v, (int, float))},
+        "aggregates": agg,
+        "instances": rows,
+    }
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / "report.json").write_text(json.dumps(report, indent=1))
+    return report
+
+
+def bench() -> list[tuple[str, float, str]]:
+    t0 = time.time()
+    report = run_sweep()
+    us = (time.time() - t0) * 1e6 / max(len(report["instances"]), 1)
+    out = []
+    for key, a in sorted(report["aggregates"].items()):
+        out.append((f"hw_variation_{key}", us,
+                    f"acc={a['accuracy']:.3f}±{a['accuracy_std']:.3f};"
+                    f"aece={a['aece']:.3f};"
+                    f"flagged={a['flagged_fraction']:.3f};"
+                    f"acc_dev={a['acc_dev']:.3f};"
+                    f"aece_dev={a['aece_dev']:.3f};"
+                    f"resid_eps={a['residual_eps']:.4f}"))
+    # Headline: deviation from the golden operating point that
+    # per-instance calibration removes, at the top severity.
+    sev = max(report["severities"])
+    u = report["aggregates"][f"sev{sev}_uncal_clean"]
+    c = report["aggregates"][f"sev{sev}_cal_clean"]
+    out.append(("hw_variation_recovery", 0.0,
+                f"sev={sev};acc_dev={u['acc_dev']:.3f}->{c['acc_dev']:.3f};"
+                f"aece_dev={u['aece_dev']:.3f}->{c['aece_dev']:.3f};"
+                f"flagged_dev={u['flagged_dev']:.3f}->"
+                f"{c['flagged_dev']:.3f};"
+                f"json={ART / 'report.json'}"))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--instances", type=int, default=None)
+    ap.add_argument("--severities", type=str, default=None,
+                    help="comma-separated severity multipliers")
+    args = ap.parse_args()
+    if args.instances:
+        os.environ["HW_VARIATION_INSTANCES"] = str(args.instances)
+    if args.severities:
+        os.environ["HW_VARIATION_SEVERITIES"] = args.severities
+    for row in bench():
+        print(",".join(str(x) for x in row))
+
+
+if __name__ == "__main__":
+    main()

@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
   table2_corr        Fig.17/II corruption robustness
   kernel_bench       --        rank16-vs-paper FLOP scaling, kernels
   serving_bench      --        adaptive-R vs fixed-R serving engine
+  hw_variation       --        chip-instance MC sweep, cal vs uncal
   roofline           --        3-term roofline over dry-run artifacts
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only <module>] [--fast]
@@ -27,11 +28,13 @@ MODULES = [
     "sec5a_energy",
     "kernel_bench",
     "serving_bench",
+    "hw_variation",
     "fig16_uq",
     "table2_corr",
     "roofline",
 ]
-FAST_SKIP = {"fig16_uq", "table2_corr", "serving_bench"}  # SAR training
+FAST_SKIP = {"fig16_uq", "table2_corr", "serving_bench",
+             "hw_variation"}  # SAR training
 
 
 def main() -> None:

@@ -59,11 +59,27 @@ class GRNGConfig:
     # Selection sharing: 'layer' | 'tile' | 'cell'.
     granularity: str = "layer"
     tile: int = 64
+    # ------------------------------------------------------------------
+    # Nonideality knobs (repro/hw digital twin; defaults = ideal chip).
+    # Per-chip Vth variation and temperature drift need NO extra fields:
+    # a chip instance re-draws the programmed device states through a
+    # chip-specific ``seed`` and folds uniform current drift into
+    # (i_lo, delta_i, gamma) — see hw/device.py / hw/instance.py.
+    # Cycle-to-cycle read noise cannot be folded into the static device
+    # model: each *read* of a cell's 8-device sum carries fresh additive
+    # noise of ``read_sigma`` µA RMS, hash-keyed by the absolute sample
+    # index so escalation at later sample0 offsets still extends the
+    # stream bit-exactly (serving/adaptive.py relies on this).
+    # ------------------------------------------------------------------
+    read_sigma: float = 0.0
+    noise_seed: int = 0x51CE
 
     def analytic_sum_stats(self) -> tuple[float, float]:
-        """Closed-form mean/SD of the 8-device sum under the device model."""
+        """Closed-form mean/SD of the 8-device sum under the device model
+        (including cycle-to-cycle read noise)."""
         mean = self.k_select * (self.i_lo + 0.5 * self.delta_i)
-        var = self.k_select * (self.delta_i**2 / 4.0 + self.gamma**2)
+        var = (self.k_select * (self.delta_i**2 / 4.0 + self.gamma**2)
+               + self.read_sigma**2)
         return mean, float(np.sqrt(var))
 
 
@@ -132,18 +148,41 @@ def _expand_tile_sel(sel_t: jnp.ndarray, n_rows: int, n_cols: int, tile: int) ->
     return s
 
 
+def read_noise_at(cfg: GRNGConfig, rows: jnp.ndarray, cols: jnp.ndarray,
+                  r_abs) -> jnp.ndarray:
+    """Read noise for broadcastable (cell, absolute-sample) coordinates."""
+    h = hash3(rows, cols, jnp.asarray(r_abs, jnp.uint32), cfg.noise_seed)
+    return cfg.read_sigma * gaussianish(h)
+
+
+def read_noise(cfg: GRNGConfig, n_rows: int, n_cols: int, num_samples: int,
+               sample0: int = 0, row0: int = 0,
+               col0: int = 0) -> jnp.ndarray:
+    """Cycle-to-cycle read noise on the raw 8-device sum (µA).
+
+    -> [R, n_rows, n_cols].  Hash-keyed by (cell, ABSOLUTE sample index)
+    so a draw at ``sample0 = s`` reproduces sample ``s`` of a larger
+    draw — read noise never breaks stream extension.  Zero-mean, so the
+    static offset compensation (``cell_mean_offset``) is unaffected.
+    """
+    rows = row0 + jnp.arange(n_rows, dtype=jnp.uint32)[None, :, None]
+    cols = col0 + jnp.arange(n_cols, dtype=jnp.uint32)[None, None, :]
+    r_abs = sample0 + jnp.arange(num_samples, dtype=jnp.uint32)[:, None, None]
+    return read_noise_at(cfg, rows, cols, r_abs)
+
+
 def raw_sums(cfg: GRNGConfig, n_rows: int, n_cols: int, num_samples: int,
              sample0: int = 0, row0: int = 0, col0: int = 0) -> jnp.ndarray:
     """Un-standardized subset sums. -> [R, n_rows, n_cols] (µA)."""
     currents = device_currents_grid(cfg, n_rows, n_cols, row0, col0)  # [K,N,16]
     if cfg.granularity == "layer":
         sel = selections(cfg, num_samples, sample0)  # [R,16]
-        return jnp.einsum("rj,knj->rkn", sel, currents)
-    if cfg.granularity == "tile":
+        raw = jnp.einsum("rj,knj->rkn", sel, currents)
+    elif cfg.granularity == "tile":
         sel = selections(cfg, num_samples, sample0, n_rows, n_cols)  # [R,t,t,16]
         sel_full = _expand_tile_sel(sel, n_rows, n_cols, cfg.tile)  # [R,K,N,16]
-        return jnp.einsum("rknj,knj->rkn", sel_full, currents)
-    if cfg.granularity == "cell":
+        raw = jnp.einsum("rknj,knj->rkn", sel_full, currents)
+    elif cfg.granularity == "cell":
         rows = row0 + jnp.arange(n_rows, dtype=jnp.uint32)[:, None]
         cols = col0 + jnp.arange(n_cols, dtype=jnp.uint32)[None, :]
 
@@ -152,8 +191,13 @@ def raw_sums(cfg: GRNGConfig, n_rows: int, n_cols: int, num_samples: int,
             return jnp.einsum("knj,knj->kn", sel, currents)
 
         rs = sample0 + jnp.arange(num_samples, dtype=jnp.uint32)
-        return jax.vmap(one_sample)(rs)
-    raise ValueError(cfg.granularity)
+        raw = jax.vmap(one_sample)(rs)
+    else:
+        raise ValueError(cfg.granularity)
+    if cfg.read_sigma:
+        raw = raw + read_noise(cfg, n_rows, n_cols, num_samples, sample0,
+                               row0, col0)
+    return raw
 
 
 def eps(cfg: GRNGConfig, n_rows: int, n_cols: int, num_samples: int,

@@ -164,6 +164,48 @@ def inference_energy(layers: list[LayerShape], r_samples: int = DEPLOY_R,
     }
 
 
+def grid_inference_energy(*, n_det_tiles: int, n_bayes_tiles: int,
+                          r_samples: int = DEPLOY_R, batch: int = 1,
+                          n_passes: int = 1, n_bayes_passes: int = 1,
+                          physical_tiles: int | None = None,
+                          utilization: float = 1.0,
+                          r_latency: int | None = None) -> dict:
+    """Tile-compiler-aware energy/latency/area (hw/tilemap.py reports).
+
+    Unlike ``inference_energy`` (which counts *logical* tiles per
+    layer), this takes the compiler's placed-block counts, so padding
+    waste inside partially-filled tiles is charged — a placed block
+    burns a full tile MVM regardless of how many cells it maps.  Passes
+    serialize: a time-multiplexed network pays one MVM latency per pass
+    plus ``r_latency`` serial σε re-reads for every pass containing
+    Bayesian blocks (``r_latency`` < r_samples when the compiler
+    replicated Bayesian blocks into free tiles: the R samples split
+    across concurrent replicas, same total energy, shorter serial
+    chain).  Area is the *physical* tiles allocated; the headline
+    TOPS/W/mm² scales by the compiler's utilization — the deployed
+    number, vs Table I's ideal 185.
+    """
+    e_det = batch * n_det_tiles * TILE_MVM_ENERGY
+    e_bayes = batch * n_bayes_tiles * (
+        TILE_MVM_ENERGY + r_samples * SIGMA_MVM_ENERGY)
+    grng_samples = batch * n_bayes_tiles * TILE_DIM**2 * r_samples
+    phys = (physical_tiles if physical_tiles is not None
+            else n_det_tiles + n_bayes_tiles)
+    r_lat = r_samples if r_latency is None else r_latency
+    latency = (n_passes + r_lat * n_bayes_passes) * MVM_LATENCY
+    return {
+        "energy_J": e_det + e_bayes,
+        "energy_det_J": e_det,
+        "energy_bayes_J": e_bayes,
+        "grng_samples": grng_samples,
+        "grng_energy_J": grng_samples * GRNG_ENERGY_PER_SAMPLE,
+        "latency_s": latency,
+        "area_mm2": phys * TILE_AREA_MM2,
+        "utilization": utilization,
+        "tops_w_mm2_effective": efficiency_density() * utilization,
+    }
+
+
 def digital_baseline_energy(layers: list[LayerShape], r_samples: int = DEPLOY_R,
                             batch: int = 1) -> float:
     """SOTA digital BNN cost model: 6.2·R× per op on Bayesian layers [20]."""

@@ -23,6 +23,16 @@ standardization constants.  Three execution modes exploit this:
 
 All functions are pure-jnp oracles; kernels/bayes_mvm.py implements the
 fused versions with the CIM 6-bit-ADC numeric path.
+
+Degraded chip instances (repro/hw): when ``cfg.grng.read_sigma > 0``
+(cycle-to-cycle read noise, see hw/device.py) the per-read noise term is
+full-rank per sample, so it cannot ride the 16 basis MVMs.  ``paper``
+mode materializes it per cell (bit-exact twin); ``rank16`` adds its
+*projection* at the logit level — per-cell noise ν(k,n) of RMS
+``read_sigma`` contributes N(0, read_sigma²·Σ_k x_k²σ_kn²) to logit
+(b, n), drawn deterministically from a hash of the selection pattern.
+The two modes then agree in distribution (tested statistically), not
+sample-for-sample; with ``read_sigma == 0`` they remain bit-identical.
 """
 
 from __future__ import annotations
@@ -54,10 +64,46 @@ class BayesHeadConfig:
     # nothing; recomputing the hash per decode step models a chip that
     # re-programs itself every inference, which is exactly wrong.
     hoist_basis: bool = False
+    # Tiled/offloaded hoisting for vocab-scale heads: with
+    # ``hoist_tile_n > 0`` the hoisted basis is stored as HOST-resident
+    # numpy chunks of ``hoist_tile_n`` output columns, streamed to the
+    # device one chunk at a time by ``activation_basis`` — peak device
+    # memory is K·hoist_tile_n·16 instead of K·N·16, so an LM head no
+    # longer pays 16× weight memory to skip per-step hash recompute.
+    hoist_tile_n: int = 0
+
+
+def hoisted_sigma_basis(sigma: jnp.ndarray, grng_cfg: g.GRNGConfig,
+                        compute_dtype, tile_n: int) -> dict:
+    """The hoisted σ⊙I_j basis for a serving head, dense or tiled.
+
+    ``tile_n > 0`` (and < d_out): returns {"sigma_basis_host": tuple of
+    host numpy [K, ≤tile_n, 16] chunks} built column-block by column-
+    block so the full basis never exists on device; otherwise
+    {"sigma_basis": [K, N, 16]} on device.  Shared by
+    ``prepare_serving_head`` (golden chip) and
+    ``hw.calib.prepare_instance_head`` (degraded instance), which
+    differ only in the ``grng_cfg`` supplying the device currents.
+    """
+    import numpy as np
+    kdim, n = sigma.shape
+    if tile_n and tile_n < n:
+        chunks = []
+        for c0 in range(0, n, tile_n):
+            c1 = min(c0 + tile_n, n)
+            cur = g.device_currents_grid(grng_cfg, kdim, c1 - c0,
+                                         col0=c0)              # [K, cn, 16]
+            blk = (sigma[:, c0:c1, None] * cur).astype(compute_dtype)
+            chunks.append(np.asarray(blk))                     # -> host
+        return {"sigma_basis_host": tuple(chunks)}
+    currents = g.device_currents_grid(grng_cfg, kdim, n)       # [K, N, 16]
+    return {"sigma_basis": (sigma[..., None] * currents).astype(
+        compute_dtype)}
 
 
 def prepare_serving_head(mu: jnp.ndarray, sigma: jnp.ndarray,
-                         cfg: BayesHeadConfig) -> dict:
+                         cfg: BayesHeadConfig,
+                         hoist_tile_n: int | None = None) -> dict:
     """One-time deployment transform: offset compensation + quantization.
 
     mu/sigma: [d_in, d_out] variational parameters (σ already softplus'd).
@@ -66,7 +112,15 @@ def prepare_serving_head(mu: jnp.ndarray, sigma: jnp.ndarray,
     the fixed σ⊙I_j matrices the rank-16 sampling path mixes, hoisted so
     a serving engine reuses them across every decode step
     (serving/engine.py).
+
+    ``hoist_tile_n`` (overrides ``cfg.hoist_tile_n``): store the hoisted
+    basis as host-resident numpy chunks of that many output columns
+    instead of one [K, N, 16] device array — vocab-scale heads hoist
+    without 16× device weight memory; ``activation_basis`` streams the
+    chunks.  The chunks are built column-block by column-block so the
+    full basis never exists on device even transiently.
     """
+    tile_n = cfg.hoist_tile_n if hoist_tile_n is None else hoist_tile_n
     mu_p = compensate_mu(mu, sigma, cfg.grng, exact=True)
     if cfg.quant.enabled:
         mu_p, _ = q.quantize_mu(mu_p, cfg.quant)
@@ -76,10 +130,8 @@ def prepare_serving_head(mu: jnp.ndarray, sigma: jnp.ndarray,
         "sigma": sigma.astype(cfg.compute_dtype),
     }
     if cfg.hoist_basis and cfg.mode == "rank16":
-        kdim, n = sigma.shape
-        currents = g.device_currents_grid(cfg.grng, kdim, n)  # [K, N, 16]
-        head["sigma_basis"] = (
-            sigma[..., None] * currents).astype(cfg.compute_dtype)
+        head.update(hoisted_sigma_basis(sigma, cfg.grng, cfg.compute_dtype,
+                                        tile_n))
     return head
 
 
@@ -87,24 +139,30 @@ def _sigma_eps_mvm(x, sigma, cfg: BayesHeadConfig, r0: int, num: int,
                    sel=None):
     """paper mode inner loop: [R] explicit X·(σ⊙ε_r) MVMs via scan."""
     k, n = sigma.shape
+    grng = cfg.grng
     if sel is None:
-        sel = g.selections(cfg.grng, num, r0)  # [R,16] (layer granularity)
+        sel = g.selections(grng, num, r0)  # [R,16] (layer granularity)
 
-    def body(_, sel_r):
-        currents = g.device_currents_grid(cfg.grng, k, n)  # fused by XLA
+    def body(_, xs):
+        sel_r, r_abs = xs
+        currents = g.device_currents_grid(grng, k, n)  # fused by XLA
         raw = jnp.einsum("knj,j->kn", currents, sel_r)
-        eps_r = ((raw - cfg.grng.sum_mean) / cfg.grng.sum_std).astype(x.dtype)
+        if grng.read_sigma:
+            rows = jnp.arange(k, dtype=jnp.uint32)[:, None]
+            cols = jnp.arange(n, dtype=jnp.uint32)[None, :]
+            raw = raw + g.read_noise_at(grng, rows, cols, r_abs)
+        eps_r = ((raw - grng.sum_mean) / grng.sum_std).astype(x.dtype)
         y = x @ (sigma * eps_r)
         return 0, y
 
-    if cfg.grng.granularity == "layer":
-        _, ys = lax.scan(body, 0, sel)
+    if grng.granularity == "layer":
+        r_abs = r0 + jnp.arange(sel.shape[0], dtype=jnp.uint32)
+        _, ys = lax.scan(body, 0, (sel, r_abs))
         return ys  # [R, B, N]
     # tile/cell granularities: materialize ε per sample (oracle path).
-    def body2(_, r):
-        eps_r = g.eps(cfg.grng, k, n, 1, r0)[0].astype(x.dtype)
-        return 0, x @ (sigma * eps_r)
-    _, ys = lax.scan(body2, 0, r0 + jnp.arange(num))
+    def body2(_, eps_r):
+        return 0, x @ (sigma * eps_r.astype(x.dtype))
+    _, ys = lax.scan(body2, 0, g.eps(grng, k, n, num, r0))
     return ys
 
 
@@ -128,7 +186,13 @@ def activation_basis(head: dict, x: jnp.ndarray, cfg: BayesHeadConfig) -> dict:
     (``mix_samples``).  This is the serving engine's per-slot cache: the
     Bayesian-head analogue of a KV cache.
 
-    Returns {"y_mu": [B,N], "x_sigma": [B,N], "m": [B,N,16]}.
+    Returns {"y_mu": [B,N], "x_sigma": [B,N], "m": [B,N,16]}; on a
+    degraded chip instance (``cfg.grng.read_sigma > 0``) additionally
+    ``x_sigsq = (x²)·(σ²)`` [B,N] — the read-noise projection variance
+    ``mix_samples`` needs.  Heads hoisted with ``hoist_tile_n`` carry
+    ``sigma_basis_host`` (numpy column chunks): those are streamed to
+    the device one chunk at a time — call this path OUTSIDE jit, or the
+    chunks become baked-in constants and the memory saving is lost.
     """
     assert cfg.grng.granularity == "layer", "rank16 requires shared selection"
     sigma = head["sigma"]
@@ -137,6 +201,10 @@ def activation_basis(head: dict, x: jnp.ndarray, cfg: BayesHeadConfig) -> dict:
     if "sigma_basis" in head:                       # hoisted at deployment
         m = jnp.einsum("bk,knj->bnj", x,
                        head["sigma_basis"].astype(x.dtype))
+    elif "sigma_basis_host" in head:                # tiled/offloaded hoist
+        m = jnp.concatenate(
+            [jnp.einsum("bk,knj->bnj", x, jnp.asarray(blk, x.dtype))
+             for blk in head["sigma_basis_host"]], axis=1)
     else:
         kdim, n = sigma.shape
 
@@ -149,15 +217,30 @@ def activation_basis(head: dict, x: jnp.ndarray, cfg: BayesHeadConfig) -> dict:
 
         _, m = lax.scan(basis_mvm, 0, jnp.arange(16))   # [16, B, N]
         m = jnp.moveaxis(m, 0, -1)                      # [B, N, 16]
-    return {"y_mu": y_mu, "x_sigma": x_sigma, "m": m}
+    ab = {"y_mu": y_mu, "x_sigma": x_sigma, "m": m}
+    if cfg.grng.read_sigma:
+        ab["x_sigsq"] = (x * x) @ (sigma * sigma)   # [B, N]
+    return ab
 
 
-def mix_samples(abasis: dict, sel: jnp.ndarray, cfg: BayesHeadConfig):
+def mix_samples(abasis: dict, sel: jnp.ndarray, cfg: BayesHeadConfig,
+                sample_idx: jnp.ndarray | None = None):
     """Turn selection vectors into logit samples against a basis cache.
 
     sel: [R, 16] (shared stream) or [R, B, 16] (per-slot streams — a
     serving pool whose slots sit at different stream offsets).
     Returns [R, B, N] samples, exact w.r.t. the paper dataflow.
+
+    On a degraded instance (``cfg.grng.read_sigma > 0``) each sample
+    additionally carries the projected cycle-to-cycle read noise,
+    N(0, read_sigma²·x_sigsq) per logit, hash-keyed by ``sample_idx`` —
+    the absolute selection-stream indices of ``sel`` ([R] or [R, B],
+    what ``adaptive.stream_indices`` computes), so every stream
+    position draws fresh noise and re-reading a region reproduces it.
+    Without ``sample_idx`` the key falls back to the packed selection
+    pattern: still deterministic, but two positions that collide on the
+    same 8-of-16 pattern then share their noise draw (~1.5% per
+    20-sample decision) — prefer passing the indices.
     """
     m, y_mu, x_sigma = abasis["m"], abasis["y_mu"], abasis["x_sigma"]
     gstd, gmean = cfg.grng.sum_std, cfg.grng.sum_mean
@@ -165,7 +248,25 @@ def mix_samples(abasis: dict, sel: jnp.ndarray, cfg: BayesHeadConfig):
         mix = jnp.einsum("rj,bnj->rbn", sel.astype(m.dtype), m)
     else:
         mix = jnp.einsum("rbj,bnj->rbn", sel.astype(m.dtype), m)
-    return y_mu[None] + (mix - gmean * x_sigma[None]) / gstd
+    out = mix - gmean * x_sigma[None]
+    if cfg.grng.read_sigma:
+        from repro.core.hashing import gaussianish, hash3
+        if sample_idx is None:
+            pow2 = (jnp.uint32(1) << jnp.arange(16, dtype=jnp.uint32))
+            key = (sel.astype(jnp.uint32) * pow2).sum(-1)   # [R] or [R,B]
+        else:
+            key = jnp.asarray(sample_idx, jnp.uint32)       # [R] or [R,B]
+        b, n = y_mu.shape
+        if key.ndim == 1:
+            key = key[:, None]                              # [R, 1]
+        h = hash3(key[..., None],                           # [R,(B|1),1]
+                  jnp.arange(b, dtype=jnp.uint32)[None, :, None],
+                  jnp.arange(n, dtype=jnp.uint32)[None, None, :],
+                  cfg.grng.noise_seed)                      # [R, B, N]
+        sigma_read = cfg.grng.read_sigma * jnp.sqrt(
+            jnp.maximum(abasis["x_sigsq"], 0.0)).astype(out.dtype)
+        out = out + gaussianish(h).astype(out.dtype) * sigma_read[None]
+    return y_mu[None] + out / gstd
 
 
 def logit_samples_rank16(head: dict, x: jnp.ndarray, cfg: BayesHeadConfig,
@@ -182,7 +283,9 @@ def logit_samples_rank16(head: dict, x: jnp.ndarray, cfg: BayesHeadConfig,
     num = num_samples or cfg.num_samples
     if sel is None:
         sel = g.selections(cfg.grng, num, sample0)  # [R, 16]
-    return mix_samples(activation_basis(head, x, cfg), sel, cfg)
+    idx = sample0 + jnp.arange(sel.shape[0], dtype=jnp.uint32)
+    return mix_samples(activation_basis(head, x, cfg), sel, cfg,
+                       sample_idx=idx)
 
 
 def logit_moments(head: dict, x: jnp.ndarray, cfg: BayesHeadConfig):
@@ -201,7 +304,8 @@ def logit_moments(head: dict, x: jnp.ndarray, cfg: BayesHeadConfig):
     currents = g.device_currents(grng, rows, cols)          # [K,N,16]
     var_i = currents.var(axis=-1)
     ksel, nd = grng.k_select, grng.n_devices
-    var_eps = (ksel * (1 - ksel / nd) * (nd / (nd - 1)) * var_i
+    var_eps = ((ksel * (1 - ksel / nd) * (nd / (nd - 1)) * var_i
+                + grng.read_sigma**2)
                / grng.sum_std**2).astype(x.dtype)
     mean = x @ head["mu_prime"]
     var = (x * x) @ ((head["sigma"] ** 2) * var_eps)

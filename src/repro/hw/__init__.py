@@ -1,0 +1,37 @@
+"""repro.hw — FeFET digital twin: chip instances, tile compiler, calib.
+
+The rest of the repo models the paper's *golden* chip.  This package
+models the population a deployment actually ships:
+
+  device.py    parameterized nonideality model (corner spread, drift,
+               read noise, ADC/DAC errors, programming noise) and how
+               each term folds into the core GRNG config
+  instance.py  PRNG-keyed frozen chip instances, ckpt-serializable
+  tilemap.py   tile compiler: bounded 64×64 grid, column splitting,
+               pass multiplexing, Bayesian replication, shard-aware
+               placement, utilization/area for the energy model
+  calib.py     per-instance recalibration (measured sum stats + offset
+               re-compensation) and the calibration report
+
+Entry points: ``sample_instances`` → ``prepare_instance_head`` →
+serve/evaluate with the returned head + config (the serving engines'
+rank-16 fast path runs unchanged);  ``compile_network`` →
+``TileProgram.report()`` for deployed area/utilization/energy.
+"""
+
+from repro.hw.calib import (CalibrationReport, calibration_report,
+                            measured_grng, prepare_instance_head)
+from repro.hw.device import VariationSpec, degraded_grng, drift_factor
+from repro.hw.instance import (ChipInstance, load_instances,
+                               sample_instances, save_instances)
+from repro.hw.tilemap import (Placement, TileGrid, TileProgram,
+                              compile_layer, compile_network,
+                              shard_column_partition)
+
+__all__ = [
+    "CalibrationReport", "ChipInstance", "Placement", "TileGrid",
+    "TileProgram", "VariationSpec", "calibration_report", "compile_layer",
+    "compile_network", "degraded_grng", "drift_factor", "load_instances",
+    "measured_grng", "prepare_instance_head", "sample_instances",
+    "save_instances", "shard_column_partition",
+]

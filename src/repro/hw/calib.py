@@ -1,0 +1,144 @@
+"""Per-instance recalibration (paper §III-B1, applied per chip).
+
+An uncalibrated deployment ships every die with the *golden* serving
+transform: µ' compensated against the golden chip's closed-form offsets
+and ε standardized by the nominal Fig. 9 constants (10.1, 0.993).  On a
+real instance both are wrong — its devices were drawn differently, its
+corner shifts the sum statistics, and drift moves them with
+temperature.  Calibration is the paper's own two-step measurement,
+executed on the instance's digital twin:
+
+  1. **Sum-statistics measurement** — re-estimate (sum_mean, sum_std)
+     from N reads across a cell block (core/clt_grng.calibrate), the
+     Fig. 9 procedure.  The serving config swaps in the measured
+     constants.
+  2. **Offset re-compensation** — re-measure the per-cell mean offset
+     Δε with N samples and fold it into µ' (core/offset.compensate_mu
+     with ``exact=False`` — the paper's 54 + 458·N pJ, 12.8 + 0.64·N µs
+     procedure, costed via core/energy.offset_compensation_cost).
+
+Conductance programming error applies to whatever is *written*: the
+compensated µ' and σ pass through ``instance.program_weights`` after
+the digital transform, calibrated or not — calibration cannot fix write
+noise, which bounds how much it recovers (visible in the hw_variation
+benchmark).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core import clt_grng as g
+from repro.core import energy
+from repro.core import quant as q
+from repro.core.offset import compensate_mu
+from repro.core.sampling import BayesHeadConfig
+from repro.hw.instance import ChipInstance
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationReport:
+    chip_id: int
+    nominal_sum_mean: float
+    nominal_sum_std: float
+    measured_sum_mean: float
+    measured_sum_std: float
+    residual_eps_uncal: float     # |E[ε]| under nominal constants+offsets
+    residual_eps_cal: float       # |E[ε]| after per-chip recalibration
+    n_samples: int
+    energy_J: float               # §III-B1 measurement cost
+    time_s: float
+
+
+def measured_grng(icfg: g.GRNGConfig, n_cells: int = 2048,
+                  n_samples: int = 128) -> g.GRNGConfig:
+    """The calibrated serving view: physical params + measured constants.
+
+    Computed eagerly (not via the jitted ``clt_grng.calibrate``): every
+    chip instance is a distinct static config, and a fleet sweep would
+    otherwise recompile per chip.
+    """
+    raw = g.raw_sums(icfg, n_cells, 1, n_samples)
+    return dataclasses.replace(icfg, sum_mean=float(raw.mean()),
+                               sum_std=float(raw.std()))
+
+
+def calibration_report(instance: ChipInstance, base: g.GRNGConfig,
+                       n_samples: int = 64, probe: int = 64) -> CalibrationReport:
+    """Measure one chip against golden; cost from the paper's model.
+
+    ``probe``: edge of the cell block used for the residual-offset
+    probes (a [probe, probe] corner of the array).
+    """
+    icfg = instance.grng(base)
+    ccfg = measured_grng(icfg, n_samples=n_samples)
+    # Residual mean offset of ε̂ after compensation, per deployment mode:
+    # uncal subtracts the GOLDEN chip's offsets under nominal constants;
+    # cal subtracts the measured offsets under measured constants.
+    eps_uncal = g.eps(icfg, probe, probe, 256)
+    d_gold = g.cell_mean_offset(base, probe, probe)
+    resid_uncal = float(jnp.abs((eps_uncal - d_gold[None]).mean()))
+    eps_cal = g.eps(ccfg, probe, probe, 256)
+    d_meas = g.estimate_mean_offset(ccfg, probe, probe, n_samples)
+    resid_cal = float(jnp.abs((eps_cal - d_meas[None]).mean()))
+    e_j, t_s = energy.offset_compensation_cost(n_samples)
+    return CalibrationReport(
+        chip_id=instance.chip_id,
+        nominal_sum_mean=base.sum_mean, nominal_sum_std=base.sum_std,
+        measured_sum_mean=ccfg.sum_mean, measured_sum_std=ccfg.sum_std,
+        residual_eps_uncal=resid_uncal, residual_eps_cal=resid_cal,
+        n_samples=n_samples, energy_J=e_j, time_s=t_s)
+
+
+def prepare_instance_head(mu: jnp.ndarray, sigma: jnp.ndarray,
+                          cfg: BayesHeadConfig,
+                          instance: ChipInstance | None = None,
+                          calibrated: bool = True,
+                          n_offset_samples: int = 64,
+                          hoist_tile_n: int | None = None
+                          ) -> tuple[dict, BayesHeadConfig]:
+    """Deploy (µ, σ) onto a chip instance.
+
+    Returns (head, serving_cfg): the serving pytree whose stored values
+    went through compensation → quantization → conductance programming
+    noise, and the BayesHeadConfig whose ``grng`` is the instance's
+    physical view (measured constants when ``calibrated``).  Drop-in for
+    core/sampling: ``logit_samples(head, x, serving_cfg)`` and the
+    engines' ``activation_basis``/``mix_samples`` fast path run
+    unchanged on the degraded instance.
+
+    ``instance=None`` reduces exactly to ``prepare_serving_head``.
+    """
+    if instance is None:
+        from repro.core.sampling import prepare_serving_head
+        return (prepare_serving_head(mu, sigma, cfg, hoist_tile_n),
+                cfg)
+    icfg = instance.grng(cfg.grng)
+    if calibrated:
+        scfg = measured_grng(icfg, n_samples=max(n_offset_samples, 64))
+        mu_p = compensate_mu(mu, sigma, scfg, exact=False,
+                             n_est=n_offset_samples)
+    else:
+        # Factory/golden transform: right math, wrong chip.
+        scfg = icfg
+        mu_p = compensate_mu(mu, sigma, cfg.grng, exact=True)
+    if cfg.quant.enabled:
+        mu_p, _ = q.quantize_mu(mu_p, cfg.quant)
+        sigma, _ = q.quantize_sigma(sigma, cfg.quant)
+    # Conductance programming error hits whatever is written.
+    mu_p = instance.program_weights(mu_p, tag=0)
+    sigma = instance.program_weights(sigma, tag=1)
+    head = {
+        "mu_prime": mu_p.astype(cfg.compute_dtype),
+        "sigma": sigma.astype(cfg.compute_dtype),
+    }
+    serving_cfg = dataclasses.replace(cfg, grng=scfg)
+    tile_n = (serving_cfg.hoist_tile_n if hoist_tile_n is None
+              else hoist_tile_n)
+    if cfg.hoist_basis and cfg.mode == "rank16":
+        from repro.core.sampling import hoisted_sigma_basis
+        head.update(hoisted_sigma_basis(sigma, scfg, cfg.compute_dtype,
+                                        tile_n))
+    return head, serving_cfg

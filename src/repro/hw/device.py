@@ -1,0 +1,115 @@
+"""Parameterized FeFET nonideality model (the digital twin's physics).
+
+The repo's ideal device model (core/clt_grng.py) is one *golden* chip:
+currents I(k,n,j) = i_lo + Δi·b + γ·v hashed from the coordinate, with
+the paper's fitted Fig. 9 parameters.  A real deployment sees a
+*population* of chips, each differing from golden along five measured
+axes (cf. Bayes2IMC / FeBiM, which find exactly these terms dominate
+deployed accuracy):
+
+  1. **Per-chip Vth variation of the programmed-once GRNG arrays** —
+     each chip's one-time programming draws its own device states.  In
+     the hash formulation this is a chip-specific ``seed``: the virtual
+     devices are redrawn, frozen, and never rewritten.  No new math.
+  2. **Corner spread** — lot-to-lot shifts of the current-model
+     parameters (i_lo, Δi, γ), modeled as per-chip fractional
+     multipliers around 1.
+  3. **Temperature / aging drift** — a uniform multiplicative current
+     drift.  Uniform drift commutes with the device model
+     (d·(i_lo + Δi·b + γ·v) = (d·i_lo) + (d·Δi)·b + (d·γ)·v), so it
+     folds into the same three parameters — every downstream consumer
+     (offset closed form, rank-16 basis, Pallas kernels) stays exact
+     with zero extra plumbing.
+  4. **Cycle-to-cycle read noise** — fresh additive noise on every read
+     of a cell's 8-device sum.  This is the one term that cannot fold
+     into static parameters; it is ``GRNGConfig.read_sigma`` (see
+     core/clt_grng.read_noise and the mix_samples projection in
+     core/sampling.py).
+  5. **Peripheral nonidealities** — per-column ADC gain/offset error
+     (kernels/cim_mvm.py nonideal path) and conductance programming
+     error on written weights (hw/instance.program_weights), built on
+     the core/quant.py numeric path.
+
+``VariationSpec`` holds the population statistics; hw/instance.py draws
+frozen chips from it; hw/calib.py measures individual chips back.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.clt_grng import GRNGConfig
+
+# Reference temperature of the paper's Fig. 9 fit.
+T_NOMINAL_C = 25.0
+
+
+@dataclasses.dataclass(frozen=True)
+class VariationSpec:
+    """Population statistics a chip instance is drawn from.
+
+    Defaults are a plausible mid-severity corner for a 28 nm FeFET
+    process (fractional spreads); ``scaled`` sweeps severity for the
+    hw_variation Monte-Carlo benchmark.
+    """
+    # Corner spread: per-chip fractional sigma of the current model.
+    sigma_i_lo: float = 0.02
+    sigma_delta_i: float = 0.03
+    sigma_gamma: float = 0.15
+    # Cycle-to-cycle read noise on the 8-device sum [µA RMS]: per-chip
+    # magnitude ~ |N(mean, mean·spread)|.
+    read_sigma_mean: float = 0.08
+    read_sigma_spread: float = 0.5
+    # Temperature: per-chip operating point ~ N(temp_mean, temp_spread),
+    # currents drift by ``tc_current`` per °C away from 25 °C.
+    temp_mean_c: float = 25.0
+    temp_spread_c: float = 15.0
+    tc_current: float = -2.2e-3
+    # SAR ADC column front-end.
+    adc_gain_sigma: float = 0.01
+    adc_offset_sigma_lsb: float = 0.3
+    # Conductance programming error (fractional, per written cell).
+    program_sigma: float = 0.01
+
+    def scaled(self, severity: float) -> "VariationSpec":
+        """All variation magnitudes multiplied by ``severity``
+        (1 = nominal population, >1 = worst case).  severity 0 zeroes
+        the corner/noise/ADC/programming terms but instances keep their
+        chip-specific device and noise seeds — a severity-0 chip is a
+        *different die with golden statistics*, not the golden chip
+        itself (its per-cell offsets still differ until calibrated)."""
+        return dataclasses.replace(
+            self,
+            sigma_i_lo=self.sigma_i_lo * severity,
+            sigma_delta_i=self.sigma_delta_i * severity,
+            sigma_gamma=self.sigma_gamma * severity,
+            read_sigma_mean=self.read_sigma_mean * severity,
+            temp_spread_c=self.temp_spread_c * severity,
+            adc_gain_sigma=self.adc_gain_sigma * severity,
+            adc_offset_sigma_lsb=self.adc_offset_sigma_lsb * severity,
+            program_sigma=self.program_sigma * severity,
+        )
+
+
+def drift_factor(tc_current: float, temp_c: float) -> float:
+    """Uniform current drift at ``temp_c`` relative to the 25 °C fit."""
+    return 1.0 + tc_current * (temp_c - T_NOMINAL_C)
+
+
+def degraded_grng(base: GRNGConfig, *, device_seed: int, noise_seed: int,
+                  f_i_lo: float = 1.0, f_delta_i: float = 1.0,
+                  f_gamma: float = 1.0, drift: float = 1.0,
+                  read_sigma: float = 0.0) -> GRNGConfig:
+    """The chip's physical GRNG: redrawn devices, shifted corner,
+    drifted currents, read noise — with the *nominal* standardization
+    constants (what an uncalibrated deployment believes).  hw/calib.py
+    replaces the constants with per-chip measured values."""
+    return dataclasses.replace(
+        base,
+        seed=device_seed,
+        i_lo=base.i_lo * f_i_lo * drift,
+        delta_i=base.delta_i * f_delta_i * drift,
+        gamma=base.gamma * f_gamma * drift,
+        read_sigma=read_sigma,
+        noise_seed=noise_seed,
+    )

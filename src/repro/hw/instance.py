@@ -1,0 +1,156 @@
+"""Sampled chip instances: frozen per-device parameters, serializable.
+
+A ``ChipInstance`` is everything that distinguishes one physical die
+from the golden model: the programming draw of its GRNG arrays (a
+seed — the hash formulation stores per-device state for free), its
+process corner, operating temperature, read-noise magnitude, per-column
+ADC errors, and the conductance-programming error of everything written
+to it.  Instances are drawn once from a ``VariationSpec`` population
+with a NumPy PRNG key and are immutable afterwards — exactly the
+"programmed once, never rewritten" contract of the paper's FeFETs,
+extended to the whole die.
+
+Serialization rides the repo's checkpoint layer (ckpt/): a fleet of
+instances round-trips through ``save_instances``/``load_instances`` as
+an ordinary checksummed pytree, so a benchmark can pin the exact chips
+it measured.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.clt_grng import GRNGConfig
+from repro.core.hashing import gaussianish, hash3
+from repro.hw import device as dev
+
+# Tag mixed into per-chip hash seeds so chip streams never collide with
+# the golden chip's (seed 0xC1A0) or each other's.
+_SEED_DEVICE = 0xD1E0
+_SEED_NOISE = 0x0A15
+_SEED_WEIGHT = 0x3E17
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ChipInstance:
+    """One die.  Scalars are the chip's frozen corner draw; ``adc_gain``
+    / ``adc_offset`` are per-physical-column ([tile] = 64) arrays tiled
+    over logical output columns by ``adc_columns``."""
+    chip_id: int
+    device_seed: int            # GRNG array programming draw
+    noise_seed: int             # cycle-to-cycle read-noise stream
+    weight_seed: int            # conductance programming-error draw
+    f_i_lo: float = 1.0
+    f_delta_i: float = 1.0
+    f_gamma: float = 1.0
+    temp_c: float = dev.T_NOMINAL_C
+    tc_current: float = 0.0
+    read_sigma: float = 0.0
+    program_sigma: float = 0.0
+    adc_gain: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.ones((64,), np.float32))
+    adc_offset: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros((64,), np.float32))
+
+    # -- physical views --------------------------------------------------
+    def grng(self, base: GRNGConfig, temp_c: float | None = None) -> GRNGConfig:
+        """This chip's physical GRNG config (uncalibrated view: nominal
+        standardization constants).  ``temp_c`` overrides the stored
+        operating point — temperature sweeps re-use one instance."""
+        t = self.temp_c if temp_c is None else temp_c
+        return dev.degraded_grng(
+            base, device_seed=self.device_seed, noise_seed=self.noise_seed,
+            f_i_lo=self.f_i_lo, f_delta_i=self.f_delta_i,
+            f_gamma=self.f_gamma,
+            drift=dev.drift_factor(self.tc_current, t),
+            read_sigma=self.read_sigma)
+
+    def program_weights(self, w: jnp.ndarray, tag: int = 0) -> jnp.ndarray:
+        """Conductance programming error: w·(1 + σ_p·ν(k,n)).
+
+        ν is hash-frozen per (cell, tag) — writing the same matrix to
+        the same array twice lands on the same conductances; ``tag``
+        distinguishes co-located arrays (µ vs σε subarray).
+        """
+        if self.program_sigma == 0.0:
+            return w
+        rows = jnp.arange(w.shape[0], dtype=jnp.uint32)[:, None]
+        cols = jnp.arange(w.shape[1], dtype=jnp.uint32)[None, :]
+        h = hash3(rows, cols, jnp.uint32(tag), self.weight_seed)
+        return w * (1.0 + self.program_sigma * gaussianish(h)).astype(w.dtype)
+
+    def adc_columns(self, n_cols: int) -> tuple[np.ndarray, np.ndarray]:
+        """(gain [n_cols], offset [n_cols]): the 64 physical column
+        front-ends tiled over logical output columns — column n of every
+        tile row shares its ADC, matching the pitch-matched layout."""
+        reps = -(-n_cols // self.adc_gain.shape[0])
+        return (np.tile(self.adc_gain, reps)[:n_cols],
+                np.tile(self.adc_offset, reps)[:n_cols])
+
+    # -- serialization ---------------------------------------------------
+    def to_tree(self) -> dict:
+        out = {}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            out[f.name] = np.asarray(v)
+        return out
+
+    @classmethod
+    def from_tree(cls, tree: dict) -> "ChipInstance":
+        kw = {}
+        for f in dataclasses.fields(cls):
+            v = np.asarray(tree[f.name])
+            if v.ndim == 0:
+                v = v.item()
+                if f.type in ("int",):
+                    v = int(v)
+            kw[f.name] = v
+        return cls(**kw)
+
+
+def sample_instances(seed: int, n: int,
+                     spec: dev.VariationSpec | None = None,
+                     tile: int = 64) -> tuple[ChipInstance, ...]:
+    """Draw ``n`` frozen chip instances from the population ``spec``."""
+    spec = spec or dev.VariationSpec()
+    rng = np.random.default_rng(seed)
+    chips = []
+    for i in range(n):
+        sd = rng.integers(0, 2**31 - 1, size=3)
+        chips.append(ChipInstance(
+            chip_id=i,
+            device_seed=int(sd[0]) ^ _SEED_DEVICE,
+            noise_seed=int(sd[1]) ^ _SEED_NOISE,
+            weight_seed=int(sd[2]) ^ _SEED_WEIGHT,
+            f_i_lo=float(1.0 + spec.sigma_i_lo * rng.standard_normal()),
+            f_delta_i=float(1.0 + spec.sigma_delta_i * rng.standard_normal()),
+            f_gamma=float(abs(1.0 + spec.sigma_gamma * rng.standard_normal())),
+            temp_c=float(spec.temp_mean_c
+                         + spec.temp_spread_c * rng.standard_normal()),
+            tc_current=spec.tc_current,
+            read_sigma=float(abs(rng.normal(
+                spec.read_sigma_mean,
+                spec.read_sigma_mean * spec.read_sigma_spread))),
+            program_sigma=spec.program_sigma,
+            adc_gain=(1.0 + spec.adc_gain_sigma
+                      * rng.standard_normal(tile)).astype(np.float32),
+            adc_offset=(spec.adc_offset_sigma_lsb
+                        * rng.standard_normal(tile)).astype(np.float32),
+        ))
+    return tuple(chips)
+
+
+def save_instances(ckpt_dir, instances, step: int = 0):
+    """Persist a fleet through the atomic checksummed checkpoint layer."""
+    from repro.ckpt import save
+    tree = {f"chip_{c.chip_id:04d}": c.to_tree() for c in instances}
+    return save(ckpt_dir, step, tree)
+
+
+def load_instances(ckpt_dir, step: int | None = None) -> tuple:
+    from repro.ckpt import restore
+    tree, _ = restore(ckpt_dir, step)
+    return tuple(ChipInstance.from_tree(tree[k]) for k in sorted(tree))

@@ -1,0 +1,232 @@
+"""Tile compiler: map Bayesian / CIM layers onto a bounded tile grid.
+
+The paper hand-maps one network (§V-B1: "24 Bayesian tiles + 1659
+µ-only subarrays via im2col").  This module is the general version: a
+chip exposes a finite ``TileGrid`` of 64×64 tiles; a network is a list
+of layer shapes; the compiler splits every weight matrix into tile
+blocks (column splitting along d_in — partial sums of the same output
+column accumulate digitally across K-blocks), places the blocks onto
+physical tiles, time-multiplexes in **passes** when the network needs
+more tiles than the chip has, and replicates the Bayesian blocks into
+left-over tiles of the last pass to raise sampling throughput.
+
+Placement is **sharding-aware**: blocks are assigned a mesh shard by
+output-column group, so every K-split of a column block lands on the
+same shard and digital accumulation never crosses the 'model' axis —
+the same divisibility discipline as sharding/specs.py, applied to
+physical tiles.
+
+The compiler reports utilization and active area for the analytic
+energy model (core/energy.grid_inference_energy): padding waste inside
+partially-filled tiles is real silicon that burns MVM energy, which is
+exactly how deployed TOPS/W/mm² degrades relative to Table I.
+
+Round-trip contract (tested): ``shard_weights`` cuts a dense matrix
+into placed blocks, ``reconstruct`` reassembles it bit-exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import energy
+from repro.core.energy import LayerShape
+
+
+@dataclasses.dataclass(frozen=True)
+class TileGrid:
+    """Physical tile resources of one chip."""
+    rows: int = 8
+    cols: int = 8
+    tile: int = 64
+
+    @property
+    def n_tiles(self) -> int:
+        return self.rows * self.cols
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """One [≤tile, ≤tile] weight block bound to a physical tile."""
+    layer: str
+    r0: int                 # weight-matrix row (d_in) origin
+    c0: int                 # weight-matrix col (d_out) origin
+    rows: int
+    cols: int
+    tile_idx: int           # physical tile
+    pass_idx: int           # time-multiplex round
+    shard: int = 0          # mesh shard owning this output-column group
+    replica: int = 0        # >0: throughput replica of a Bayesian block
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class TileProgram:
+    grid: TileGrid
+    layers: tuple            # (name, LayerShape) pairs, placement order
+    placements: tuple        # Placement, ...
+    n_shards: int = 1
+
+    # -- queries ---------------------------------------------------------
+    def layer_placements(self, name: str, replicas: bool = False):
+        return tuple(p for p in self.placements
+                     if p.layer == name and (replicas or p.replica == 0))
+
+    @property
+    def n_passes(self) -> int:
+        return max(p.pass_idx for p in self.placements) + 1
+
+    @property
+    def physical_tiles_used(self) -> int:
+        return len({p.tile_idx for p in self.placements})
+
+    @property
+    def utilization(self) -> float:
+        """Mapped bitcells / allocated bitcells (padding waste included)."""
+        active = sum(p.rows * p.cols for p in self.placements)
+        return active / (len(self.placements) * self.grid.tile**2)
+
+    def replication_factor(self, name: str) -> int:
+        """1 + replicas per block: concurrent sample streams for layer."""
+        base = self.layer_placements(name)
+        if not base:
+            return 0
+        reps = self.layer_placements(name, replicas=True)
+        return len(reps) // len(base)
+
+    # -- weights ---------------------------------------------------------
+    def shard_weights(self, name: str, w) -> dict:
+        """Dense [d_in, d_out] -> {placement_key: [tile, tile] block}
+        (zero-padded to the physical tile; primary blocks only)."""
+        t = self.grid.tile
+        w = np.asarray(w)
+        out = {}
+        for p in self.layer_placements(name):
+            blk = np.zeros((t, t), w.dtype)
+            blk[:p.rows, :p.cols] = w[p.r0:p.r0 + p.rows, p.c0:p.c0 + p.cols]
+            out[(p.pass_idx, p.tile_idx)] = blk
+        return out
+
+    def reconstruct(self, name: str, shards: dict) -> np.ndarray:
+        """Inverse of ``shard_weights`` — exact round trip."""
+        ps = self.layer_placements(name)
+        d_in = max(p.r0 + p.rows for p in ps)
+        d_out = max(p.c0 + p.cols for p in ps)
+        first = next(iter(shards.values()))
+        w = np.zeros((d_in, d_out), first.dtype)
+        for p in ps:
+            blk = shards[(p.pass_idx, p.tile_idx)]
+            w[p.r0:p.r0 + p.rows, p.c0:p.c0 + p.cols] = blk[:p.rows, :p.cols]
+        return w
+
+    # -- reporting -------------------------------------------------------
+    def report(self, r_samples: int = energy.DEPLOY_R,
+               batch: int = 1) -> dict:
+        shapes = dict(self.layers)
+        det = bayes = 0
+        bayes_passes = set()
+        for p in self.placements:
+            if p.replica:
+                continue        # replicas split the R samples across
+                                # concurrent tiles: same per-decision
+                                # work, so energy counts primaries only
+            if shapes[p.layer].bayesian:
+                bayes += 1
+                bayes_passes.add(p.pass_idx)
+            else:
+                det += 1
+        bayes_names = [n for n, l in self.layers if l.bayesian]
+        rep = min((self.replication_factor(n) for n in bayes_names),
+                  default=0)
+        r_latency = math.ceil(r_samples / rep) if rep > 1 else r_samples
+        e = energy.grid_inference_energy(
+            n_det_tiles=det, n_bayes_tiles=bayes, r_samples=r_samples,
+            batch=batch, n_passes=self.n_passes,
+            n_bayes_passes=len(bayes_passes),
+            physical_tiles=self.physical_tiles_used,
+            utilization=self.utilization, r_latency=r_latency)
+        e.update(
+            n_blocks=len(self.placements),
+            n_passes=self.n_passes,
+            n_shards=self.n_shards,
+            physical_tiles=self.physical_tiles_used,
+            grid_tiles=self.grid.n_tiles,
+        )
+        return e
+
+
+def compile_layer(name: str, shape: LayerShape, grid: TileGrid,
+                  seq0: int, n_shards: int = 1) -> tuple[list, int]:
+    """Split one [d_in, d_out] layer into placed tile blocks.
+
+    Column-major over output-column groups so K-splits of a column stay
+    consecutive (and on one shard); returns (placements, next_seq).
+    """
+    t = grid.tile
+    n_rb = math.ceil(shape.d_in / t)
+    n_cb = math.ceil(shape.d_out / t)
+    seq = seq0
+    out = []
+    for cb in range(n_cb):
+        shard = (cb * n_shards) // n_cb
+        c0 = cb * t
+        cols = min(t, shape.d_out - c0)
+        for rb in range(n_rb):
+            r0 = rb * t
+            out.append(Placement(
+                layer=name, r0=r0, c0=c0,
+                rows=min(t, shape.d_in - r0), cols=cols,
+                tile_idx=seq % grid.n_tiles,
+                pass_idx=seq // grid.n_tiles,
+                shard=shard))
+            seq += 1
+    return out, seq
+
+
+def compile_network(layers: Sequence, grid: TileGrid | None = None,
+                    n_shards: int = 1, names: Sequence[str] | None = None,
+                    replicate_bayesian: bool = True) -> TileProgram:
+    """Place a whole network; time-multiplex when it exceeds the grid.
+
+    layers: core.energy.LayerShape sequence (the same shapes the energy
+    model and serving metrics consume).  Left-over tiles in the final
+    pass replicate the Bayesian blocks (``replica > 0``) — extra
+    concurrent sample streams at zero extra passes, reported via
+    ``TileProgram.replication_factor``.
+    """
+    grid = grid or TileGrid()
+    names = list(names or (f"layer{i}" for i in range(len(layers))))
+    assert len(names) == len(set(names)), "layer names must be unique"
+    placements: list[Placement] = []
+    seq = 0
+    for name, shape in zip(names, layers):
+        ps, seq = compile_layer(name, shape, grid, seq, n_shards)
+        placements.extend(ps)
+    if replicate_bayesian:
+        free = (-seq) % grid.n_tiles
+        last_pass = (seq - 1) // grid.n_tiles
+        bayes = [p for p, l in ((p, dict(zip(names, layers))[p.layer])
+                                for p in placements) if l.bayesian]
+        n_blocks = len(bayes)
+        if n_blocks and free >= n_blocks:
+            for rep in range(1, free // n_blocks + 1):
+                for p in bayes:
+                    placements.append(dataclasses.replace(
+                        p, tile_idx=seq % grid.n_tiles,
+                        pass_idx=last_pass, replica=rep))
+                    seq += 1
+    return TileProgram(grid=grid, layers=tuple(zip(names, layers)),
+                       placements=tuple(placements), n_shards=n_shards)
+
+
+def shard_column_partition(program: TileProgram, name: str) -> dict:
+    """{shard: sorted output-column blocks} — the sharding-aware
+    placement invariant: shards partition the output columns and every
+    K-split of a column group lives on exactly one shard."""
+    out: dict[int, set] = {}
+    for p in program.layer_placements(name):
+        out.setdefault(p.shard, set()).add(p.c0)
+    return {s: sorted(v) for s, v in out.items()}

@@ -36,7 +36,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.clt_grng import GRNGConfig
 from repro.core.quant import QuantConfig
-from repro.kernels.clt_grng_kernel import _device_current
+from repro.kernels.clt_grng_kernel import _device_current, _read_noise
 
 
 # ----------------------------------------------------------------------
@@ -90,7 +90,8 @@ def _rank16_kernel(x_ref, mu_ref, sig_ref, sel_ref, out_ref,
 # ----------------------------------------------------------------------
 def _paper_kernel(x_ref, mu_ref, sig_ref, sel_ref, fs_ref, out_ref, acc_ref, *,
                   cfg: GRNGConfig, qcfg: QuantConfig | None,
-                  bk: int, bn: int, row0: int, col0: int, num_samples: int):
+                  bk: int, bn: int, row0: int, col0: int, num_samples: int,
+                  sample0: int):
     kstep = pl.program_id(2)
 
     @pl.when(kstep == 0)
@@ -136,6 +137,8 @@ def _paper_kernel(x_ref, mu_ref, sig_ref, sel_ref, fs_ref, out_ref, acc_ref, *,
         raw = jnp.zeros((bk, bn), jnp.float32)
         for d in range(cfg.n_devices):
             raw = raw + sel[r, d] * currents[d]
+        if cfg.read_sigma:                   # degraded-instance twin
+            raw = raw + _read_noise(rows, cols, sample0 + r, cfg)
         eps_r = (raw - cfg.sum_mean) * (1.0 / cfg.sum_std)
         acc_ref[1 + r, :, :] += chunked_mvm(sig * eps_r, fs_se)
 
@@ -155,10 +158,11 @@ def _pad2(a, m0, m1):
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "cfg", "qcfg", "mode", "row0", "col0", "bb", "bk", "bn", "interpret"))
+    "cfg", "qcfg", "mode", "row0", "col0", "sample0", "bb", "bk", "bn",
+    "interpret"))
 def bayes_mvm_pallas(x, mu, sigma, sel, fs, cfg: GRNGConfig,
                      qcfg: QuantConfig | None = None, mode: str = "rank16",
-                     row0: int = 0, col0: int = 0,
+                     row0: int = 0, col0: int = 0, sample0: int = 0,
                      bb: int = 128, bk: int = 128, bn: int = 128,
                      interpret: bool = True):
     """Fused Bayesian head. x:[B,K], µ/σ:[K,N], sel:[R,16], fs:[1,2].
@@ -177,6 +181,11 @@ def bayes_mvm_pallas(x, mu, sigma, sel, fs, cfg: GRNGConfig,
     grid = (bp // bb, np_ // bn, kp // bk)
 
     if mode == "rank16":
+        if cfg.read_sigma:
+            raise NotImplementedError(
+                "rank16 kernel cannot carry per-read noise (full-rank per "
+                "sample); use mode='paper' or the core/sampling.py "
+                "mix_samples projection for degraded instances")
         out = pl.pallas_call(
             functools.partial(_rank16_kernel, cfg=cfg, bk=bk, bn=bn,
                               row0=row0, col0=col0),
@@ -199,7 +208,8 @@ def bayes_mvm_pallas(x, mu, sigma, sel, fs, cfg: GRNGConfig,
     elif mode == "paper":
         out = pl.pallas_call(
             functools.partial(_paper_kernel, cfg=cfg, qcfg=qcfg, bk=bk, bn=bn,
-                              row0=row0, col0=col0, num_samples=r),
+                              row0=row0, col0=col0, num_samples=r,
+                              sample0=sample0),
             grid=grid,
             in_specs=[
                 pl.BlockSpec((bb, bk), lambda i, j, k: (i, k)),

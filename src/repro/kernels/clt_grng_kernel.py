@@ -49,19 +49,30 @@ def _hash3(k, n, j: int, seed: int):
     return h
 
 
+def _gauss_of(h):
+    """CLT-of-bytes normal surrogate (core.hashing.gaussianish, inlined)."""
+    b0 = (h & jnp.uint32(0xFF)).astype(jnp.float32)
+    b1 = ((h >> jnp.uint32(8)) & jnp.uint32(0xFF)).astype(jnp.float32)
+    b2 = ((h >> jnp.uint32(16)) & jnp.uint32(0xFF)).astype(jnp.float32)
+    return (b0 + b1 + b2 - 382.5) * (1.0 / 127.99316)
+
+
 def _device_current(rows, cols, j: int, cfg: GRNGConfig):
     """Virtual device current I(k, n, j) for a coordinate block."""
     h = _hash3(rows, cols, j, cfg.seed)
     bit = ((h >> jnp.uint32(31)) & jnp.uint32(1)).astype(jnp.float32)
-    b0 = (h & jnp.uint32(0xFF)).astype(jnp.float32)
-    b1 = ((h >> jnp.uint32(8)) & jnp.uint32(0xFF)).astype(jnp.float32)
-    b2 = ((h >> jnp.uint32(16)) & jnp.uint32(0xFF)).astype(jnp.float32)
-    gauss = (b0 + b1 + b2 - 382.5) * (1.0 / 127.99316)
-    return cfg.i_lo + cfg.delta_i * bit + cfg.gamma * gauss
+    return cfg.i_lo + cfg.delta_i * bit + cfg.gamma * _gauss_of(h)
+
+
+def _read_noise(rows, cols, r_abs: int, cfg: GRNGConfig):
+    """Cycle-to-cycle read noise at absolute sample index ``r_abs`` —
+    bit-identical to core.clt_grng.read_noise_at."""
+    h = _hash3(rows, cols, r_abs, cfg.noise_seed)
+    return cfg.read_sigma * _gauss_of(h)
 
 
 def _grng_kernel(sel_ref, out_ref, *, cfg: GRNGConfig, bk: int, bn: int,
-                 row0: int, col0: int):
+                 row0: int, col0: int, sample0: int):
     i = pl.program_id(0)
     j = pl.program_id(1)
     rows = (jnp.uint32(row0) + i * bk
@@ -74,23 +85,31 @@ def _grng_kernel(sel_ref, out_ref, *, cfg: GRNGConfig, bk: int, bn: int,
     for d in range(cfg.n_devices):           # 16, unrolled
         i_d = _device_current(rows, cols, d, cfg)          # [bk, bn]
         raw = raw + sel[:, d][:, None, None] * i_d[None]
+    if cfg.read_sigma:                       # degraded-instance twin
+        raw = raw + jnp.stack([_read_noise(rows, cols, sample0 + ri, cfg)
+                               for ri in range(r)])
     out_ref[...] = (raw - cfg.sum_mean) * (1.0 / cfg.sum_std)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "cfg", "n_rows", "n_cols", "row0", "col0", "bk", "bn", "interpret"))
+    "cfg", "n_rows", "n_cols", "row0", "col0", "sample0", "bk", "bn",
+    "interpret"))
 def grng_eps_pallas(sel: jnp.ndarray, cfg: GRNGConfig, n_rows: int,
                     n_cols: int, row0: int = 0, col0: int = 0,
-                    bk: int = 256, bn: int = 256,
+                    sample0: int = 0, bk: int = 256, bn: int = 256,
                     interpret: bool = True) -> jnp.ndarray:
-    """ε block via Pallas. sel: [R, 16] float32 -> [R, n_rows, n_cols]."""
+    """ε block via Pallas. sel: [R, 16] float32 -> [R, n_rows, n_cols].
+
+    ``sample0``: absolute index of sel[0] in the selection stream — only
+    read (for the noise hash) when ``cfg.read_sigma > 0``.
+    """
     r = sel.shape[0]
     pad_k = (-n_rows) % bk
     pad_n = (-n_cols) % bn
     kp, np_ = n_rows + pad_k, n_cols + pad_n
     out = pl.pallas_call(
         functools.partial(_grng_kernel, cfg=cfg, bk=bk, bn=bn,
-                          row0=row0, col0=col0),
+                          row0=row0, col0=col0, sample0=sample0),
         grid=(kp // bk, np_ // bn),
         in_specs=[pl.BlockSpec((r, 16), lambda i, j: (0, 0))],
         out_specs=pl.BlockSpec((r, bk, bn), lambda i, j: (0, i, j)),

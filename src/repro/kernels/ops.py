@@ -31,7 +31,8 @@ def grng_eps(cfg: g.GRNGConfig, n_rows: int, n_cols: int, num_samples: int,
     bk = min(256, max(128, n_rows))
     bn = min(256, max(128, n_cols))
     return grng_eps_pallas(
-        sel, cfg, n_rows, n_cols, row0=row0, col0=col0, bk=bk, bn=bn,
+        sel, cfg, n_rows, n_cols, row0=row0, col0=col0, sample0=sample0,
+        bk=bk, bn=bn,
         interpret=_interpret_default() if interpret is None else interpret)
 
 
@@ -61,7 +62,7 @@ def bayes_head_mvm(x: jnp.ndarray, mu_prime: jnp.ndarray, sigma: jnp.ndarray,
         fs = jnp.zeros((1, 2), jnp.float32)
     return bayes_mvm_pallas(
         x, mu_prime, sigma, sel, fs, cfg, qcfg=qcfg, mode=mode,
-        row0=row0, col0=col0,
+        row0=row0, col0=col0, sample0=sample0,
         interpret=_interpret_default() if interpret is None else interpret)
 
 
@@ -83,4 +84,21 @@ def cim_matmul(x: jnp.ndarray, w: jnp.ndarray, qcfg: QuantConfig,
     fs = _measured_full_scale(x, w, qcfg).reshape(1, 1)
     return cim_mvm_pallas(
         x, w, fs, qcfg,
+        interpret=_interpret_default() if interpret is None else interpret)
+
+
+def cim_matmul_nonideal(x: jnp.ndarray, w: jnp.ndarray, qcfg: QuantConfig,
+                        col_gain: jnp.ndarray, col_offset: jnp.ndarray,
+                        interpret: bool | None = None) -> jnp.ndarray:
+    """Chip-instance CIM matmul: per-column ADC gain/offset (repro/hw).
+
+    ``col_gain``/``col_offset`` [N] come from a sampled ChipInstance
+    (hw/instance.py: ``adc_gain``/``adc_offset`` tiled over the output
+    columns).  Conductance programming error is a *weight* perturbation —
+    fold it into ``w`` with ``hw.instance.program_weights`` before the
+    call.  Oracle: kernels/ref.cim_mvm_nonideal_ref.
+    """
+    fs = _measured_full_scale(x, w, qcfg).reshape(1, 1)
+    return cim_mvm_pallas(
+        x, w, fs, qcfg, col_gain=col_gain, col_offset=col_offset,
         interpret=_interpret_default() if interpret is None else interpret)

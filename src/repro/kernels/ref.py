@@ -92,6 +92,32 @@ def cim_mvm_ref(x: jnp.ndarray, w: jnp.ndarray, qcfg: q.QuantConfig,
     return q.adc_quantize(psum, fs, qcfg).sum(axis=1)
 
 
+def cim_mvm_nonideal_ref(x: jnp.ndarray, w: jnp.ndarray, qcfg: q.QuantConfig,
+                         fs: jnp.ndarray | float, col_gain: jnp.ndarray,
+                         col_offset: jnp.ndarray) -> jnp.ndarray:
+    """Nonideal chunked-ADC oracle (per-column ADC gain + offset).
+
+    Each analog chunk's partial sum is distorted by the column front-end
+    before conversion: v = gain[n]·psum + offset[n]·lsb (offset in LSB
+    units), then ideally coded and digitally accumulated.  With
+    gain = 1, offset = 0 this is bit-identical to ``cim_mvm_ref`` —
+    the zero-variation acceptance check for the nonideal kernel path.
+    """
+    b, kdim = x.shape
+    chunk = qcfg.chunk
+    assert kdim % chunk == 0
+    kc = kdim // chunk
+    xb = x.astype(jnp.float32).reshape(b, kc, chunk)
+    wb = w.astype(jnp.float32).reshape(kc, chunk, w.shape[1])
+    psum = jnp.einsum("bkc,kcn->bkn", xb, wb)
+    levels = 2 ** (qcfg.adc_bits - 1) - 1
+    lsb = fs / levels
+    v = (col_gain.astype(jnp.float32)[None, None] * psum
+         + col_offset.astype(jnp.float32)[None, None] * lsb)
+    code = jnp.clip(jnp.round(v / lsb), -levels - 1, levels)
+    return (code * lsb).sum(axis=1)
+
+
 def selections_ref(lfsr_seed: int, num_samples: int, sample0: int = 0):
     states = lfsr_states(lfsr_seed, sample0 + num_samples)
     return swapper_select(states[sample0:])

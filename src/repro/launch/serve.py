@@ -152,16 +152,55 @@ def make_sar_stream(n_requests: int, *, corrupt_frac: float = 0.0,
 def serve_sar(*, n_requests: int = 128, n_slots: int = 32,
               adaptive: bool = True, policy: TriagePolicy | None = None,
               corrupt_frac: float = 0.0, corruption: str = "fog",
-              params=None, cfg=None, seed: int = 0) -> dict:
-    """SAR image-stream serving. Untrained params unless provided."""
+              params=None, cfg=None, seed: int = 0,
+              chip_instance=None, calibrated: bool = True,
+              slot_axis: str | None = None) -> dict:
+    """SAR image-stream serving. Untrained params unless provided.
+
+    ``chip_instance``: a hw.ChipInstance (or an int seed — one chip is
+    sampled from the default VariationSpec) — the engine then serves on
+    that die's digital twin: degraded GRNG, per-chip constants,
+    programming noise; ``calibrated`` selects the per-instance
+    recalibrated head (hw/calib.py) vs the golden factory transform.
+    The summary gains chip metadata and the tile compiler's deployed
+    area/utilization.
+    """
     from repro.models.sar_cnn import SarCnnConfig, init_sar_cnn
     cfg = cfg or SarCnnConfig()
     if params is None:
         params = init_sar_cnn(jax.random.PRNGKey(3 + seed), cfg)
     policy = policy or TriagePolicy(conf_threshold=0.7, mi_threshold=0.05)
-    metrics = ServingMetrics(layers=sar_layer_shapes(cfg))
+    layers = sar_layer_shapes(cfg)
+    head = hcfg = None
+    extra = {}
+    if chip_instance is not None:
+        from repro.core.bayes_layer import sigma_of
+        from repro.core.sampling import BayesHeadConfig
+        from repro.hw import (compile_network, prepare_instance_head,
+                              sample_instances)
+        if not hasattr(chip_instance, "grng"):
+            chip_instance = sample_instances(int(chip_instance), 1)[0]
+        base_hcfg = BayesHeadConfig(
+            num_samples=policy.r_max, mode="rank16", grng=cfg.grng,
+            compute_dtype=jnp.float32, hoist_basis=True)
+        head, hcfg = prepare_instance_head(
+            params["head"]["mu"], sigma_of(params["head"]), base_hcfg,
+            chip_instance, calibrated=calibrated)
+        program = compile_network(layers)
+        extra = {
+            "chip_id": chip_instance.chip_id,
+            "chip_device_seed": chip_instance.device_seed,
+            "chip_read_sigma": chip_instance.read_sigma,
+            "chip_temp_c": chip_instance.temp_c,
+            "calibrated": bool(calibrated),
+            "tile_area_mm2": program.report()["area_mm2"],
+            "tile_utilization": program.utilization,
+            "tile_passes": program.n_passes,
+        }
+    metrics = ServingMetrics(layers=layers, extra=extra)
     engine = SarServingEngine(params, cfg, n_slots=n_slots, policy=policy,
-                              adaptive_mode=adaptive, metrics=metrics)
+                              adaptive_mode=adaptive, metrics=metrics,
+                              head=head, hcfg=hcfg, slot_axis=slot_axis)
     for r in make_sar_stream(n_requests, corrupt_frac=corrupt_frac,
                              corruption=corruption,
                              image_size=cfg.image_size):
@@ -192,22 +231,47 @@ def main() -> None:
     ap.add_argument("--corrupt-frac", type=float, default=0.0)
     ap.add_argument("--corruption", default="fog",
                     choices=("fog", "frost", "motion", "snow"))
+    ap.add_argument("--chip-instance", type=int, default=None,
+                    help="serve on a sampled FeFET chip instance "
+                         "(hw/ digital twin) drawn with this seed")
+    ap.add_argument("--chip-severity", type=float, default=1.0,
+                    help="variation severity multiplier for the "
+                         "sampled chip")
+    ap.add_argument("--uncalibrated", action="store_true",
+                    help="skip per-instance recalibration (golden "
+                         "factory transform on the degraded chip)")
     args = ap.parse_args()
     policy = TriagePolicy(conf_threshold=args.conf_threshold,
                           mi_threshold=args.mi_threshold,
                           r_min=args.r_min, r_max=args.r_max)
 
     if args.arch == "sar_cnn":
+        chip = None
+        if args.chip_instance is not None:
+            from repro.hw import VariationSpec, sample_instances
+            chip = sample_instances(
+                args.chip_instance, 1,
+                VariationSpec().scaled(args.chip_severity))[0]
         out = serve_sar(n_requests=args.requests or 128,
                         n_slots=args.slots or 32,
                         adaptive=not args.fixed, policy=policy,
                         corrupt_frac=args.corrupt_frac,
-                        corruption=args.corruption)
+                        corruption=args.corruption,
+                        chip_instance=chip,
+                        calibrated=not args.uncalibrated)
+        chip_note = ""
+        if chip is not None:
+            chip_note = (f" [chip seed={args.chip_instance} "
+                         f"T={chip.temp_c:.0f}C "
+                         f"{'cal' if not args.uncalibrated else 'UNCAL'} "
+                         f"area={out['tile_area_mm2']:.2f}mm2 "
+                         f"util={out['tile_utilization']:.2f}]")
         print(f"[serve:sar] {out['decisions']} decisions in "
               f"{out['wall_s']:.2f}s ({out['decisions_per_s']:.1f}/s); "
               f"mean samples/decision {out['mean_samples_per_decision']:.1f}; "
               f"{100*out['flagged_fraction']:.1f}% flagged; "
-              f"GRNG {out['grng_energy_per_decision_aJ']:.0f} aJ/decision")
+              f"GRNG {out['grng_energy_per_decision_aJ']:.0f} aJ/decision"
+              + chip_note)
     else:
         out = serve(args.arch, smoke=args.smoke, batch=args.slots or 4,
                     prompt_len=args.prompt_len, gen_len=args.gen,

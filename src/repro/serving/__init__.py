@@ -13,8 +13,8 @@ escalation an exact extension of the fixed-R draw.
 """
 
 from repro.serving.adaptive import (escalation_schedule, finalize,
-                                    init_stats, stream_selections,
-                                    update_stats)
+                                    init_stats, stream_indices,
+                                    stream_selections, update_stats)
 from repro.serving.engine import (LMServingEngine, Request,
                                   SarServingEngine)
 from repro.serving.metrics import (RequestRecord, ServingMetrics,
@@ -26,5 +26,6 @@ __all__ = [
     "ACCEPT", "ESCALATE", "FLAG", "LMServingEngine", "Request",
     "RequestRecord", "SarServingEngine", "ServingMetrics", "TriagePolicy",
     "decide", "decision_energy", "escalation_schedule", "finalize",
-    "fixed_r_decide", "init_stats", "stream_selections", "update_stats",
+    "fixed_r_decide", "init_stats", "stream_indices", "stream_selections",
+    "update_stats",
 ]

@@ -135,6 +135,17 @@ def finalize(stats: dict) -> dict:
     }
 
 
+def stream_indices(base: jnp.ndarray, n_drawn: jnp.ndarray,
+                   num: int) -> jnp.ndarray:
+    """Absolute stream positions of the NEXT ``num`` samples. [num, B].
+
+    Also the read-noise key for ``mix_samples`` on degraded chip
+    instances — index-keyed noise keeps escalation rounds fresh and
+    re-reads reproducible (repro/hw)."""
+    return (base[None, :] + n_drawn[None, :]
+            + jnp.arange(num, dtype=jnp.uint32)[:, None]).astype(jnp.uint32)
+
+
 def stream_selections(grng_cfg, base: jnp.ndarray, n_drawn: jnp.ndarray,
                       num: int) -> jnp.ndarray:
     """Per-slot selection vectors for the NEXT ``num`` samples.
@@ -145,6 +156,5 @@ def stream_selections(grng_cfg, base: jnp.ndarray, n_drawn: jnp.ndarray,
     slot, so escalation extends the exact stream a single large draw
     would read.
     """
-    idx = (base[None, :] + n_drawn[None, :]
-           + jnp.arange(num, dtype=jnp.uint32)[:, None])  # [num, B]
-    return indexed_selections(grng_cfg.lfsr_seed, idx.astype(jnp.uint32))
+    return indexed_selections(grng_cfg.lfsr_seed,
+                              stream_indices(base, n_drawn, num))

@@ -24,10 +24,17 @@ length, its cached K re-rotated by the pool-clock offset (RoPE scores
 depend only on relative distance, so a uniform rotation re-bases the
 stream), rolled into place, and masked via the per-slot ``start``
 recorded by prefill (models/attention.py).  SSM slots are recurrent
-state rows — scatter alone is exact.  Trunks whose positions cannot be
-re-based (learned absolute positions, e.g. whisper) still serve
-correctly: admission simply waits for the pool to drain and rebase to
-delta = 0, where left-padded prefill needs no re-basing.
+state rows — the *scatter* is exact, but the admitted state carries a
+documented approximation: prefill_ssm runs the left-pad prefix through
+the recurrence (an exact path would re-run the bare prompt at
+slot-local positions), so a fresh SSM slot starts pad-polluted.
+Measured (test_serving.test_ssm_leftpad_admission_pollution_quantified):
+~30% relative hidden error at admission for a short prompt behind a
+long zero pad, decaying below 5% within 3 decode steps — the selective
+state space forgets the pad like a short neutral context.  Trunks whose
+positions cannot be re-based (learned absolute positions, e.g. whisper)
+still serve correctly: admission simply waits for the pool to drain and
+rebase to delta = 0, where left-padded prefill needs no re-basing.
 
 Slot state lives in donated device buffers: admission scatters rows
 into the pool pytree with ``.at[idx].set(..., mode='drop')`` (a fixed
@@ -142,38 +149,67 @@ class SarServingEngine(_EngineBase):
 
     def __init__(self, params, cfg, *, n_slots: int = 32,
                  policy: TriagePolicy = TriagePolicy(),
-                 adaptive_mode: bool = True, metrics: ServingMetrics = None):
+                 adaptive_mode: bool = True, metrics: ServingMetrics = None,
+                 head: dict | None = None,
+                 hcfg: BayesHeadConfig | None = None,
+                 slot_axis: str | None = None):
+        """``head``/``hcfg``: pre-deployed serving head + its config —
+        the repro/hw chip-instance path (hw.calib.prepare_instance_head
+        returns both; the rank-16 fast path below runs unchanged on the
+        degraded instance).  Default: golden-chip head from ``params``.
+
+        ``slot_axis``: mesh axis name to shard the slot (pool batch)
+        dimension over — construct and run the engine inside
+        ``mesh_context`` and admission scatters stay slot-local while
+        every pool round executes data-parallel over the slots.
+        """
         super().__init__(n_slots, policy, metrics)
         from repro.core.bayes_layer import to_serving
         from repro.models.sar_cnn import features
         self.cfg = cfg
         self.adaptive_mode = adaptive_mode
-        self.hcfg = BayesHeadConfig(
+        self.hcfg = hcfg or BayesHeadConfig(
             num_samples=policy.r_max, mode="rank16", grng=cfg.grng,
             compute_dtype=jnp.float32, hoist_basis=True)
-        head = to_serving(params["head"], self.hcfg)
+        if head is None:
+            head = to_serving(params["head"], self.hcfg)
         self.r_step = policy.r_min if adaptive_mode else policy.r_max
 
+        if slot_axis is None:
+            constrain = lambda tree: tree                    # noqa: E731
+        else:
+            from jax.sharding import PartitionSpec as P
+
+            def constrain(tree):
+                return jax.tree.map(
+                    lambda leaf: jax.lax.with_sharding_constraint(
+                        leaf, P(slot_axis, *(None,) * (leaf.ndim - 1))),
+                    tree)
+
+        hcfg_ = self.hcfg
+
         def featurize(p, images):
-            return activation_basis(head, features(p, images, cfg),
-                                    self.hcfg)
+            return constrain(activation_basis(
+                head, features(p, images, cfg), hcfg_))
 
         self._featurize = jax.jit(lambda imgs: featurize(params, imgs))
 
         def scatter(pool, rows, idx):
-            return jax.tree.map(
-                lambda p, r: p.at[idx].set(r, mode="drop"), pool, rows)
+            return constrain(jax.tree.map(
+                lambda p, r: p.at[idx].set(r, mode="drop"), pool, rows))
 
         self._scatter = jax.jit(scatter, donate_argnums=(0,))
 
-        grng = cfg.grng
+        grng = self.hcfg.grng
         r_step = self.r_step
         pol = policy
 
         def round_fn(pool, stats, base, active):
             sel = adaptive.stream_selections(grng, base, stats["n"], r_step)
-            samples = mix_samples(pool, sel, self.hcfg)     # [r, S, C]
-            stats = adaptive.update_stats(stats, samples, mask=active)
+            idx = adaptive.stream_indices(base, stats["n"], r_step)
+            samples = mix_samples(pool, sel, hcfg_, sample_idx=idx)
+            stats = constrain(
+                adaptive.update_stats(stats, samples, mask=active))
             fin = adaptive.finalize(stats)
             if adaptive_mode:
                 verdict = triage.decide(fin, pol, final=fin["n"] >= pol.r_max)
@@ -343,7 +379,8 @@ class LMServingEngine(_EngineBase):
 
         def round_fn(abasis, stats, base, active, undecided, r_k):
             sel = adaptive.stream_selections(grng, base, stats["n"], r_k)
-            samples = mix_samples(abasis, sel, self.hcfg)
+            idx = adaptive.stream_indices(base, stats["n"], r_k)
+            samples = mix_samples(abasis, sel, self.hcfg, sample_idx=idx)
             stats = adaptive.update_stats(stats, samples,
                                           mask=active & undecided)
             fin = adaptive.finalize(stats)

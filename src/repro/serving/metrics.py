@@ -93,9 +93,14 @@ def decision_energy(n_samples: float, layers) -> dict:
 class ServingMetrics:
     """Aggregates RequestRecords into the serving report."""
 
-    def __init__(self, layers=None):
+    def __init__(self, layers=None, extra: dict | None = None):
         self.records: list[RequestRecord] = []
         self.layers = layers          # energy.LayerShape list or None
+        # Run-level metadata merged verbatim into the summary — the
+        # chip-instance serving mode records the chip id/seeds,
+        # calibration state, and the tile compiler's area/utilization
+        # here so a fleet sweep can attribute results to hardware.
+        self.extra = dict(extra or {})
         self.wall_start: float | None = None
         self.wall_end: float | None = None
 
@@ -122,6 +127,7 @@ class ServingMetrics:
                            grng_energy_per_decision_aJ=nan,
                            energy_saving_vs_R20=nan, model_latency_s=nan,
                            model_decisions_per_s=nan)
+            out.update(self.extra)
             return out
         n_dec = sum(r.n_decisions for r in self.records)
         samples = np.array([r.n_samples / max(r.n_decisions, 1)
@@ -156,4 +162,5 @@ class ServingMetrics:
             t = decision_latency(n_bar, self.layers)
             out["model_latency_s"] = t
             out["model_decisions_per_s"] = 1.0 / t
+        out.update(self.extra)
         return out

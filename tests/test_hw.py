@@ -1,0 +1,229 @@
+"""repro/hw digital twin: device statistics, tile compiler, calibration.
+
+Load-bearing claims:
+
+  1. the nonideal GRNG's empirical sum mean/variance track the device
+     model's closed form (corner shift + drift folded into the current
+     params, read noise added in quadrature), and the rank-16 serving
+     fast path reproduces the paper-mode twin's logit statistics on a
+     degraded instance (distribution-level, since per-read noise is
+     full-rank) while staying bit-exact at zero variation;
+  2. the tile compiler round-trips weights exactly, respects the grid
+     bound via passes, keeps digital accumulation shard-local, and its
+     utilization/area feed the energy model;
+  3. per-instance calibration reduces instance-to-instance output error
+     vs the uncalibrated factory transform;
+  4. instances are deterministic in their seed and survive the
+     checkpoint layer.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import clt_grng as g
+from repro.core.energy import LayerShape
+from repro.core.sampling import (BayesHeadConfig, logit_samples_paper,
+                                 logit_samples_rank16, prepare_serving_head)
+from repro.hw import (ChipInstance, TileGrid, VariationSpec,
+                      calibration_report, compile_network, load_instances,
+                      measured_grng, prepare_instance_head,
+                      sample_instances, save_instances,
+                      shard_column_partition)
+
+SPEC = VariationSpec()
+
+
+def _head_inputs(k=48, n=6, b=4):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    mu = jax.random.normal(k1, (k, n)) * 0.05
+    sg = jax.nn.softplus(jax.random.normal(k2, (k, n)) - 2.0) * 0.2
+    x = jax.random.normal(k3, (b, k))
+    return mu, sg, x
+
+
+# ----------------------------------------------------------------------
+# 1. device statistics
+# ----------------------------------------------------------------------
+def test_nonideal_sum_stats_track_device_model():
+    """Empirical mean/SD of the degraded chip's raw sums match the
+    closed-form model (drifted currents + read noise in quadrature)."""
+    chip = sample_instances(3, 1, SPEC.scaled(2.0))[0]
+    icfg = chip.grng(g.GRNGConfig())
+    assert icfg.read_sigma > 0 and icfg.seed != g.GRNGConfig().seed
+    mean_a, std_a = icfg.analytic_sum_stats()
+    raw = g.raw_sums(icfg, 512, 8, 128)
+    assert abs(float(raw.mean()) - mean_a) < 0.05 * mean_a
+    assert abs(float(raw.std()) - std_a) < 0.1 * std_a
+
+
+def test_read_noise_extends_stream_and_zero_sigma_is_ideal():
+    cfg = dataclasses.replace(g.GRNGConfig(), read_sigma=0.3)
+    full = g.eps(cfg, 16, 16, 12)
+    tail = g.eps(cfg, 16, 16, 4, sample0=8)
+    np.testing.assert_allclose(np.asarray(full[8:]), np.asarray(tail),
+                               rtol=1e-6)
+    ideal = g.eps(g.GRNGConfig(), 16, 16, 4)
+    noisy = g.eps(cfg, 16, 16, 4)
+    assert float(jnp.abs(ideal - noisy).max()) > 0.0
+
+
+def test_rank16_fast_path_matches_paper_twin_statistics():
+    """On a degraded instance the mix_samples projection reproduces the
+    materialized per-cell noise path in mean and variance."""
+    mu, sg, x = _head_inputs()
+    grng = dataclasses.replace(g.GRNGConfig(), read_sigma=0.6)
+    cfg = BayesHeadConfig(num_samples=400, mode="rank16", grng=grng,
+                          compute_dtype=jnp.float32)
+    head = prepare_serving_head(mu, sg, cfg)
+    sp = logit_samples_paper(head, x, cfg, 400)
+    sr = logit_samples_rank16(head, x, cfg, 400)
+    np.testing.assert_allclose(np.asarray(sp.mean(0)),
+                               np.asarray(sr.mean(0)), atol=0.05)
+    np.testing.assert_allclose(np.asarray(sp.std(0)),
+                               np.asarray(sr.std(0)), rtol=0.15, atol=0.02)
+    # read noise inflates the sample spread vs the ideal chip
+    cfg0 = dataclasses.replace(cfg, grng=g.GRNGConfig())
+    s0 = logit_samples_rank16(prepare_serving_head(mu, sg, cfg0), x,
+                              cfg0, 400)
+    assert float(sr.std(0).mean()) > 1.02 * float(s0.std(0).mean())
+
+
+# ----------------------------------------------------------------------
+# 2. tile compiler
+# ----------------------------------------------------------------------
+def _layers():
+    return [LayerShape(144, 16), LayerShape(150, 70),
+            LayerShape(64, 2, bayesian=True)]
+
+
+def test_tilemap_roundtrip_exact():
+    prog = compile_network(_layers(), TileGrid(4, 4))
+    w = np.random.default_rng(0).standard_normal((150, 70)).astype(np.float32)
+    shards = prog.shard_weights("layer1", w)
+    np.testing.assert_array_equal(prog.reconstruct("layer1", shards), w)
+
+
+def test_tilemap_bounded_grid_passes_and_report():
+    grid = TileGrid(2, 2)                     # 4 tiles for 12 blocks
+    prog = compile_network(_layers(), grid, replicate_bayesian=False)
+    n_blocks = 3 + 6 + 1                      # ceil splits of _layers()
+    assert len(prog.placements) == n_blocks
+    assert prog.n_passes == -(-n_blocks // grid.n_tiles)
+    assert all(p.tile_idx < grid.n_tiles for p in prog.placements)
+    assert 0.0 < prog.utilization <= 1.0
+    rep = prog.report(r_samples=20)
+    assert rep["area_mm2"] == pytest.approx(
+        prog.physical_tiles_used * 0.0964)
+    assert rep["utilization"] == pytest.approx(prog.utilization)
+    assert rep["tops_w_mm2_effective"] < 185.0
+    assert rep["grng_samples"] == 64 * 64 * 20     # one Bayesian block
+
+
+def test_tilemap_sharding_partitions_columns():
+    prog = compile_network([LayerShape(128, 256)], TileGrid(8, 8),
+                           n_shards=2)
+    parts = shard_column_partition(prog, "layer0")
+    assert set(parts) == {0, 1}
+    seen = sorted(c for cols in parts.values() for c in cols)
+    assert seen == sorted(set(seen))          # disjoint column groups
+    assert len(parts[0]) == len(parts[1])     # balanced for even splits
+
+
+def test_tilemap_replication_fills_free_tiles():
+    prog = compile_network(_layers(), TileGrid(4, 4))
+    assert prog.replication_factor("layer2") > 1
+    # replicas never displace primary blocks and stay inside the grid
+    prim = prog.layer_placements("layer2")
+    reps = prog.layer_placements("layer2", replicas=True)
+    assert len(reps) == len(prim) * prog.replication_factor("layer2")
+    assert len({(p.pass_idx, p.tile_idx) for p in prog.placements}) == \
+        len(prog.placements)
+
+
+# ----------------------------------------------------------------------
+# 3. calibration
+# ----------------------------------------------------------------------
+def test_calibration_reduces_instance_output_error():
+    """Across chips, the calibrated head's logit means sit closer to the
+    golden head's than the uncalibrated ones — the benchmark's claim at
+    unit-test scale."""
+    mu, sg, x = _head_inputs()
+    cfg = BayesHeadConfig(num_samples=64, mode="rank16",
+                          compute_dtype=jnp.float32)
+    gold = logit_samples_rank16(prepare_serving_head(mu, sg, cfg), x,
+                                cfg, 64).mean(0)
+    err = {True: [], False: []}
+    for chip in sample_instances(11, 4, SPEC.scaled(2.0)):
+        for cal in (False, True):
+            head, scfg = prepare_instance_head(mu, sg, cfg, chip,
+                                               calibrated=cal)
+            got = logit_samples_rank16(head, x, scfg, 64).mean(0)
+            err[cal].append(float(jnp.abs(got - gold).mean()))
+    assert np.mean(err[True]) < 0.5 * np.mean(err[False])
+
+
+def test_calibration_report_residuals_and_cost():
+    chip = sample_instances(5, 1, SPEC.scaled(2.0))[0]
+    rep = calibration_report(chip, g.GRNGConfig(), n_samples=64)
+    assert rep.residual_eps_cal < 0.2 * rep.residual_eps_uncal
+    assert rep.measured_sum_std != pytest.approx(0.993, abs=1e-6)
+    assert rep.energy_J == pytest.approx(54e-12 + 458e-12 * 64)
+    assert rep.time_s == pytest.approx(12.8e-6 + 0.64e-6 * 64)
+
+
+def test_measured_grng_standardizes_degraded_chip():
+    chip = sample_instances(9, 1, SPEC.scaled(2.0))[0]
+    ccfg = measured_grng(chip.grng(g.GRNGConfig()), n_samples=256)
+    e = g.eps(ccfg, 256, 4, 256)
+    assert abs(float(e.mean())) < 0.05
+    assert abs(float(e.std()) - 1.0) < 0.05
+
+
+def test_prepare_instance_head_none_is_golden():
+    mu, sg, x = _head_inputs()
+    cfg = BayesHeadConfig(num_samples=8, mode="rank16",
+                          compute_dtype=jnp.float32)
+    head, scfg = prepare_instance_head(mu, sg, cfg, None)
+    ref = prepare_serving_head(mu, sg, cfg)
+    assert scfg == cfg
+    np.testing.assert_allclose(np.asarray(head["mu_prime"]),
+                               np.asarray(ref["mu_prime"]))
+
+
+# ----------------------------------------------------------------------
+# 4. instances: determinism + serialization
+# ----------------------------------------------------------------------
+def test_instances_deterministic_and_distinct():
+    a = sample_instances(42, 3, SPEC)
+    b = sample_instances(42, 3, SPEC)
+    for x, y in zip(a, b):
+        assert x.device_seed == y.device_seed
+        assert x.read_sigma == y.read_sigma
+        np.testing.assert_array_equal(x.adc_gain, y.adc_gain)
+    assert len({c.device_seed for c in a}) == 3
+    w = jnp.ones((8, 8))
+    pw = a[0].program_weights(w)
+    np.testing.assert_array_equal(np.asarray(pw),
+                                  np.asarray(a[0].program_weights(w)))
+    assert not np.allclose(np.asarray(pw),
+                           np.asarray(a[1].program_weights(w)))
+
+
+def test_instances_ckpt_roundtrip(tmp_path):
+    chips = sample_instances(7, 3, SPEC.scaled(1.5))
+    save_instances(tmp_path / "fleet", chips)
+    back = load_instances(tmp_path / "fleet")
+    assert len(back) == 3
+    for x, y in zip(chips, back):
+        assert isinstance(y, ChipInstance)
+        assert (x.chip_id, x.device_seed, x.noise_seed) == \
+            (y.chip_id, y.device_seed, y.noise_seed)
+        assert x.read_sigma == pytest.approx(y.read_sigma)
+        np.testing.assert_array_equal(x.adc_gain, y.adc_gain)
+        np.testing.assert_array_equal(x.adc_offset, y.adc_offset)
+    # the round-tripped instance produces the identical physical config
+    assert back[0].grng(g.GRNGConfig()) == chips[0].grng(g.GRNGConfig())

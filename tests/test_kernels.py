@@ -133,6 +133,66 @@ def test_cim_mvm_matches_oracle(shape, dtype):
                                rtol=1e-4, atol=1e-4)
 
 
+def test_cim_mvm_nonideal_matches_oracle():
+    """Per-column ADC gain/offset path vs its oracle; zero-variation
+    parameters must reproduce the ideal kernel bit-for-bit (acceptance
+    criterion for the repro/hw nonideal path)."""
+    qcfg = QuantConfig(enabled=True)
+    key = jax.random.PRNGKey(6)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    b, k, n = 8, 192, 130
+    x = jax.random.normal(k1, (b, k))
+    w = jax.random.normal(k2, (k, n)) * 0.05
+    gain = 1.0 + 0.05 * jax.random.normal(k3, (n,))
+    off = 0.5 * jax.random.normal(k4, (n,))
+    got = ops.cim_matmul_nonideal(x, w, qcfg, gain, off, interpret=True)
+    fs = ops._measured_full_scale(x, w, qcfg)
+    want = ref.cim_mvm_nonideal_ref(x, w, qcfg, fs, gain, off)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    # zero-variation == ideal path, and == the zero-variation oracle
+    ones, zeros = jnp.ones((n,)), jnp.zeros((n,))
+    ideal = ops.cim_matmul(x, w, qcfg, interpret=True)
+    got0 = ops.cim_matmul_nonideal(x, w, qcfg, ones, zeros, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got0), np.asarray(ideal))
+    np.testing.assert_allclose(
+        np.asarray(got0),
+        np.asarray(ref.cim_mvm_nonideal_ref(x, w, qcfg, fs, ones, zeros)),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_grng_eps_kernel_matches_oracle_with_read_noise():
+    """Degraded-instance ε kernel: bit-compatible read noise, stream
+    extension across sample0 preserved."""
+    import dataclasses
+    cfg = dataclasses.replace(CFG, read_sigma=0.4)
+    got = ops.grng_eps(cfg, 128, 128, 6, interpret=True)
+    want = ref.grng_eps_ref(cfg, 128, 128, 6)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    tail = ops.grng_eps(cfg, 128, 128, 2, sample0=4, interpret=True)
+    np.testing.assert_allclose(np.asarray(got[4:]), np.asarray(tail),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_bayes_mvm_paper_mode_matches_oracle_with_read_noise():
+    import dataclasses
+    cfg = dataclasses.replace(CFG, read_sigma=0.4)
+    key = jax.random.PRNGKey(7)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (3, 128))
+    mu = jax.random.normal(k2, (128, 128)) * 0.05
+    sigma = jax.nn.softplus(jax.random.normal(k3, (128, 128)) - 2.0) * 0.1
+    got = ops.bayes_head_mvm(x, mu, sigma, cfg, 4, sample0=2, mode="paper",
+                             interpret=True)
+    want = ref.bayes_mvm_ref(x, mu, sigma, cfg, 4, sample0=2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+    with pytest.raises(NotImplementedError):
+        ops.bayes_head_mvm(x, mu, sigma, cfg, 4, mode="rank16",
+                           interpret=True)
+
+
 def test_cim_mvm_snr_reasonable():
     """6-bit chunked ADC keeps the MVM SNR high enough for inference."""
     qcfg = QuantConfig(enabled=True)

@@ -102,6 +102,44 @@ print("OK")
 """)
 
 
+def test_sharded_serving_pool_matches_single_device():
+    """ROADMAP open item: run the serving engine under a 2-device mesh
+    with the slot axis sharded over 'data' (engine ``slot_axis``).  The
+    pool rounds execute data-parallel over the slots; admission scatters
+    stay slot-local; every request must retire with the same prediction
+    and verdict as the unsharded engine."""
+    run_spmd("""
+import jax, numpy as np
+from repro.launch.mesh import make_mesh_compat, mesh_context
+from repro.launch.serve import make_sar_stream
+from repro.models.sar_cnn import SarCnnConfig, init_sar_cnn
+from repro.serving import SarServingEngine, TriagePolicy
+
+cfg = SarCnnConfig()
+params = init_sar_cnn(jax.random.PRNGKey(3), cfg)
+policy = TriagePolicy(conf_threshold=0.6, mi_threshold=0.05,
+                      r_min=4, r_max=12)
+
+def run(slot_axis, mesh):
+    eng = SarServingEngine(params, cfg, n_slots=4, policy=policy,
+                           adaptive_mode=True, slot_axis=slot_axis)
+    for r in make_sar_stream(10, batch=8):
+        eng.submit(r)
+    eng.run()
+    return {r.rid: (r.prediction, r.verdict, r.n_samples)
+            for r in eng.metrics.records}
+
+ref = run(None, None)
+mesh = make_mesh_compat((2, 1), ("data", "model"))
+with mesh_context(mesh):
+    got = run("data", mesh)
+assert set(ref) == set(got) == set(range(10))
+for rid in ref:
+    assert ref[rid] == got[rid], (rid, ref[rid], got[rid])
+print("OK")
+""", devices=2)
+
+
 def test_microbatched_step_matches_full_batch():
     run_spmd("""
 import jax, jax.numpy as jnp, numpy as np

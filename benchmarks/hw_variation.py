@@ -11,10 +11,24 @@ deploys the SAME trained SAR Bayesian-head CNN onto each twice
 accuracy / adaptive-ECE / mutual information / flagged fraction on
 clean and fog-corrupted SARD streams.
 
-The conv trunk runs ideal (the head is the paper's Bayesian story and
-the variation target); per-chip degradation enters through the GRNG
-arrays, the standardization constants, and conductance programming
-noise on the stored (µ', σ).
+The conv trunk runs through each chip's NONIDEAL CIM arrays by default
+(models/sar_cnn.features with per-column ADC gain/offset + conductance
+programming error — the paper's µ-only-subarray mapping on that die);
+the golden reference runs the same CIM numeric path on the golden
+instance, so deviations isolate chip variation rather than CIM
+quantization.  HW_VARIATION_TRUNK=ideal restores the old float-conv
+trunk (features computed once, chip-independent — much cheaper).
+
+Before sweeping the fleet the benchmark asserts, bit-for-bit, that the
+GOLDEN instance (hw.golden_instance: golden hash seeds, zero variation)
+reproduces the golden factory head through the whole instance plumbing
+(prepare_instance_head → logit samples) — and raises RuntimeError on
+any drift, so a broken twin can never masquerade as a clean fleet.
+
+Energy/area accounting is tilemap-true: the tile compiler's placed-
+block counts (padding, column splits, Bayesian replication) feed
+serving/metrics.decision_energy, reported next to the logical-tile
+number it replaces.
 
 Outputs:
   * CSV rows through benchmarks/run.py (``bench()``),
@@ -22,7 +36,8 @@ Outputs:
     artifacts/hw_variation/report.json — uploaded as a CI artifact.
 
 Env knobs (CI smoke): HW_VARIATION_INSTANCES (default 16),
-HW_VARIATION_SEVERITIES (comma floats, default "1.0,2.5").
+HW_VARIATION_SEVERITIES (comma floats, default "1.0,2.5"),
+HW_VARIATION_TRUNK ("nonideal" | "ideal").
 
 Run: PYTHONPATH=src python -m benchmarks.hw_variation [--instances N]
 """
@@ -44,10 +59,11 @@ from repro.core.sampling import BayesHeadConfig, logit_samples
 from repro.core.uncertainty import uq_report
 from repro.data.sard import SardConfig, batch_at, corrupted_batch
 from repro.hw import (VariationSpec, calibration_report, compile_network,
-                      prepare_instance_head, sample_instances)
+                      golden_instance, prepare_instance_head,
+                      sample_instances)
 from repro.models.sar_cnn import SarCnnConfig, features
-from repro.serving import TriagePolicy, finalize, fixed_r_decide, init_stats, \
-    update_stats
+from repro.serving import TriagePolicy, decision_energy, finalize, \
+    fixed_r_decide, init_stats, update_stats
 from repro.serving.triage import FLAG
 
 ART = Path("artifacts/hw_variation")
@@ -67,6 +83,10 @@ def _severities() -> tuple[float, ...]:
     return tuple(float(s) for s in raw.split(","))
 
 
+def _nonideal_trunk() -> bool:
+    return os.environ.get("HW_VARIATION_TRUNK", "nonideal") != "ideal"
+
+
 def _eval_head(head, scfg, feats, labels) -> dict:
     samples = logit_samples(head, feats, scfg, num_samples=R_SAMPLES)
     uq = uq_report(samples, labels)
@@ -82,18 +102,51 @@ def _eval_head(head, scfg, feats, labels) -> dict:
     }
 
 
-def _eval_sets(params, cfg):
-    """(name, feats, labels) eval sets — trunk is chip-independent, so
-    features are computed once and reused across the whole fleet.  Fog
-    severity 0.3 keeps the corrupted stream informative (0.688 golden
-    accuracy) rather than saturated at chance."""
+def _eval_images(cfg):
+    """(name, images, labels) eval sets.  Fog severity 0.3 keeps the
+    corrupted stream informative (0.688 golden accuracy) rather than
+    saturated at chance."""
     dcfg = SardConfig(image_size=cfg.image_size, seed=7)
     clean = batch_at(dcfg, EVAL_STEP0, EVAL_BATCH)
     fog = corrupted_batch(dcfg, EVAL_STEP0, EVAL_BATCH, "fog", 0.3)
     return [
-        ("clean", features(params, clean["images"], cfg), clean["labels"]),
-        ("fog", features(params, fog["images"], cfg), clean["labels"]),
+        ("clean", clean["images"], clean["labels"]),
+        ("fog", fog["images"], clean["labels"]),
     ]
+
+
+def _chip_features(params, cfg, images_sets, chip):
+    """(name, feats, labels) for one die's trunk.
+
+    ``chip=None`` = the ideal-trunk mode (float convs, chip-independent
+    — callers reuse one result fleet-wide).  Eager on purpose: the
+    Pallas CIM kernel's jit cache keys on shapes, not the chip, so a
+    fleet sweep compiles the trunk once."""
+    return [(name, features(params, imgs, cfg, chip=chip), labels)
+            for name, imgs, labels in images_sets]
+
+
+def _assert_golden_instance_bitexact(gold_head, base_hcfg, mu, sg,
+                                     golden_sets) -> None:
+    """The severity-0 anchor: the GOLDEN instance (golden hash seeds,
+    zero variation) pushed through the whole instance plumbing must
+    reproduce the factory transform's logit samples BIT-FOR-BIT.  Any
+    drift means the digital twin no longer collapses to the golden
+    model at zero variation — fail the sweep loudly rather than report
+    deviations against a broken reference."""
+    gi = golden_instance(base_hcfg.grng)
+    gi_head, gi_cfg = prepare_instance_head(mu, sg, base_hcfg, gi,
+                                            calibrated=False)
+    name, feats, _ = golden_sets[0]
+    want = np.asarray(logit_samples(gold_head, feats, base_hcfg,
+                                    num_samples=R_SAMPLES))
+    got = np.asarray(logit_samples(gi_head, feats, gi_cfg,
+                                   num_samples=R_SAMPLES))
+    if not np.array_equal(want, got):
+        raise RuntimeError(
+            "golden-instance drift: prepare_instance_head on the golden "
+            "die no longer reproduces the factory transform bit-for-bit "
+            f"on '{name}' (max |Δ| = {np.abs(want - got).max():.3e})")
 
 
 def run_sweep(n_instances: int | None = None,
@@ -106,20 +159,28 @@ def run_sweep(n_instances: int | None = None,
                                 grng=cfg.grng, compute_dtype=jnp.float32)
     n_instances = n_instances or _n_instances()
     severities = severities or _severities()
-    eval_sets = _eval_sets(params, cfg)
+    nonideal_trunk = _nonideal_trunk()
+    images_sets = _eval_images(cfg)
     mu, sg = params["head"]["mu"], sigma_of(params["head"])
 
     # Golden-chip reference: the characterized-die operating point every
     # deployed instance should reproduce.  "Recovery" below is measured
     # as |metric(chip) − metric(golden)| — raw ECE can accidentally dip
     # on a broken chip (a systematic logit offset deflates confidence),
-    # deviation from golden cannot.
+    # deviation from golden cannot.  With the nonideal trunk the golden
+    # trunk is the golden INSTANCE's CIM arrays (ideal gain/offset, no
+    # programming error) so chip deviations isolate variation, not CIM
+    # quantization.
     from repro.core.sampling import prepare_serving_head
+    trunk_chip = golden_instance(base_hcfg.grng) if nonideal_trunk else None
+    golden_sets = _chip_features(params, cfg, images_sets, trunk_chip)
     gold = prepare_serving_head(mu, sg, base_hcfg)
     golden = {name: _eval_head(gold, base_hcfg, f, l)
-              for name, f, l in eval_sets}
+              for name, f, l in golden_sets}
     rows = [dict(severity=0.0, chip_id=-1, calibrated=True, data=name,
-                 **golden[name]) for name, _, _ in eval_sets]
+                 **golden[name]) for name, _, _ in golden_sets]
+
+    _assert_golden_instance_bitexact(gold, base_hcfg, mu, sg, golden_sets)
 
     for sev in severities:
         chips = sample_instances(SEED, n_instances,
@@ -127,6 +188,8 @@ def run_sweep(n_instances: int | None = None,
         for chip in chips:
             crep = calibration_report(chip, base_hcfg.grng,
                                       n_samples=calib_samples)
+            eval_sets = (_chip_features(params, cfg, images_sets, chip)
+                         if nonideal_trunk else golden_sets)
             for calibrated in (False, True):
                 head, scfg = prepare_instance_head(
                     mu, sg, base_hcfg, chip, calibrated=calibrated,
@@ -152,7 +215,7 @@ def run_sweep(n_instances: int | None = None,
     agg = {}
     for sev in severities:
         for calibrated in (False, True):
-            for name, _, _ in eval_sets:
+            for name, _, _ in images_sets:
                 sel = [r for r in rows
                        if r["severity"] == sev and r["chip_id"] >= 0
                        and r["calibrated"] == calibrated
@@ -167,18 +230,33 @@ def run_sweep(n_instances: int | None = None,
                 agg[key]["accuracy_std"] = float(
                     np.std([r["accuracy"] for r in sel]))
 
-    # Deployed-area context from the tile compiler.
+    # Deployed-area + tilemap-true per-request energy from the compiler:
+    # placed blocks (padding, column splits) next to the logical-tile
+    # math they replace.
     from repro.launch.serve import sar_layer_shapes
-    tile_report = compile_network(sar_layer_shapes(cfg)).report(
-        r_samples=R_SAMPLES)
+    layers = sar_layer_shapes(cfg)
+    program = compile_network(layers)
+    tile_report = program.report(r_samples=R_SAMPLES)
+    e_placed = decision_energy(R_SAMPLES, layers, program)
+    e_logical = decision_energy(R_SAMPLES, layers)
     report = {
         "n_instances": n_instances,
         "severities": list(severities),
         "eval_batch": EVAL_BATCH,
         "r_samples": R_SAMPLES,
+        "trunk": "nonideal" if nonideal_trunk else "ideal",
+        "golden_instance_bitexact": True,
         "golden": golden,
         "tilemap": {k: v for k, v in tile_report.items()
                     if isinstance(v, (int, float))},
+        "energy_per_request": {
+            "placed_pJ": e_placed["energy_J"] * 1e12,
+            "logical_pJ": e_logical["energy_J"] * 1e12,
+            "grng_aJ": e_placed["grng_energy_aJ"],
+            "area_mm2": tile_report["area_mm2"],
+            "utilization": tile_report["utilization"],
+            "tops_w_mm2_effective": tile_report["tops_w_mm2_effective"],
+        },
         "aggregates": agg,
         "instances": rows,
     }
@@ -211,6 +289,14 @@ def bench() -> list[tuple[str, float, str]]:
                 f"flagged_dev={u['flagged_dev']:.3f}->"
                 f"{c['flagged_dev']:.3f};"
                 f"json={ART / 'report.json'}"))
+    e = report["energy_per_request"]
+    out.append(("hw_variation_energy", 0.0,
+                f"trunk={report['trunk']};"
+                f"placed_pJ={e['placed_pJ']:.1f};"
+                f"logical_pJ={e['logical_pJ']:.1f};"
+                f"util={e['utilization']:.3f};"
+                f"tops_w_mm2_eff={e['tops_w_mm2_effective']:.1f};"
+                f"golden_bitexact={report['golden_instance_bitexact']}"))
     return out
 
 

@@ -99,7 +99,13 @@ def bench() -> list[tuple[str, float, str]]:
                     f"model_dps={summary['model_decisions_per_s']:.0f};"
                     f"samples={summary['mean_samples_per_decision']:.2f};"
                     f"flagged={summary['flag_fraction']:.3f};"
-                    f"grng_aJ={summary['grng_energy_per_decision_aJ']:.2e}"))
+                    f"grng_aJ={summary['grng_energy_per_decision_aJ']:.2e};"
+                    # tilemap-true accounting (placed blocks, not
+                    # logical tiles): deployed area/utilization and the
+                    # batch's reconciled total energy
+                    f"etot_J={summary['energy_total_J']:.3e};"
+                    f"util={summary['tile_utilization']:.3f};"
+                    f"tops_w_mm2_eff={summary['tops_w_mm2_effective']:.1f}"))
 
     a, f = results["adaptive"], results["fixed_r20"]
     model_speedup = (a["model_decisions_per_s"]

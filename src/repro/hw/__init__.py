@@ -22,8 +22,9 @@ rank-16 fast path runs unchanged);  ``compile_network`` →
 from repro.hw.calib import (CalibrationReport, calibration_report,
                             measured_grng, prepare_instance_head)
 from repro.hw.device import VariationSpec, degraded_grng, drift_factor
-from repro.hw.instance import (ChipInstance, load_instances,
-                               sample_instances, save_instances)
+from repro.hw.instance import (ChipInstance, golden_instance,
+                               load_instances, sample_instances,
+                               save_instances)
 from repro.hw.tilemap import (Placement, TileGrid, TileProgram,
                               compile_layer, compile_network,
                               shard_column_partition)
@@ -31,7 +32,7 @@ from repro.hw.tilemap import (Placement, TileGrid, TileProgram,
 __all__ = [
     "CalibrationReport", "ChipInstance", "Placement", "TileGrid",
     "TileProgram", "VariationSpec", "calibration_report", "compile_layer",
-    "compile_network", "degraded_grng", "drift_factor", "load_instances",
-    "measured_grng", "prepare_instance_head", "sample_instances",
-    "save_instances", "shard_column_partition",
+    "compile_network", "degraded_grng", "drift_factor", "golden_instance",
+    "load_instances", "measured_grng", "prepare_instance_head",
+    "sample_instances", "save_instances", "shard_column_partition",
 ]

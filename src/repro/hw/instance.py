@@ -111,6 +111,26 @@ class ChipInstance:
         return cls(**kw)
 
 
+def golden_instance(base: GRNGConfig | None = None,
+                    tile: int = 64) -> ChipInstance:
+    """The characterized die itself, as a ChipInstance.
+
+    Every nonideality is zeroed AND the hash seeds equal the golden
+    config's, so the instance plumbing (``grng`` fold, ``adc_columns``,
+    ``program_weights``, ``prepare_instance_head(calibrated=False)``)
+    must reproduce the golden path bit-for-bit — the regression anchor
+    benchmarks/hw_variation.py asserts before sweeping a fleet.  Note a
+    severity-0 *sampled* instance is weaker: it has golden statistics
+    but its own device draw (see VariationSpec.scaled).
+    """
+    base = base or GRNGConfig()
+    return ChipInstance(
+        chip_id=-1, device_seed=base.seed, noise_seed=base.noise_seed,
+        weight_seed=_SEED_WEIGHT,
+        adc_gain=np.ones((tile,), np.float32),
+        adc_offset=np.zeros((tile,), np.float32))
+
+
 def sample_instances(seed: int, n: int,
                      spec: dev.VariationSpec | None = None,
                      tile: int = 64) -> tuple[ChipInstance, ...]:

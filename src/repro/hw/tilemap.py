@@ -97,6 +97,38 @@ class TileProgram:
         reps = self.layer_placements(name, replicas=True)
         return len(reps) // len(base)
 
+    def layer_block_counts(self, replicas: bool = False) -> dict:
+        """{layer name: placed blocks} in placement (= layer) order.
+
+        The tilemap-true replacement for ``energy.tiles_for_layer``:
+        every placed block burns a full physical-tile MVM regardless of
+        how many cells it maps, so per-request energy accounting must
+        charge PLACED blocks, not logical tiles (serving/metrics.py).
+        Primary blocks only by default — replicas split the R samples
+        across concurrent tiles at the same per-decision energy.
+        """
+        out = {name: 0 for name, _ in self.layers}
+        for p in self.placements:
+            if p.replica and not replicas:
+                continue
+            out[p.layer] += 1
+        return out
+
+    def layer_utilization(self, name: str) -> float:
+        """Mapped / allocated bitcells for one layer's primary blocks."""
+        ps = self.layer_placements(name)
+        active = sum(p.rows * p.cols for p in ps)
+        return active / (len(ps) * self.grid.tile**2)
+
+    def det_bayes_blocks(self) -> tuple:
+        """(deterministic blocks, Bayesian primary blocks) — aggregate
+        placed counts the energy model consumes."""
+        shapes = dict(self.layers)
+        counts = self.layer_block_counts()
+        det = sum(c for n, c in counts.items() if not shapes[n].bayesian)
+        bayes = sum(c for n, c in counts.items() if shapes[n].bayesian)
+        return det, bayes
+
     # -- weights ---------------------------------------------------------
     def shard_weights(self, name: str, w) -> dict:
         """Dense [d_in, d_out] -> {placement_key: [tile, tile] block}
@@ -126,18 +158,11 @@ class TileProgram:
     def report(self, r_samples: int = energy.DEPLOY_R,
                batch: int = 1) -> dict:
         shapes = dict(self.layers)
-        det = bayes = 0
-        bayes_passes = set()
-        for p in self.placements:
-            if p.replica:
-                continue        # replicas split the R samples across
-                                # concurrent tiles: same per-decision
-                                # work, so energy counts primaries only
-            if shapes[p.layer].bayesian:
-                bayes += 1
-                bayes_passes.add(p.pass_idx)
-            else:
-                det += 1
+        det, bayes = self.det_bayes_blocks()
+        # replicas split the R samples across concurrent tiles: same
+        # per-decision work, so energy counts primary blocks only
+        bayes_passes = {p.pass_idx for p in self.placements
+                        if not p.replica and shapes[p.layer].bayesian}
         bayes_names = [n for n, l in self.layers if l.bayesian]
         rep = min((self.replication_factor(n) for n in bayes_names),
                   default=0)

@@ -12,7 +12,14 @@ Two variants, selected by the paper's shared-selection structure:
     them with the [R,16] selection table at the last k step.  Cost is
     independent of R (≈18 MVM-equivalents); the sample distribution is
     *identical* to the faithful path because selection is shared
-    layer-wide.
+    layer-wide.  On a degraded chip instance (``cfg.read_sigma > 0``)
+    the per-read noise term is full-rank per sample and cannot ride the
+    basis; the kernel instead accumulates (x²)·(σ²) alongside and adds
+    the exact logit-level projection N(0, read_sigma²·Σ x²σ²) at the
+    final k step, hashed from the absolute sample index with the SAME
+    stream as core/sampling.mix_samples — kernel-path serving matches
+    the engine fast path draw-for-draw, and the faithful ``paper`` path
+    in distribution (tests/test_hw_conformance.py).
 
   * ``paper`` (faithful path, optional 6-bit ADC): ε_r is materialized
     per sample in VMEM and each sample performs its own σε matmul, with
@@ -20,7 +27,11 @@ Two variants, selected by the paper's shared-selection structure:
     6-bit — the hardware's exact numeric order of operations.
 
 VMEM per grid step (bB=bK=bN=128, R=20, f32):
-  rank16: x 64K + µ/σ 128K + basis 16·64K=1M + acc 2·64K + out 20·64K=1.25M  ≈ 2.6 MB
+  rank16: x 64K + µ/σ 128K + basis 16·64K=1M + acc 2·64K + out
+          20·64K=1.25M  ≈ 2.6 MB; read_sigma > 0 adds the 64K (x²)(σ²)
+          scratch plus an [R, bB, bN] noise-stack temporary in the
+          final k step (R·64K ≈ 1.25 MB at R=20 — budget ≈ 3.9 MB on
+          degraded instances)
   paper : x 64K + µ/σ 128K + eps 64K + out 1.25M                            ≈ 1.6 MB
 Both well inside the ~16 MB v5e VMEM; matmul dims are 128-aligned (MXU).
 """
@@ -36,15 +47,20 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.clt_grng import GRNGConfig
 from repro.core.quant import QuantConfig
-from repro.kernels.clt_grng_kernel import _device_current, _read_noise
+from repro.kernels.clt_grng_kernel import (_device_current, _gauss_of, _hash3,
+                                           _read_noise)
 
 
 # ----------------------------------------------------------------------
 # rank16 variant
 # ----------------------------------------------------------------------
 def _rank16_kernel(x_ref, mu_ref, sig_ref, sel_ref, out_ref,
-                   basis_ref, accmu_ref, accxs_ref, *,
-                   cfg: GRNGConfig, bk: int, bn: int, row0: int, col0: int):
+                   basis_ref, accmu_ref, accxs_ref, *scratch,
+                   cfg: GRNGConfig, bb: int, bk: int, bn: int,
+                   row0: int, col0: int, sample0: int):
+    # The (x²)·(σ²) accumulator exists only on degraded instances — the
+    # ideal path (read_sigma == 0) allocates no noise scratch.
+    accxq_ref = scratch[0] if cfg.read_sigma else None
     kstep = pl.program_id(2)
 
     @pl.when(kstep == 0)
@@ -52,7 +68,10 @@ def _rank16_kernel(x_ref, mu_ref, sig_ref, sel_ref, out_ref,
         basis_ref[...] = jnp.zeros_like(basis_ref)
         accmu_ref[...] = jnp.zeros_like(accmu_ref)
         accxs_ref[...] = jnp.zeros_like(accxs_ref)
+        if cfg.read_sigma:
+            accxq_ref[...] = jnp.zeros_like(accxq_ref)
 
+    i = pl.program_id(0)
     j = pl.program_id(1)
     rows = (jnp.uint32(row0) + kstep * bk
             + jax.lax.broadcasted_iota(jnp.uint32, (bk, bn), 0))
@@ -65,6 +84,9 @@ def _rank16_kernel(x_ref, mu_ref, sig_ref, sel_ref, out_ref,
 
     accmu_ref[...] += jnp.dot(x, mu, preferred_element_type=jnp.float32)
     accxs_ref[...] += jnp.dot(x, sig, preferred_element_type=jnp.float32)
+    if cfg.read_sigma:                       # (x²)·(σ²): noise projection
+        accxq_ref[...] += jnp.dot(x * x, sig * sig,
+                                  preferred_element_type=jnp.float32)
     for d in range(cfg.n_devices):           # 16 basis MVMs, unrolled
         i_d = _device_current(rows, cols, d, cfg)
         basis_ref[d, :, :] += jnp.dot(x, sig * i_d,
@@ -79,10 +101,26 @@ def _rank16_kernel(x_ref, mu_ref, sig_ref, sel_ref, out_ref,
             (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
         ).reshape(sel.shape[0], *basis.shape[1:])        # [R, bB, bN]
-        y = (accmu_ref[...][None]
-             + (mixed - cfg.sum_mean * accxs_ref[...][None])
-             * (1.0 / cfg.sum_std))
-        out_ref[...] = y
+        num = mixed - cfg.sum_mean * accxs_ref[...][None]
+        if cfg.read_sigma:                   # degraded-instance twin
+            # Per-read noise is full-rank per sample, so it cannot ride
+            # the 16 basis MVMs; add its exact logit-level projection
+            # N(0, read_sigma²·Σ_k x_k²σ_kn²) instead, drawn from the
+            # SAME hash stream as core.sampling.mix_samples
+            # (hash3(sample_idx, batch, col)) so kernel-path serving and
+            # the engine fast path produce the same noise realization.
+            bat = (i * bb
+                   + jax.lax.broadcasted_iota(jnp.uint32, (bb, bn), 0))
+            ncol = (jnp.uint32(col0) + j * bn
+                    + jax.lax.broadcasted_iota(jnp.uint32, (bb, bn), 1))
+            sigma_read = cfg.read_sigma * jnp.sqrt(
+                jnp.maximum(accxq_ref[...], 0.0))        # [bB, bN]
+            noise = jnp.stack([
+                _gauss_of(_hash3(jnp.uint32(sample0 + r), bat, ncol,
+                                 cfg.noise_seed))
+                for r in range(sel.shape[0])])           # [R, bB, bN]
+            num = num + noise * sigma_read[None]
+        out_ref[...] = accmu_ref[...][None] + num * (1.0 / cfg.sum_std)
 
 
 # ----------------------------------------------------------------------
@@ -181,14 +219,9 @@ def bayes_mvm_pallas(x, mu, sigma, sel, fs, cfg: GRNGConfig,
     grid = (bp // bb, np_ // bn, kp // bk)
 
     if mode == "rank16":
-        if cfg.read_sigma:
-            raise NotImplementedError(
-                "rank16 kernel cannot carry per-read noise (full-rank per "
-                "sample); use mode='paper' or the core/sampling.py "
-                "mix_samples projection for degraded instances")
         out = pl.pallas_call(
-            functools.partial(_rank16_kernel, cfg=cfg, bk=bk, bn=bn,
-                              row0=row0, col0=col0),
+            functools.partial(_rank16_kernel, cfg=cfg, bb=bb, bk=bk, bn=bn,
+                              row0=row0, col0=col0, sample0=sample0),
             grid=grid,
             in_specs=[
                 pl.BlockSpec((bb, bk), lambda i, j, k: (i, k)),
@@ -198,11 +231,13 @@ def bayes_mvm_pallas(x, mu, sigma, sel, fs, cfg: GRNGConfig,
             ],
             out_specs=pl.BlockSpec((r, bb, bn), lambda i, j, k: (0, i, j)),
             out_shape=jax.ShapeDtypeStruct((r, bp, np_), jnp.float32),
-            scratch_shapes=[
-                pltpu.VMEM((cfg.n_devices, bb, bn), jnp.float32),
-                pltpu.VMEM((bb, bn), jnp.float32),
-                pltpu.VMEM((bb, bn), jnp.float32),
-            ],
+            scratch_shapes=(
+                [pltpu.VMEM((cfg.n_devices, bb, bn), jnp.float32),
+                 pltpu.VMEM((bb, bn), jnp.float32),
+                 pltpu.VMEM((bb, bn), jnp.float32)]
+                # (x²)·(σ²) accumulator, degraded instances only
+                + ([pltpu.VMEM((bb, bn), jnp.float32)]
+                   if cfg.read_sigma else [])),
             interpret=interpret,
         )(xp, mup, sigp, sel)
     elif mode == "paper":

@@ -38,12 +38,13 @@ def _mix32(x):
     return x
 
 
-def _hash3(k, n, j: int, seed: int):
+def _hash3(k, n, j, seed: int):
     # Explicit uint32 coercion: program_id-derived indices arrive as
     # int32, and int32 hash arithmetic diverges (arithmetic >> shifts).
-    k = k.astype(jnp.uint32)
-    n = n.astype(jnp.uint32)
-    h = _mix32(jnp.uint32(j) * jnp.uint32(_C3) + jnp.uint32(seed))
+    k = jnp.asarray(k).astype(jnp.uint32)
+    n = jnp.asarray(n).astype(jnp.uint32)
+    j = jnp.asarray(j).astype(jnp.uint32)
+    h = _mix32(j * jnp.uint32(_C3) + jnp.uint32(seed))
     h = _mix32(n * jnp.uint32(_C2) + h)
     h = _mix32(k * jnp.uint32(_C1) + h)
     return h

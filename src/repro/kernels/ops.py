@@ -43,9 +43,14 @@ def bayes_head_mvm(x: jnp.ndarray, mu_prime: jnp.ndarray, sigma: jnp.ndarray,
                    interpret: bool | None = None) -> jnp.ndarray:
     """Fused Bayesian head: [R, B, N] logit samples.
 
-    mode='rank16'  — R-independent fast path (exact distribution).
-    mode='paper'   — faithful per-sample path; pass qcfg to enable the
-                     6-bit chunked-ADC numeric pipeline.
+    mode='rank16'  — R-independent fast path (exact distribution).  On a
+                     degraded instance (``cfg.read_sigma > 0``) it adds
+                     the logit-level read-noise projection, matching the
+                     core/sampling.mix_samples hash stream draw-for-draw
+                     (oracle: ref.bayes_mvm_rank16_ref).
+    mode='paper'   — faithful per-sample path (per-cell read noise);
+                     pass qcfg to enable the 6-bit chunked-ADC numeric
+                     pipeline.
     """
     sel = g.selections(cfg, num_samples, sample0)
     if qcfg is not None and not qcfg.enabled:

@@ -8,6 +8,8 @@ allclose sweeps in tests/test_kernels.py.
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax.numpy as jnp
 
 from repro.core import clt_grng as g
@@ -42,6 +44,38 @@ def bayes_mvm_ref(x: jnp.ndarray, mu: jnp.ndarray, sigma: jnp.ndarray,
     eps = grng_eps_ref(cfg, kdim, n, num_samples, sample0, row0, col0)
     w = mu[None] + sigma[None] * eps               # [R, K, N]
     return jnp.einsum("bk,rkn->rbn", x, w)
+
+
+def bayes_mvm_rank16_ref(x: jnp.ndarray, mu: jnp.ndarray, sigma: jnp.ndarray,
+                         cfg: g.GRNGConfig, num_samples: int, sample0: int = 0,
+                         row0: int = 0, col0: int = 0) -> jnp.ndarray:
+    """Rank-16 kernel oracle: [R, B, N] float32.
+
+    With ``cfg.read_sigma == 0`` this is identical to ``bayes_mvm_ref``.
+    On a degraded instance the rank-16 path carries the cycle-to-cycle
+    read noise as its exact logit-level projection instead of per-cell
+    draws: sample r of logit (b, n) gains
+        read_sigma · √(Σ_k x_bk² σ_kn²) · gaussianish(hash3(s₀+r, b, n))
+    pre-standardization — the same hash stream ``mix_samples`` uses (and
+    the fused rank16 kernel reproduces), keyed by the ABSOLUTE sample
+    index so escalation at later ``sample0`` extends the stream exactly.
+    """
+    b = x.shape[0]
+    _, n = mu.shape
+    cfg0 = dataclasses.replace(cfg, read_sigma=0.0)
+    y = bayes_mvm_ref(x, mu, sigma, cfg0, num_samples, sample0, row0, col0)
+    if cfg.read_sigma:
+        x32 = x.astype(jnp.float32)
+        s32 = sigma.astype(jnp.float32)
+        x_sigsq = (x32 * x32) @ (s32 * s32)                  # [B, N]
+        key = sample0 + jnp.arange(num_samples, dtype=jnp.uint32)
+        h = hash3(key[:, None, None],
+                  jnp.arange(b, dtype=jnp.uint32)[None, :, None],
+                  col0 + jnp.arange(n, dtype=jnp.uint32)[None, None, :],
+                  cfg.noise_seed)                            # [R, B, N]
+        sigma_read = cfg.read_sigma * jnp.sqrt(jnp.maximum(x_sigsq, 0.0))
+        y = y + gaussianish(h) * sigma_read[None] / cfg.sum_std
+    return y
 
 
 def bayes_mvm_adc_ref(x: jnp.ndarray, mu: jnp.ndarray, sigma: jnp.ndarray,

@@ -87,7 +87,10 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
         # guard); stay within the window.  Oversized prompt+gen then
         # fails loudly in the engine's capacity check.
         cache_len = min(cache_len, cfg.swa_window)
-    metrics = ServingMetrics(layers=lm_layer_shapes(cfg))
+    from repro.hw import compile_network
+    layers = lm_layer_shapes(cfg)
+    metrics = ServingMetrics(layers=layers,
+                             tile_program=compile_network(layers))
     engine = LMServingEngine(
         jax_params_init(cfg, seed), cfg, n_slots=batch,
         prompt_len=prompt_len, cache_len=cache_len, policy=policy,
@@ -158,26 +161,30 @@ def serve_sar(*, n_requests: int = 128, n_slots: int = 32,
     """SAR image-stream serving. Untrained params unless provided.
 
     ``chip_instance``: a hw.ChipInstance (or an int seed — one chip is
-    sampled from the default VariationSpec) — the engine then serves on
-    that die's digital twin: degraded GRNG, per-chip constants,
-    programming noise; ``calibrated`` selects the per-instance
-    recalibrated head (hw/calib.py) vs the golden factory transform.
-    The summary gains chip metadata and the tile compiler's deployed
-    area/utilization.
+    sampled from the default VariationSpec) — the engine then serves
+    *fully* on that die's digital twin: the conv trunk through the
+    nonideal CIM kernel (per-column ADC gain/offset + programming
+    noise), the Bayesian head on the degraded GRNG with per-chip
+    constants; ``calibrated`` selects the per-instance recalibrated
+    head (hw/calib.py) vs the golden factory transform.  The summary
+    gains chip metadata; energy/area accounting is tilemap-true (placed
+    blocks + utilization from the tile compiler) with or without a
+    chip.
     """
+    from repro.hw import compile_network
     from repro.models.sar_cnn import SarCnnConfig, init_sar_cnn
     cfg = cfg or SarCnnConfig()
     if params is None:
         params = init_sar_cnn(jax.random.PRNGKey(3 + seed), cfg)
     policy = policy or TriagePolicy(conf_threshold=0.7, mi_threshold=0.05)
     layers = sar_layer_shapes(cfg)
+    program = compile_network(layers)
     head = hcfg = None
     extra = {}
     if chip_instance is not None:
         from repro.core.bayes_layer import sigma_of
         from repro.core.sampling import BayesHeadConfig
-        from repro.hw import (compile_network, prepare_instance_head,
-                              sample_instances)
+        from repro.hw import prepare_instance_head, sample_instances
         if not hasattr(chip_instance, "grng"):
             chip_instance = sample_instances(int(chip_instance), 1)[0]
         base_hcfg = BayesHeadConfig(
@@ -186,21 +193,19 @@ def serve_sar(*, n_requests: int = 128, n_slots: int = 32,
         head, hcfg = prepare_instance_head(
             params["head"]["mu"], sigma_of(params["head"]), base_hcfg,
             chip_instance, calibrated=calibrated)
-        program = compile_network(layers)
         extra = {
             "chip_id": chip_instance.chip_id,
             "chip_device_seed": chip_instance.device_seed,
             "chip_read_sigma": chip_instance.read_sigma,
             "chip_temp_c": chip_instance.temp_c,
             "calibrated": bool(calibrated),
-            "tile_area_mm2": program.report()["area_mm2"],
-            "tile_utilization": program.utilization,
-            "tile_passes": program.n_passes,
         }
-    metrics = ServingMetrics(layers=layers, extra=extra)
+    metrics = ServingMetrics(layers=layers, extra=extra,
+                             tile_program=program)
     engine = SarServingEngine(params, cfg, n_slots=n_slots, policy=policy,
                               adaptive_mode=adaptive, metrics=metrics,
-                              head=head, hcfg=hcfg, slot_axis=slot_axis)
+                              head=head, hcfg=hcfg, chip=chip_instance,
+                              slot_axis=slot_axis)
     for r in make_sar_stream(n_requests, corrupt_frac=corrupt_frac,
                              corruption=corruption,
                              image_size=cfg.image_size):

@@ -10,6 +10,23 @@ im2col + 8-bit weights + 64-deep 6-bit-ADC chunked matmul (core/cim.py),
 exactly the paper's µ-only-subarray mapping ("1659 µ-only subarrays …
 via im2col").  This is the configuration used to validate that CIM
 quantization costs ~no accuracy (Table II "This*" rows).
+
+Chip-instance execution (repro/hw): pass a ``hw.ChipInstance`` as
+``chip`` to ``features``/``logit_samples_serve`` and every conv-as-
+matmul layer runs through the NONIDEAL CIM kernel instead
+(kernels/ops.cim_matmul_nonideal): 8-bit IDAC inputs and 8-bit weights,
+conductance programming error on the written weight matrix
+(``instance.program_weights``, one tag per conv array), and that die's
+per-column ADC gain/offset front-end.  A zero-variation instance
+(gain = 1, offset = 0, program_sigma = 0) is bit-identical to the ideal
+chunked-ADC KERNEL pipeline (quantize → ``ops.cim_matmul``) — the
+trunk-side acceptance criterion, enforced in
+tests/test_hw_conformance.py.  It is close to but NOT bit-identical to
+the pure-jnp ``cfg.cim_execution`` trunk (core/cim.cim_matmul): that
+path calibrates the ADC full-scale from the full-batch partial-sum RMS
+while the kernel wrapper samples 16 rows, and blocked-dot vs einsum
+float ordering differs — calibration-level deltas, also bounded in the
+conformance suite.
 """
 
 from __future__ import annotations
@@ -83,9 +100,36 @@ def _im2col(x: jnp.ndarray, k: int, stride: int) -> jnp.ndarray:
     return jnp.concatenate(patches, axis=-1)
 
 
-def _conv(x, w, b, cfg: SarCnnConfig, stride: int = 2):
+# program_weights tag space: the Bayesian head's µ/σε subarrays own
+# tags 0/1 (hw/calib.py); conv-trunk arrays start here so co-located
+# writes never share a programming-noise draw.
+_TRUNK_TAG0 = 16
+
+
+def _conv(x, w, b, cfg: SarCnnConfig, stride: int = 2, chip=None,
+          layer_idx: int = 0):
     k = w.shape[0]
-    if cfg.cim_execution:
+    if chip is not None:
+        # This die's µ-only subarrays: quantize to the stored precision,
+        # apply conductance programming error to the WRITTEN matrix,
+        # then run the chunked-ADC kernel through the chip's per-column
+        # gain/offset front-end.
+        from repro.core import quant as q
+        from repro.kernels import ops
+        cols = _im2col(x, k, stride)                    # [B,Ho,Wo,k²C]
+        bsz, ho, wo, d = cols.shape
+        wmat = w.reshape(-1, w.shape[-1])               # [k²C, Cout]
+        xq, _ = q.quantize_input(cols.reshape(-1, d), cfg.quant)
+        wq, _ = q.quantize_mu(wmat, cfg.quant)
+        wq = chip.program_weights(wq, tag=_TRUNK_TAG0 + layer_idx)
+        pad = (-d) % cfg.quant.chunk                    # tile depth align
+        xq = jnp.pad(xq, ((0, 0), (0, pad)))
+        wq = jnp.pad(wq, ((0, pad), (0, 0)))
+        gain, off = chip.adc_columns(w.shape[-1])
+        y = ops.cim_matmul_nonideal(xq, wq, cfg.quant,
+                                    jnp.asarray(gain), jnp.asarray(off))
+        y = y.reshape(bsz, ho, wo, -1)
+    elif cfg.cim_execution:
         cols = _im2col(x, k, stride)                    # [B,Ho,Wo,k²C]
         bsz, ho, wo, d = cols.shape
         wmat = w.reshape(-1, w.shape[-1])               # [k²C, Cout]
@@ -101,10 +145,17 @@ def _conv(x, w, b, cfg: SarCnnConfig, stride: int = 2):
     return jax.nn.relu(y + b)
 
 
-def features(params, images, cfg: SarCnnConfig) -> jnp.ndarray:
+def features(params, images, cfg: SarCnnConfig, chip=None) -> jnp.ndarray:
+    """Conv trunk -> GAP features [B, C].
+
+    ``chip`` (a hw.ChipInstance): execute every conv on that die's
+    nonideal CIM arrays — quantized weights with programming error, per-
+    column ADC gain/offset.  Overrides ``cfg.cim_execution`` (a physical
+    chip has no float conv units).
+    """
     h = images
-    for layer in params["convs"]:
-        h = _conv(h, layer["w"], layer["b"], cfg)
+    for i, layer in enumerate(params["convs"]):
+        h = _conv(h, layer["w"], layer["b"], cfg, chip=chip, layer_idx=i)
     return h.mean(axis=(1, 2))                          # GAP -> [B, C]
 
 
@@ -128,11 +179,18 @@ def train_loss(params, batch, cfg: SarCnnConfig, step):
 
 
 def logit_samples_serve(params, images, cfg: SarCnnConfig, num_samples: int,
-                        mode: str = "rank16", sample0: int = 0):
-    """MC logit samples through the CLT-GRNG serving path. [R, B, C]."""
+                        mode: str = "rank16", sample0: int = 0, chip=None):
+    """MC logit samples through the CLT-GRNG serving path. [R, B, C].
+
+    ``chip`` routes the conv trunk through that die's nonideal CIM
+    arrays (see ``features``).  The head here stays the golden factory
+    transform — deploy the head onto the same die with
+    ``hw.calib.prepare_instance_head`` and sample via core/sampling for
+    the fully-nonideal path (what serve_sar --chip-instance does).
+    """
     from repro.core.sampling import BayesHeadConfig, logit_samples
     from repro.core.bayes_layer import sigma_of, to_serving
-    feats = features(params, images, cfg)
+    feats = features(params, images, cfg, chip=chip)
     if not cfg.bayesian_head:
         logits = feats @ params["head"]["w"] + params["head"]["b"]
         return logits[None]

@@ -18,14 +18,15 @@ from repro.serving.adaptive import (escalation_schedule, finalize,
 from repro.serving.engine import (LMServingEngine, Request,
                                   SarServingEngine)
 from repro.serving.metrics import (RequestRecord, ServingMetrics,
-                                   decision_energy)
+                                   decision_energy, energy_terms,
+                                   request_energy)
 from repro.serving.triage import (ACCEPT, ESCALATE, FLAG, TriagePolicy,
                                   decide, fixed_r_decide)
 
 __all__ = [
     "ACCEPT", "ESCALATE", "FLAG", "LMServingEngine", "Request",
     "RequestRecord", "SarServingEngine", "ServingMetrics", "TriagePolicy",
-    "decide", "decision_energy", "escalation_schedule", "finalize",
-    "fixed_r_decide", "init_stats", "stream_indices", "stream_selections",
-    "update_stats",
+    "decide", "decision_energy", "energy_terms", "escalation_schedule",
+    "finalize", "fixed_r_decide", "init_stats", "request_energy",
+    "stream_indices", "stream_selections", "update_stats",
 ]

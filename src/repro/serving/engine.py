@@ -152,11 +152,17 @@ class SarServingEngine(_EngineBase):
                  adaptive_mode: bool = True, metrics: ServingMetrics = None,
                  head: dict | None = None,
                  hcfg: BayesHeadConfig | None = None,
-                 slot_axis: str | None = None):
+                 chip=None, slot_axis: str | None = None):
         """``head``/``hcfg``: pre-deployed serving head + its config —
         the repro/hw chip-instance path (hw.calib.prepare_instance_head
         returns both; the rank-16 fast path below runs unchanged on the
         degraded instance).  Default: golden-chip head from ``params``.
+
+        ``chip`` (a hw.ChipInstance): run the deterministic conv trunk
+        on that die's nonideal CIM arrays too (models/sar_cnn.features
+        with per-column ADC gain/offset + programming error) — together
+        with a ``prepare_instance_head`` head this makes EVERY serving
+        decision flow through the same nonideal device model.
 
         ``slot_axis``: mesh axis name to shard the slot (pool batch)
         dimension over — construct and run the engine inside
@@ -190,7 +196,7 @@ class SarServingEngine(_EngineBase):
 
         def featurize(p, images):
             return constrain(activation_basis(
-                head, features(p, images, cfg), hcfg_))
+                head, features(p, images, cfg, chip=chip), hcfg_))
 
         self._featurize = jax.jit(lambda imgs: featurize(params, imgs))
 

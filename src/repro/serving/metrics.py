@@ -13,6 +13,15 @@ costs one µ-subarray MVM plus ``n_samples`` σε-subarray re-reads per
 tile (§IV), each GRNG sample 640 aJ.  Adaptive fidelity therefore
 translates *directly* into σε-MVM and GRNG energy: the bench reports
 fixed-R vs adaptive-R energy from the same accounting.
+
+Tile accounting is **tilemap-true** when a compiled ``TileProgram``
+(hw/tilemap.py) is supplied: per-request energy charges the compiler's
+PLACED block counts — padding waste, column splits, and pass
+multiplexing included — instead of the logical ``tiles_for_layer``
+ceiling math, and the summary carries the deployed area, utilization,
+and effective TOPS/W/mm².  The reconciliation invariant (tested): the
+sum of per-request energies equals ``energy.grid_inference_energy`` of
+the same placed counts evaluated at the batch's total sample spend.
 """
 
 from __future__ import annotations
@@ -63,39 +72,86 @@ def decision_latency(n_samples: float, layers) -> float:
     return t
 
 
-def decision_energy(n_samples: float, layers) -> dict:
+def energy_terms(layers, tile_program=None) -> dict:
+    """Per-decision/per-sample energy coefficients for a layer stack.
+
+    Returns {e_fixed: J per decision (one MVM per det/Bayes-µ block),
+    e_per_sample: J per GRNG sample (σε re-read), cells_per_sample:
+    GRNG draws per sample}.  With ``tile_program`` (hw/tilemap.py) the
+    block counts are the compiler's PLACED blocks; otherwise the
+    logical ``tiles_for_layer`` fallback (pre-compiler behaviour, and
+    exactly equal whenever the grid tile matches ``energy.TILE_DIM``
+    with no packing).  Every placed block is priced at the paper's
+    physical 64×64 tile — MVM energy, GRNG cells, and area all use the
+    same TILE_* constants, so the accounting stays internally
+    consistent (and reconciles with ``energy.grid_inference_energy``)
+    even on grids whose logical tile edge is smaller.
+    """
+    if tile_program is not None:
+        shapes = [s for _, s in tile_program.layers]
+        if [tuple(dataclasses.astuple(s)) for s in shapes] != \
+                [tuple(dataclasses.astuple(s)) for s in layers]:
+            raise ValueError(
+                "tile_program was compiled for a different layer stack")
+        counts = list(tile_program.layer_block_counts().values())
+    else:
+        counts = [energy.tiles_for_layer(l) for l in layers]
+    e_fixed = e_per_sample = cells = 0.0
+    for l, nt in zip(layers, counts):
+        e_fixed += nt * energy.TILE_MVM_ENERGY
+        if l.bayesian:
+            e_per_sample += nt * energy.SIGMA_MVM_ENERGY
+            cells += nt * energy.TILE_DIM**2
+    return {"e_fixed": e_fixed, "e_per_sample": e_per_sample,
+            "cells_per_sample": cells}
+
+
+def decision_energy(n_samples: float, layers, tile_program=None,
+                    terms: dict | None = None) -> dict:
     """Analytic per-decision energy for ``n_samples`` drawn samples.
 
     layers: list of core.energy.LayerShape — the deterministic trunk
-    plus the Bayesian head(s).  Returns joules plus the GRNG share in
-    aJ (the paper's headline unit).
+    plus the Bayesian head(s); ``tile_program``: the compiled placement
+    for tilemap-true block counts; ``terms``: precomputed
+    ``energy_terms`` to skip the placement walk.  Returns joules plus
+    the GRNG share in aJ (the paper's headline unit).
     """
     # energy.inference_energy expects an integer-ish R; evaluate the
     # Bayesian terms at the *measured mean* sample count instead.
-    e_det = e_sigma = grng_samples = 0.0
-    for l in layers:
-        nt = energy.tiles_for_layer(l)
-        if l.bayesian:
-            e_det += nt * energy.TILE_MVM_ENERGY
-            e_sigma += nt * n_samples * energy.SIGMA_MVM_ENERGY
-            grng_samples += nt * energy.TILE_DIM**2 * n_samples
-        else:
-            e_det += nt * energy.TILE_MVM_ENERGY
-    e_grng = grng_samples * energy.GRNG_ENERGY_PER_SAMPLE
+    t = terms if terms is not None else energy_terms(layers, tile_program)
+    e_sigma = t["e_per_sample"] * n_samples
+    grng_samples = t["cells_per_sample"] * n_samples
     return {
-        "energy_J": e_det + e_sigma,
+        "energy_J": t["e_fixed"] + e_sigma,
         "energy_sigma_J": e_sigma,
-        "grng_energy_aJ": e_grng * 1e18,
+        "grng_energy_aJ": grng_samples * energy.GRNG_ENERGY_PER_SAMPLE
+        * 1e18,
         "grng_samples": grng_samples,
     }
+
+
+def request_energy(rec: RequestRecord, layers, tile_program=None,
+                   terms: dict | None = None) -> float:
+    """Total energy (J) one retired request spent on the engine: one
+    fixed MVM sweep per decision plus its measured GRNG sample spend.
+    ``terms``: precomputed ``energy_terms`` (batch summaries pass it so
+    the placement walk happens once, not per record)."""
+    t = terms if terms is not None else energy_terms(layers, tile_program)
+    return (max(rec.n_decisions, 1) * t["e_fixed"]
+            + rec.n_samples * t["e_per_sample"])
 
 
 class ServingMetrics:
     """Aggregates RequestRecords into the serving report."""
 
-    def __init__(self, layers=None, extra: dict | None = None):
+    def __init__(self, layers=None, extra: dict | None = None,
+                 tile_program=None):
         self.records: list[RequestRecord] = []
         self.layers = layers          # energy.LayerShape list or None
+        # hw/tilemap.TileProgram compiled for ``layers``: switches the
+        # energy accounting from logical tiles to placed blocks and adds
+        # deployed area/utilization to the summary.
+        self.tile_program = tile_program
         # Run-level metadata merged verbatim into the summary — the
         # chip-instance serving mode records the chip id/seeds,
         # calibration state, and the tile compiler's area/utilization
@@ -125,8 +181,10 @@ class ServingMetrics:
             if self.layers is not None:
                 out.update(energy_per_decision_pJ=nan,
                            grng_energy_per_decision_aJ=nan,
+                           energy_total_J=nan,
                            energy_saving_vs_R20=nan, model_latency_s=nan,
                            model_decisions_per_s=nan)
+            out.update(self._tile_summary())
             out.update(self.extra)
             return out
         n_dec = sum(r.n_decisions for r in self.records)
@@ -153,14 +211,34 @@ class ServingMetrics:
                 out[f"{name}_fraction"] = float((verdicts == code).mean())
         if self.layers is not None:
             n_bar = float(samples.mean())
-            e = decision_energy(n_bar, self.layers)
-            e20 = decision_energy(energy.DEPLOY_R, self.layers)
+            terms = energy_terms(self.layers, self.tile_program)
+            e = decision_energy(n_bar, self.layers, terms=terms)
+            e20 = decision_energy(energy.DEPLOY_R, self.layers,
+                                  terms=terms)
             out["energy_per_decision_pJ"] = e["energy_J"] * 1e12
             out["grng_energy_per_decision_aJ"] = e["grng_energy_aJ"]
+            out["energy_total_J"] = sum(
+                request_energy(r, self.layers, terms=terms)
+                for r in self.records)
             out["energy_saving_vs_R20"] = (
                 e20["energy_J"] / max(e["energy_J"], 1e-30))
-            t = decision_latency(n_bar, self.layers)
-            out["model_latency_s"] = t
-            out["model_decisions_per_s"] = 1.0 / t
+            # Latency stays the paper's per-layer serial model (§V-A FPS
+            # math): tilemap passes ignore inter-layer data dependence.
+            lat = decision_latency(n_bar, self.layers)
+            out["model_latency_s"] = lat
+            out["model_decisions_per_s"] = 1.0 / lat
+        out.update(self._tile_summary())
         out.update(self.extra)
         return out
+
+    def _tile_summary(self) -> dict:
+        if self.tile_program is None:
+            return {}
+        p = self.tile_program
+        return {
+            "tile_area_mm2": p.physical_tiles_used * energy.TILE_AREA_MM2,
+            "tile_utilization": p.utilization,
+            "tile_passes": p.n_passes,
+            "tops_w_mm2_effective": (energy.efficiency_density()
+                                     * p.utilization),
+        }

@@ -188,9 +188,42 @@ def test_bayes_mvm_paper_mode_matches_oracle_with_read_noise():
     want = ref.bayes_mvm_ref(x, mu, sigma, cfg, 4, sample0=2)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-4, atol=1e-3)
-    with pytest.raises(NotImplementedError):
-        ops.bayes_head_mvm(x, mu, sigma, cfg, 4, mode="rank16",
-                           interpret=True)
+
+
+def test_bayes_mvm_rank16_mode_matches_oracle_with_read_noise():
+    """Degraded-instance rank16 kernel: logit-level noise projection,
+    keyed by the absolute sample index (stream-extension-exact)."""
+    import dataclasses
+    cfg = dataclasses.replace(CFG, read_sigma=0.4)
+    key = jax.random.PRNGKey(8)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (3, 200))
+    mu = jax.random.normal(k2, (200, 150)) * 0.05
+    sigma = jax.nn.softplus(jax.random.normal(k3, (200, 150)) - 2.0) * 0.1
+    got = ops.bayes_head_mvm(x, mu, sigma, cfg, 6, mode="rank16",
+                             interpret=True)
+    want = ref.bayes_mvm_rank16_ref(x, mu, sigma, cfg, 6)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    # stream extension: samples [2:6] reproduce a draw starting at 2
+    tail = ops.bayes_head_mvm(x, mu, sigma, cfg, 4, sample0=2,
+                              mode="rank16", interpret=True)
+    np.testing.assert_allclose(np.asarray(got[2:]), np.asarray(tail),
+                               rtol=1e-4, atol=1e-4)
+    # the noise term is exactly additive: kernel(σ_r) − kernel(0) must
+    # reproduce the oracle's projection term (so read_sigma = 0 adds
+    # nothing beyond the ideal kernel, which the per-mode oracle sweeps
+    # above already pin down)
+    got0 = ops.bayes_head_mvm(
+        x, mu, sigma, dataclasses.replace(cfg, read_sigma=0.0), 6,
+        mode="rank16", interpret=True)
+    want0 = ref.bayes_mvm_rank16_ref(
+        x, mu, sigma, dataclasses.replace(cfg, read_sigma=0.0), 6)
+    np.testing.assert_allclose(np.asarray(got0), np.asarray(want0),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got - got0),
+                               np.asarray(want - want0),
+                               rtol=1e-4, atol=1e-4)
 
 
 def test_cim_mvm_snr_reasonable():

@@ -1,0 +1,73 @@
+"""Property-based tile-compiler invariants (hw/tilemap.py).
+
+For hypothesis-generated layer shapes and grid geometries the compiler
+must: round-trip weights exactly, partition each weight matrix into
+non-overlapping primary blocks that cover it, never double-book a
+physical (pass, tile) slot, keep utilization in (0, 1], and report
+placed-block energy no smaller than the logical-tile math it replaced
+(every placed block burns a full tile MVM; physical tiles never exceed
+the paper's 64×64, so placed counts can only grow).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.energy import LayerShape
+from repro.hw import TileGrid, compile_network
+from repro.serving.metrics import decision_energy
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+pytestmark = pytest.mark.smoke
+
+
+@settings(max_examples=25, deadline=None)
+@given(d_in=st.integers(1, 300), d_out=st.integers(1, 300),
+       rows=st.integers(1, 4), cols=st.integers(1, 4),
+       tile=st.sampled_from([16, 32, 64]), bayes=st.booleans())
+def test_roundtrip_partition_and_slots(d_in, d_out, rows, cols, tile,
+                                       bayes):
+    layers = [LayerShape(d_in, d_out, bayesian=bayes),
+              LayerShape(37, 5, bayesian=True)]
+    prog = compile_network(layers, TileGrid(rows, cols, tile=tile))
+
+    # exact weight round-trip
+    w = np.random.default_rng(0).standard_normal(
+        (d_in, d_out)).astype(np.float32)
+    np.testing.assert_array_equal(
+        prog.reconstruct("layer0", prog.shard_weights("layer0", w)), w)
+
+    # primary blocks partition the weight matrix: full cover, no overlap
+    ps = prog.layer_placements("layer0")
+    cover = np.zeros((d_in, d_out), np.int32)
+    for p in ps:
+        assert 0 < p.rows <= tile and 0 < p.cols <= tile
+        cover[p.r0:p.r0 + p.rows, p.c0:p.c0 + p.cols] += 1
+    assert (cover == 1).all(), "blocks overlap or miss weight cells"
+
+    # no two blocks (any layer, replicas included) share a physical slot
+    slots = [(p.pass_idx, p.tile_idx) for p in prog.placements]
+    assert len(slots) == len(set(slots))
+    assert all(p.tile_idx < prog.grid.n_tiles for p in prog.placements)
+
+
+@settings(max_examples=25, deadline=None)
+@given(d_in=st.integers(1, 300), d_out=st.integers(1, 300),
+       rows=st.integers(1, 4), cols=st.integers(1, 4),
+       tile=st.sampled_from([16, 32, 64]), bayes=st.booleans())
+def test_utilization_and_placed_energy(d_in, d_out, rows, cols, tile,
+                                       bayes):
+    layers = [LayerShape(d_in, d_out, bayesian=bayes),
+              LayerShape(37, 5, bayesian=True)]
+    prog = compile_network(layers, TileGrid(rows, cols, tile=tile))
+
+    assert 0.0 < prog.utilization <= 1.0
+    assert all(0.0 < prog.layer_utilization(n) <= 1.0
+               for n, _ in prog.layers)
+    counts = prog.layer_block_counts()
+    assert counts[prog.layers[0][0]] == len(prog.layer_placements("layer0"))
+
+    placed = decision_energy(20.0, layers, prog)["energy_J"]
+    logical = decision_energy(20.0, layers)["energy_J"]
+    assert placed >= logical * (1.0 - 1e-12)

@@ -1,15 +1,25 @@
 """Kernel-level benchmarks: sampling-mode FLOP scaling + interpret-mode
-wall time.
+wall time + the fused decision kernel's memory/footprint claim.
 
 The headline claim of the rank16 path: logit-sample cost is independent
 of R (16 basis MVMs + a rank-16 mixing matmul) versus the paper
 dataflow's R σε MVMs.  We verify by compiling both modes at several R
 and counting loop-aware HLO FLOPs — the crossover should sit at R≈17.
+
+The decision-kernel section compiles the fused sample→statistics round
+(kernels/decision_kernel.py) against the materializing
+``mix_samples → update_stats`` composition and reports wall time plus
+the largest live array of each compiled program — the fused path must
+not carry an R·B·N term.  All rows land in repo-root
+``BENCH_kernels.json`` (uploaded as a CI artifact) so the kernel perf
+trajectory is tracked PR over PR.
 """
 
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +30,7 @@ from repro.core.sampling import (BayesHeadConfig, logit_samples_paper,
 from repro.launch.hlo_analysis import analyze
 
 B, K, N = 8, 512, 2048
+BENCH_JSON = Path("BENCH_kernels.json")
 
 
 def _flops(fn, head, x) -> float:
@@ -98,7 +109,88 @@ def bench() -> list[tuple[str, float, str]]:
         fn().block_until_ready()
         out.append((f"kernel_walltime_{name}", (time.time() - t0) * 1e6,
                     "interpret_mode_cpu"))
+
+    out.extend(_decision_kernel_rows())
+    BENCH_JSON.write_text(json.dumps(
+        {"rows": [{"name": n, "us_per_call": us, "derived": d}
+                  for n, us, d in out]},
+        indent=2, sort_keys=True))
     return out
+
+
+def _decision_kernel_rows() -> list[tuple[str, float, str]]:
+    """Fused decision round vs the materializing composition: wall time
+    (interpret-mode CPU) and the largest live array of each compiled
+    program (the R·B·N claim, quantified)."""
+    from repro.launch.hlo_analysis import largest_intermediate_bytes
+    from repro.serving import adaptive
+    from repro.core.sampling import (activation_basis, mix_samples,
+                                     prepare_serving_head)
+
+    b, k, n, r = 8, 128, 512, 8
+    cfg0 = GRNGConfig()
+    hcfg = BayesHeadConfig(num_samples=r, grng=cfg0,
+                           compute_dtype=jnp.float32, hoist_basis=True)
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(4), 3)
+    mu = jax.random.normal(k1, (k, n)) * 0.05
+    sg = jax.nn.softplus(jax.random.normal(k2, (k, n)) - 3) * 0.1
+    head = prepare_serving_head(mu, sg, hcfg)
+    x = jax.random.normal(k3, (b, k))
+    ab = activation_basis(head, x, hcfg)
+    sel = jax.numpy.asarray(
+        adaptive.stream_selections(cfg0, jnp.zeros((b,), jnp.uint32),
+                                   jnp.zeros((b,), jnp.int32), r))
+    idx = adaptive.stream_indices(jnp.zeros((b,), jnp.uint32),
+                                  jnp.zeros((b,), jnp.int32), r)
+    stats0 = adaptive.init_stats(b, n)
+
+    from repro.kernels.ops import decision_update
+
+    def fused(stats, ab, sel, idx):
+        return decision_update(stats, ab, sel, cfg0, sample_idx=idx,
+                               interpret=True)
+
+    def materializing(stats, ab, sel, idx):
+        return adaptive.update_stats(
+            stats, mix_samples(ab, sel, hcfg, sample_idx=idx))
+
+    rows = []
+    for name, fn in (("fused", fused), ("materializing", materializing)):
+        jf = jax.jit(fn)
+        jf(stats0, ab, sel, idx)["sum_p"].block_until_ready()   # warm
+        t0 = time.time()
+        for _ in range(5):
+            res = jf(stats0, ab, sel, idx)
+        res["sum_p"].block_until_ready()
+        us = (time.time() - t0) * 1e6 / 5
+        txt = jf.lower(stats0, ab, sel, idx).compile().as_text()
+        rows.append((
+            f"kernel_decision_{name}", us,
+            f"B={b};N={n};R={r};interpret_mode_cpu;"
+            f"peak_live_bytes={largest_intermediate_bytes(txt):.0f}"))
+
+    # the memory claim, quantified: sweep R and watch the largest live
+    # array — the fused round is R-INDEPENDENT (bounded by the B·N·16
+    # basis), the materializing round grows linearly with its [R, B, N]
+    # sample tensor.
+    for name, fn in (("fused", fused), ("materializing", materializing)):
+        peaks = []
+        for r_k in (8, 32, 64):
+            sel_k = adaptive.stream_selections(
+                cfg0, jnp.zeros((b,), jnp.uint32),
+                jnp.zeros((b,), jnp.int32), r_k)
+            idx_k = adaptive.stream_indices(
+                jnp.zeros((b,), jnp.uint32), jnp.zeros((b,), jnp.int32),
+                r_k)
+            txt = jax.jit(fn).lower(stats0, ab, sel_k,
+                                    idx_k).compile().as_text()
+            peaks.append(largest_intermediate_bytes(txt))
+        rows.append((
+            f"kernel_decision_peak_vs_R_{name}", 0.0,
+            ";".join(f"R{r_k}={p:.0f}B"
+                     for r_k, p in zip((8, 32, 64), peaks))
+            + f";growth={peaks[-1] / max(peaks[0], 1):.2f}x"))
+    return rows
 
 
 if __name__ == "__main__":

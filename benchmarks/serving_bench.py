@@ -1,36 +1,53 @@
-"""Serving-engine benchmark: adaptive-R vs the paper's fixed R = 20.
+"""Serving-engine benchmark: adaptive-R vs the paper's fixed R = 20,
+fused decision kernel vs the materializing path.
 
 Workload: the synthetic SARD victim-triage stream (clean + a corrupted
-fraction), served through repro/serving's continuous-batching engine in
-two policies over the SAME trained Bayesian-head CNN and the SAME
-accept/flag thresholds:
+fraction), served through repro/serving's continuous-batching engine
+over the SAME trained Bayesian-head CNN and the SAME accept/flag
+thresholds, in three configurations:
 
-  * fixed    one 20-sample round per decision — the paper's dataflow,
-  * adaptive 4-sample rounds with sequential-test escalation, per-slot
-             escalation depth (serving/adaptive.py).
+  * adaptive       4-sample rounds with sequential-test escalation and
+                   the fused Pallas decision kernel — the default
+                   serving fast path,
+  * adaptive_jnp   same policy through the materializing
+                   ``mix_samples → update_stats`` rounds (the PR 3
+                   hot path; verdict-identical, kept as the
+                   perf/memory baseline),
+  * fixed_r20      one 20-sample round per decision — the paper's
+                   dataflow.
 
 Because the asymptotic decision rule is identical (the adaptive policy
 collapses onto the fixed rule at the R budget), flagged fractions match
 up to the sequential test's early stopping; the bench reports the
 delta alongside.
 
-decisions/s is reported two ways:
-  * wall  — engine wall-clock on this host (jit dispatch dominates at
-    smoke scale; reported for regression tracking),
+decisions/s is reported three ways:
+  * cold  — engine wall-clock including jit compilation (what every
+    run paid before the process-wide compile cache; kept so the
+    PR-over-PR trajectory in BENCH_serving.json stays comparable),
+  * warm  — steady-state wall-clock with compiled executables (the
+    serving quantity: engines now share jitted pool functions, so a
+    fleet pays compilation once per process),
   * model — the paper's §V-A latency model at the measured mean sample
-    count: trunk MVMs + (1 + R̄) serial σε re-reads.  This is the
-    deployment-side quantity (the paper's own 72.2 FPS figure is the
-    same math at R̄ = 20), and the one the adaptive-fidelity claim is
-    scored on.
+    count, the deployment-side quantity the adaptive-fidelity claim is
+    scored on (72.2 FPS at R̄ = 20 is the same math).
 
-Also reports mean samples/decision and the analytic GRNG energy per
-decision (640 aJ/sample, core/energy.py).
+Per configuration the bench also records the tentpole memory/sync
+metrics: ``peak_live_bytes_per_decision`` (largest live array in the
+compiled decision round, via launch/hlo_analysis — the fused path must
+not carry an R·B·N term) and ``host_syncs_per_decision`` (blocking
+device→host round trips; the device-resident escalation loop syncs
+once per retirement event, not once per round).
+
+Everything is written to repo-root ``BENCH_serving.json`` (uploaded as
+a CI artifact) so the perf trajectory is tracked PR over PR.
 
 Run: PYTHONPATH=src python -m benchmarks.run --only serving_bench
 """
 
 from __future__ import annotations
 
+import json
 import time
 from pathlib import Path
 
@@ -44,6 +61,7 @@ from repro.optim import AdamWConfig, adamw_update, init_opt_state
 from repro.serving import TriagePolicy
 
 ART = Path("artifacts/serving_bench")
+BENCH_JSON = Path("BENCH_serving.json")
 TRAIN_STEPS = 250
 DATA_CFG = SardConfig(image_size=32, seed=7)
 N_REQUESTS = 192
@@ -75,50 +93,130 @@ def trained_params(cfg: SarCnnConfig):
     return params
 
 
-def _run(params, cfg, adaptive: bool) -> dict:
+def _run(params, cfg, adaptive: bool, fused: bool,
+         n_requests: int = N_REQUESTS) -> dict:
     from repro.launch.serve import serve_sar
-    return serve_sar(n_requests=N_REQUESTS, n_slots=N_SLOTS,
+    return serve_sar(n_requests=n_requests, n_slots=N_SLOTS,
                      adaptive=adaptive, policy=POLICY,
                      corrupt_frac=CORRUPT_FRAC, corruption="fog",
-                     params=params, cfg=cfg)
+                     params=params, cfg=cfg, fused=fused)
+
+
+def _round_peak_live_bytes(cfg, adaptive: bool, fused: bool,
+                           n_classes: int) -> float:
+    """Largest live array in the compiled decision round (HLO walk)."""
+    from repro.core.sampling import BayesHeadConfig
+    from repro.launch.hlo_analysis import largest_intermediate_bytes
+    from repro.serving import adaptive as ad
+    from repro.serving.engine import _sar_round_fn
+    hcfg = BayesHeadConfig(num_samples=POLICY.r_max, mode="rank16",
+                           grng=cfg.grng, compute_dtype=jnp.float32,
+                           hoist_basis=True)
+    r_step = POLICY.r_min if adaptive else POLICY.r_max
+    fn = _sar_round_fn(hcfg, POLICY, adaptive, r_step, fused, None)
+    b, n = N_SLOTS, n_classes
+    pool = {"y_mu": jnp.zeros((b, n)), "x_sigma": jnp.zeros((b, n)),
+            "m": jnp.zeros((b, n, 16))}
+    txt = fn.lower(pool, ad.init_stats(b, n), jnp.zeros((b,), jnp.uint32),
+                   jnp.ones((b,), bool)).compile().as_text()
+    return largest_intermediate_bytes(txt)
 
 
 def bench() -> list[tuple[str, float, str]]:
     cfg = SarCnnConfig()
     params = trained_params(cfg)
     out = []
-    results = {}
-    for adaptive in (True, False):
-        name = "adaptive" if adaptive else "fixed_r20"
+    results: dict[str, dict] = {}
+    configs = (
+        ("adaptive", True, True),
+        ("adaptive_jnp", True, False),
+        ("fixed_r20", False, True),
+    )
+    for name, adaptive, fused in configs:
         t0 = time.time()
-        summary = _run(params, cfg, adaptive)
-        us = (time.time() - t0) * 1e6 / max(summary["decisions"], 1)
-        results[name] = summary
+        cold = _run(params, cfg, adaptive, fused)
+        cold_wall = time.time() - t0
+        warm = _run(params, cfg, adaptive, fused)     # compiled reuse
+        us = cold_wall * 1e6 / max(cold["decisions"], 1)
+        rec = dict(warm)
+        rec["cold_wall_s"] = cold_wall
+        rec["cold_decisions_per_s"] = cold["decisions_per_s"]
+        rec["warm_decisions_per_s"] = warm["decisions_per_s"]
+        rec["peak_live_bytes_per_decision"] = _round_peak_live_bytes(
+            cfg, adaptive, fused, cfg.n_classes)
+        results[name] = rec
+        # wall_dps is the STEADY-STATE number (compiled executables) —
+        # the serving quantity; cold_dps keeps the compile-inclusive
+        # figure previous PRs reported, for trajectory continuity.
         out.append((f"serving_sar_{name}", us,
-                    f"wall_dps={summary['decisions_per_s']:.1f};"
-                    f"model_dps={summary['model_decisions_per_s']:.0f};"
-                    f"samples={summary['mean_samples_per_decision']:.2f};"
-                    f"flagged={summary['flag_fraction']:.3f};"
-                    f"grng_aJ={summary['grng_energy_per_decision_aJ']:.2e};"
+                    f"wall_dps={rec['warm_decisions_per_s']:.1f};"
+                    f"cold_dps={rec['cold_decisions_per_s']:.1f};"
+                    f"model_dps={rec['model_decisions_per_s']:.0f};"
+                    f"samples={rec['mean_samples_per_decision']:.2f};"
+                    f"flagged={rec['flag_fraction']:.3f};"
+                    f"syncs_per_dec={rec['host_syncs_per_decision']:.3f};"
+                    f"peak_live_B={rec['peak_live_bytes_per_decision']:.0f};"
+                    f"grng_aJ={rec['grng_energy_per_decision_aJ']:.2e};"
                     # tilemap-true accounting (placed blocks, not
                     # logical tiles): deployed area/utilization and the
                     # batch's reconciled total energy
-                    f"etot_J={summary['energy_total_J']:.3e};"
-                    f"util={summary['tile_utilization']:.3f};"
-                    f"tops_w_mm2_eff={summary['tops_w_mm2_effective']:.1f}"))
+                    f"etot_J={rec['energy_total_J']:.3e};"
+                    f"util={rec['tile_utilization']:.3f};"
+                    f"tops_w_mm2_eff={rec['tops_w_mm2_effective']:.1f}"))
 
     a, f = results["adaptive"], results["fixed_r20"]
     model_speedup = (a["model_decisions_per_s"]
                      / f["model_decisions_per_s"])
-    wall_speedup = a["decisions_per_s"] / f["decisions_per_s"]
+    wall_speedup = (a["warm_decisions_per_s"]
+                    / f["warm_decisions_per_s"])
+    warm_speedup = (a["warm_decisions_per_s"]
+                    / max(a["cold_decisions_per_s"], 1e-9))
     energy_saving = a["energy_saving_vs_R20"]
     flag_delta = abs(a["flag_fraction"] - f["flag_fraction"])
     out.append(("serving_sar_speedup", 0.0,
                 f"model_speedup={model_speedup:.2f}x;"
                 f"wall_speedup={wall_speedup:.2f}x;"
+                f"warm_over_cold={warm_speedup:.2f}x;"
                 f"energy_saving={energy_saving:.2f}x;"
                 f"flag_delta={flag_delta:.3f};"
                 f"adaptive_samples={a['mean_samples_per_decision']:.2f}"))
+
+    report = {
+        "workload": {
+            "n_requests": N_REQUESTS, "n_slots": N_SLOTS,
+            "corrupt_frac": CORRUPT_FRAC,
+            "policy": {"conf_threshold": POLICY.conf_threshold,
+                       "mi_threshold": POLICY.mi_threshold,
+                       "r_min": POLICY.r_min, "r_max": POLICY.r_max},
+        },
+        "configs": {
+            name: {
+                "decisions_per_s_cold": rec["cold_decisions_per_s"],
+                "decisions_per_s_warm": rec["warm_decisions_per_s"],
+                "model_decisions_per_s": rec["model_decisions_per_s"],
+                "placed_decisions_per_s": rec.get(
+                    "placed_decisions_per_s"),
+                "mean_samples_per_decision":
+                    rec["mean_samples_per_decision"],
+                "host_syncs_per_decision":
+                    rec["host_syncs_per_decision"],
+                "peak_live_bytes_per_decision":
+                    rec["peak_live_bytes_per_decision"],
+                "flag_fraction": rec["flag_fraction"],
+                "energy_total_J": rec["energy_total_J"],
+                "grng_energy_per_decision_aJ":
+                    rec["grng_energy_per_decision_aJ"],
+            } for name, rec in results.items()
+        },
+        "speedups": {
+            "adaptive_vs_fixed_model": model_speedup,
+            "adaptive_vs_fixed_wall_warm": wall_speedup,
+            "warm_over_cold": warm_speedup,
+            "energy_saving_vs_R20": energy_saving,
+            "flag_delta": flag_delta,
+        },
+    }
+    BENCH_JSON.write_text(json.dumps(report, indent=2, sort_keys=True))
     return out
 
 

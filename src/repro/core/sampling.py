@@ -190,9 +190,16 @@ def activation_basis(head: dict, x: jnp.ndarray, cfg: BayesHeadConfig) -> dict:
     degraded chip instance (``cfg.grng.read_sigma > 0``) additionally
     ``x_sigsq = (x²)·(σ²)`` [B,N] — the read-noise projection variance
     ``mix_samples`` needs.  Heads hoisted with ``hoist_tile_n`` carry
-    ``sigma_basis_host`` (numpy column chunks): those are streamed to
-    the device one chunk at a time — call this path OUTSIDE jit, or the
-    chunks become baked-in constants and the memory saving is lost.
+    ``sigma_basis_host`` (numpy column chunks): each chunk is streamed
+    to the device, contracted, and offloaded straight back, so the
+    basis is returned as HOST chunks ``m_host`` (tuple of numpy
+    [B, ≤tile_n, 16]) and peak device memory stays K·tile_n·16 — the
+    full [B, N, 16] activation basis never exists on device either.
+    ``mix_samples``/``update_stats_streamed`` consume ``m_host`` chunk
+    by chunk.  This path only exists OUTSIDE jit; under tracing the
+    chunks become baked-in constants anyway, so the dense ``m`` concat
+    is kept there (chunk-hoisted heads still serve through the jitted
+    engines, without the memory saving).
     """
     assert cfg.grng.granularity == "layer", "rank16 requires shared selection"
     sigma = head["sigma"]
@@ -202,9 +209,24 @@ def activation_basis(head: dict, x: jnp.ndarray, cfg: BayesHeadConfig) -> dict:
         m = jnp.einsum("bk,knj->bnj", x,
                        head["sigma_basis"].astype(x.dtype))
     elif "sigma_basis_host" in head:                # tiled/offloaded hoist
-        m = jnp.concatenate(
-            [jnp.einsum("bk,knj->bnj", x, jnp.asarray(blk, x.dtype))
-             for blk in head["sigma_basis_host"]], axis=1)
+        import numpy as np
+        if isinstance(x, jax.core.Tracer):
+            # Inside jit (e.g. an engine's featurize) the chunks cannot
+            # be offloaded back to host — keep the dense on-device
+            # concat so chunk-hoisted heads still serve; the memory
+            # saving needs the outside-jit path below.
+            m = jnp.concatenate(
+                [jnp.einsum("bk,knj->bnj", x, jnp.asarray(blk, x.dtype))
+                 for blk in head["sigma_basis_host"]], axis=1)
+        else:
+            m = tuple(
+                np.asarray(jnp.einsum("bk,knj->bnj", x,
+                                      jnp.asarray(blk, x.dtype)))
+                for blk in head["sigma_basis_host"])  # -> host, per chunk
+            ab = {"y_mu": y_mu, "x_sigma": x_sigma, "m_host": m}
+            if cfg.grng.read_sigma:
+                ab["x_sigsq"] = (x * x) @ (sigma * sigma)
+            return ab
     else:
         kdim, n = sigma.shape
 
@@ -223,6 +245,58 @@ def activation_basis(head: dict, x: jnp.ndarray, cfg: BayesHeadConfig) -> dict:
     return ab
 
 
+def _noise_key(sel: jnp.ndarray, sample_idx) -> jnp.ndarray:
+    """[R, B|1] uint32 read-noise hash key: the absolute stream indices
+    when given, else the packed selection pattern (see mix_samples)."""
+    if sample_idx is None:
+        pow2 = (jnp.uint32(1) << jnp.arange(16, dtype=jnp.uint32))
+        key = (sel.astype(jnp.uint32) * pow2).sum(-1)       # [R] or [R,B]
+    else:
+        key = jnp.asarray(sample_idx, jnp.uint32)           # [R] or [R,B]
+    return key[:, None] if key.ndim == 1 else key
+
+
+def _mix_block(m, y_mu, x_sigma, x_sigsq, sel, cfg: BayesHeadConfig,
+               key, col0: int = 0):
+    """[R, B, cn] logit samples for one column block of the basis.
+
+    ``col0``: the block's global column origin — the read-noise hash is
+    keyed on GLOBAL (slot, column) coordinates, so chunked mixing
+    reproduces the dense draw exactly.
+    """
+    gstd, gmean = cfg.grng.sum_std, cfg.grng.sum_mean
+    if sel.ndim == 2:
+        mix = jnp.einsum("rj,bnj->rbn", sel.astype(m.dtype), m)
+    else:
+        mix = jnp.einsum("rbj,bnj->rbn", sel.astype(m.dtype), m)
+    out = mix - gmean * x_sigma[None]
+    if cfg.grng.read_sigma:
+        from repro.core.hashing import gaussianish, hash3
+        b, cn = x_sigma.shape
+        h = hash3(key[..., None],                           # [R,(B|1),1]
+                  jnp.arange(b, dtype=jnp.uint32)[None, :, None],
+                  col0 + jnp.arange(cn, dtype=jnp.uint32)[None, None, :],
+                  cfg.grng.noise_seed)                      # [R, B, cn]
+        sigma_read = cfg.grng.read_sigma * jnp.sqrt(
+            jnp.maximum(x_sigsq, 0.0)).astype(out.dtype)
+        out = out + gaussianish(h).astype(out.dtype) * sigma_read[None]
+    return y_mu[None] + out / gstd
+
+
+def basis_blocks(abasis: dict):
+    """Yield (m_block, col0, col1) over an activation basis — a single
+    full-width block for dense ``m``, the streamed host chunks for
+    ``m_host`` (each materialized on device only for its turn)."""
+    if "m_host" in abasis:
+        c0 = 0
+        for blk in abasis["m_host"]:
+            m = jnp.asarray(blk)
+            yield m, c0, c0 + m.shape[1]
+            c0 += m.shape[1]
+    else:
+        yield abasis["m"], 0, abasis["m"].shape[1]
+
+
 def mix_samples(abasis: dict, sel: jnp.ndarray, cfg: BayesHeadConfig,
                 sample_idx: jnp.ndarray | None = None):
     """Turn selection vectors into logit samples against a basis cache.
@@ -230,6 +304,13 @@ def mix_samples(abasis: dict, sel: jnp.ndarray, cfg: BayesHeadConfig,
     sel: [R, 16] (shared stream) or [R, B, 16] (per-slot streams — a
     serving pool whose slots sit at different stream offsets).
     Returns [R, B, N] samples, exact w.r.t. the paper dataflow.
+
+    A chunk-hoisted basis (``m_host``, see ``activation_basis``) is
+    mixed chunk by chunk with the mixing folded into the chunk loop —
+    peak device memory holds one [B, tile_n, 16] chunk plus the
+    [R, B, N] samples, never the full basis (call outside jit).  For
+    sample-free consumers, ``serving.adaptive.update_stats_streamed``
+    avoids the [R, B, N] term as well.
 
     On a degraded instance (``cfg.grng.read_sigma > 0``) each sample
     additionally carries the projected cycle-to-cycle read noise,
@@ -242,31 +323,15 @@ def mix_samples(abasis: dict, sel: jnp.ndarray, cfg: BayesHeadConfig,
     same 8-of-16 pattern then share their noise draw (~1.5% per
     20-sample decision) — prefer passing the indices.
     """
-    m, y_mu, x_sigma = abasis["m"], abasis["y_mu"], abasis["x_sigma"]
-    gstd, gmean = cfg.grng.sum_std, cfg.grng.sum_mean
-    if sel.ndim == 2:
-        mix = jnp.einsum("rj,bnj->rbn", sel.astype(m.dtype), m)
-    else:
-        mix = jnp.einsum("rbj,bnj->rbn", sel.astype(m.dtype), m)
-    out = mix - gmean * x_sigma[None]
-    if cfg.grng.read_sigma:
-        from repro.core.hashing import gaussianish, hash3
-        if sample_idx is None:
-            pow2 = (jnp.uint32(1) << jnp.arange(16, dtype=jnp.uint32))
-            key = (sel.astype(jnp.uint32) * pow2).sum(-1)   # [R] or [R,B]
-        else:
-            key = jnp.asarray(sample_idx, jnp.uint32)       # [R] or [R,B]
-        b, n = y_mu.shape
-        if key.ndim == 1:
-            key = key[:, None]                              # [R, 1]
-        h = hash3(key[..., None],                           # [R,(B|1),1]
-                  jnp.arange(b, dtype=jnp.uint32)[None, :, None],
-                  jnp.arange(n, dtype=jnp.uint32)[None, None, :],
-                  cfg.grng.noise_seed)                      # [R, B, N]
-        sigma_read = cfg.grng.read_sigma * jnp.sqrt(
-            jnp.maximum(abasis["x_sigsq"], 0.0)).astype(out.dtype)
-        out = out + gaussianish(h).astype(out.dtype) * sigma_read[None]
-    return y_mu[None] + out / gstd
+    key = (_noise_key(sel, sample_idx) if cfg.grng.read_sigma else None)
+    y_mu, x_sigma = abasis["y_mu"], abasis["x_sigma"]
+    x_sigsq = abasis.get("x_sigsq")
+    parts = [
+        _mix_block(m, y_mu[:, c0:c1], x_sigma[:, c0:c1],
+                   None if x_sigsq is None else x_sigsq[:, c0:c1],
+                   sel, cfg, key, col0=c0)
+        for m, c0, c1 in basis_blocks(abasis)]
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, -1)
 
 
 def logit_samples_rank16(head: dict, x: jnp.ndarray, cfg: BayesHeadConfig,

@@ -1,0 +1,52 @@
+"""Backend selection for the Pallas kernels: compile on TPU, interpret
+elsewhere.
+
+Every kernel wrapper in this package takes ``interpret: bool | None``.
+``None`` (the default everywhere) resolves through ``interpret_default``:
+Pallas kernels COMPILE when the active JAX backend is a real TPU and
+fall back to interpret mode otherwise (CPU CI, local dev), so TPU runs
+stop paying the interpreter cost without any call-site changes.
+
+Override per-process with the environment variable
+``REPRO_PALLAS_INTERPRET``:
+
+  * ``1`` / ``true``  — force interpret mode everywhere (debugging a
+    kernel on TPU, or double-checking a miscompile),
+  * ``0`` / ``false`` — force compiled mode (e.g. Pallas-on-Mosaic-CPU
+    experiments),
+  * unset / ``auto``  — backend auto-detection (the default).
+
+This module is import-cycle-free on purpose: the kernel modules
+(bayes_mvm, cim_mvm, clt_grng_kernel, decision_kernel) import it, and
+``kernels/ops.py`` re-exports ``interpret_default`` as the public
+helper.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+_ENV = "REPRO_PALLAS_INTERPRET"
+_TRUE = ("1", "true", "yes", "on")
+_FALSE = ("0", "false", "no", "off")
+
+
+def interpret_default() -> bool:
+    """Resolve the interpret-mode default for a Pallas kernel call.
+
+    Env override first (``REPRO_PALLAS_INTERPRET``), then backend
+    auto-detection: interpret unless running on real TPU hardware.
+    """
+    raw = os.environ.get(_ENV, "auto").strip().lower()
+    if raw in _TRUE:
+        return True
+    if raw in _FALSE:
+        return False
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``interpret`` if explicitly given, else ``interpret_default()``."""
+    return interpret_default() if interpret is None else bool(interpret)

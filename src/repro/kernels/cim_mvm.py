@@ -21,6 +21,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.quant import QuantConfig
+from repro.kernels.backend import resolve_interpret
 
 
 def _cim_kernel(x_ref, w_ref, fs_ref, gain_ref, off_ref, o_ref, acc_ref, *,
@@ -71,7 +72,7 @@ def _cim_kernel(x_ref, w_ref, fs_ref, gain_ref, off_ref, o_ref, acc_ref, *,
 def cim_mvm_pallas(x, w, fs, qcfg: QuantConfig,
                    col_gain=None, col_offset=None,
                    bb: int = 128, bk: int = 128, bn: int = 128,
-                   interpret: bool = True):
+                   interpret: bool | None = None):
     """Chunked-ADC MVM. x:[B,K], w:[K,N], fs:[1,1] -> [B,N] float32.
 
     K must be a multiple of qcfg.chunk (the physical tile depth); B and N
@@ -83,6 +84,7 @@ def cim_mvm_pallas(x, w, fs, qcfg: QuantConfig,
     (offset in LSB units) — the nonideal chip-instance path.  Omitted =
     ideal ADC (bit-identical to the previous behaviour).
     """
+    interpret = resolve_interpret(interpret)
     b, kdim = x.shape
     n = w.shape[1]
     assert kdim % qcfg.chunk == 0, "K must be chunk-aligned (tile depth)"

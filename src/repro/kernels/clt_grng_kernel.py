@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.clt_grng import GRNGConfig
+from repro.kernels.backend import resolve_interpret
 
 _C1 = 0x9E3779B9
 _C2 = 0x85EBCA6B
@@ -98,12 +99,14 @@ def _grng_kernel(sel_ref, out_ref, *, cfg: GRNGConfig, bk: int, bn: int,
 def grng_eps_pallas(sel: jnp.ndarray, cfg: GRNGConfig, n_rows: int,
                     n_cols: int, row0: int = 0, col0: int = 0,
                     sample0: int = 0, bk: int = 256, bn: int = 256,
-                    interpret: bool = True) -> jnp.ndarray:
+                    interpret: bool | None = None) -> jnp.ndarray:
     """ε block via Pallas. sel: [R, 16] float32 -> [R, n_rows, n_cols].
 
     ``sample0``: absolute index of sel[0] in the selection stream — only
     read (for the noise hash) when ``cfg.read_sigma > 0``.
+    ``interpret=None`` auto-detects the backend (kernels/backend.py).
     """
+    interpret = resolve_interpret(interpret)
     r = sel.shape[0]
     pad_k = (-n_rows) % bk
     pad_n = (-n_cols) % bn

@@ -2,25 +2,24 @@
 
 These wrappers own host-side concerns: selection-table generation,
 ADC full-scale calibration, dtype plumbing, and the interpret-mode
-default (interpret=True unless running on real TPU).  They are the
-drop-in counterparts of the pure-jnp paths in core/sampling.py and
-core/cim.py, asserted allclose in tests/test_kernels.py.
+default (``interpret_default``: compile on TPU, interpret elsewhere,
+env-overridable — kernels/backend.py).  They are the drop-in
+counterparts of the pure-jnp paths in core/sampling.py and core/cim.py,
+asserted allclose in tests/test_kernels.py.
 """
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import clt_grng as g
 from repro.core.quant import QuantConfig, adc_full_scale
+# Public backend helper (implemented cycle-free in kernels/backend.py).
+from repro.kernels.backend import interpret_default  # noqa: F401
 from repro.kernels.bayes_mvm import bayes_mvm_pallas
 from repro.kernels.cim_mvm import cim_mvm_pallas
 from repro.kernels.clt_grng_kernel import grng_eps_pallas
-
-
-def _interpret_default() -> bool:
-    return jax.default_backend() != "tpu"
+from repro.kernels.decision_kernel import decision_stats_pallas
 
 
 def grng_eps(cfg: g.GRNGConfig, n_rows: int, n_cols: int, num_samples: int,
@@ -32,8 +31,7 @@ def grng_eps(cfg: g.GRNGConfig, n_rows: int, n_cols: int, num_samples: int,
     bn = min(256, max(128, n_cols))
     return grng_eps_pallas(
         sel, cfg, n_rows, n_cols, row0=row0, col0=col0, sample0=sample0,
-        bk=bk, bn=bn,
-        interpret=_interpret_default() if interpret is None else interpret)
+        bk=bk, bn=bn, interpret=interpret)
 
 
 def bayes_head_mvm(x: jnp.ndarray, mu_prime: jnp.ndarray, sigma: jnp.ndarray,
@@ -67,8 +65,45 @@ def bayes_head_mvm(x: jnp.ndarray, mu_prime: jnp.ndarray, sigma: jnp.ndarray,
         fs = jnp.zeros((1, 2), jnp.float32)
     return bayes_mvm_pallas(
         x, mu_prime, sigma, sel, fs, cfg, qcfg=qcfg, mode=mode,
-        row0=row0, col0=col0, sample0=sample0,
-        interpret=_interpret_default() if interpret is None else interpret)
+        row0=row0, col0=col0, sample0=sample0, interpret=interpret)
+
+
+def decision_update(stats: dict, abasis: dict, sel: jnp.ndarray,
+                    cfg: g.GRNGConfig, sample_idx=None, mask=None,
+                    interpret: bool | None = None) -> dict:
+    """Fused drop-in for ``update_stats(stats, mix_samples(...), mask)``.
+
+    Folds one escalation round into the running sufficient statistics
+    via the fused decision kernel (decision_kernel.py): mixing, the
+    degraded-instance read-noise projection, online softmax over N,
+    entropy, and the active-slot masking all run in VMEM — the [R,B,N]
+    logit-sample tensor never exists.
+
+    stats: ``adaptive.init_stats`` pytree; abasis:
+    ``core.sampling.activation_basis`` output; sel: [R, B, 16] or
+    [R, 16]; sample_idx: absolute stream indices ([R, B] or [R],
+    ``adaptive.stream_indices``) — the read-noise key on degraded
+    instances; mask: [B] bool, False rows keep their old sums.
+
+    Verdict-equivalent to the jnp path (tests/test_decision_kernel.py);
+    numerics agree to fp32 tolerance (online vs one-shot logsumexp
+    reduction order).
+    """
+    delta = decision_stats_pallas(
+        abasis["y_mu"], abasis["x_sigma"], abasis["m"], sel, cfg,
+        x_sigsq=abasis.get("x_sigsq"), sample_idx=sample_idx, mask=mask,
+        interpret=interpret)
+    r = sel.shape[0]
+    n_delta = jnp.full_like(stats["n"], r)
+    if mask is not None:
+        n_delta = jnp.where(jnp.asarray(mask), n_delta, 0)
+    return {
+        "n": stats["n"] + n_delta,
+        "sum_p": stats["sum_p"] + delta["sum_p"],
+        "sum_psq": stats["sum_psq"] + delta["sum_psq"],
+        "sum_ent": stats["sum_ent"] + delta["sum_ent"],
+        "sum_entsq": stats["sum_entsq"] + delta["sum_entsq"],
+    }
 
 
 def _measured_full_scale(x, w, qcfg: QuantConfig):
@@ -87,9 +122,7 @@ def cim_matmul(x: jnp.ndarray, w: jnp.ndarray, qcfg: QuantConfig,
                interpret: bool | None = None) -> jnp.ndarray:
     """Deterministic chunked-ADC CIM matmul (µ-only subarray)."""
     fs = _measured_full_scale(x, w, qcfg).reshape(1, 1)
-    return cim_mvm_pallas(
-        x, w, fs, qcfg,
-        interpret=_interpret_default() if interpret is None else interpret)
+    return cim_mvm_pallas(x, w, fs, qcfg, interpret=interpret)
 
 
 def cim_matmul_nonideal(x: jnp.ndarray, w: jnp.ndarray, qcfg: QuantConfig,
@@ -104,6 +137,5 @@ def cim_matmul_nonideal(x: jnp.ndarray, w: jnp.ndarray, qcfg: QuantConfig,
     call.  Oracle: kernels/ref.cim_mvm_nonideal_ref.
     """
     fs = _measured_full_scale(x, w, qcfg).reshape(1, 1)
-    return cim_mvm_pallas(
-        x, w, fs, qcfg, col_gain=col_gain, col_offset=col_offset,
-        interpret=_interpret_default() if interpret is None else interpret)
+    return cim_mvm_pallas(x, w, fs, qcfg, col_gain=col_gain,
+                          col_offset=col_offset, interpret=interpret)

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import clt_grng as g
@@ -155,3 +156,51 @@ def cim_mvm_nonideal_ref(x: jnp.ndarray, w: jnp.ndarray, qcfg: q.QuantConfig,
 def selections_ref(lfsr_seed: int, num_samples: int, sample0: int = 0):
     states = lfsr_states(lfsr_seed, sample0 + num_samples)
     return swapper_select(states[sample0:])
+
+
+def decision_stats_ref(y_mu: jnp.ndarray, x_sigma: jnp.ndarray,
+                       m: jnp.ndarray, sel: jnp.ndarray, cfg: g.GRNGConfig,
+                       x_sigsq=None, sample_idx=None, mask=None) -> dict:
+    """Fused decision-kernel oracle: one round's masked stat deltas.
+
+    The no-blocking ground truth for ``decision_kernel.py`` — it DOES
+    materialize the [R, B, N] samples (that is the point: the kernel
+    must match the materializing path, then never pay for it).  Sample
+    semantics are ``core.sampling.mix_samples`` verbatim (same hash
+    stream for degraded-instance read noise, keyed by the absolute
+    ``sample_idx``); the statistics are
+    ``serving.adaptive.update_stats`` on zeroed running sums:
+
+        logp = log_softmax(samples); p = exp(logp)
+        sum_p = Σ_r p, sum_psq = Σ_r p², ent = -Σ_n p·logp,
+        sum_ent = Σ_r ent, sum_entsq = Σ_r ent²
+
+    all multiplied by the [B] active-slot ``mask`` (None = all active).
+    """
+    b, n = y_mu.shape
+    if sel.ndim == 2:
+        sel = jnp.broadcast_to(sel[:, None, :], (sel.shape[0], b, 16))
+    mix = jnp.einsum("rbj,bnj->rbn", sel.astype(jnp.float32),
+                     m.astype(jnp.float32))
+    out = mix - cfg.sum_mean * x_sigma.astype(jnp.float32)[None]
+    if cfg.read_sigma:
+        key = jnp.asarray(sample_idx, jnp.uint32)
+        if key.ndim == 1:
+            key = key[:, None]
+        h = hash3(key[..., None],
+                  jnp.arange(b, dtype=jnp.uint32)[None, :, None],
+                  jnp.arange(n, dtype=jnp.uint32)[None, None, :],
+                  cfg.noise_seed)
+        sigma_read = cfg.read_sigma * jnp.sqrt(
+            jnp.maximum(x_sigsq.astype(jnp.float32), 0.0))
+        out = out + gaussianish(h) * sigma_read[None]
+    samples = y_mu.astype(jnp.float32)[None] + out / cfg.sum_std
+    logp = jax.nn.log_softmax(samples, axis=-1)
+    p = jnp.exp(logp)
+    ent = -(p * logp).sum(-1)                            # [R, B]
+    mk = (jnp.ones((b,), jnp.float32) if mask is None
+          else jnp.asarray(mask).astype(jnp.float32))
+    return {"sum_p": p.sum(0) * mk[:, None],
+            "sum_psq": (p * p).sum(0) * mk[:, None],
+            "sum_ent": ent.sum(0) * mk,
+            "sum_entsq": (ent * ent).sum(0) * mk}

@@ -416,3 +416,50 @@ def analyze(hlo_text: str, total_devices: int) -> dict:
         "wire_bytes_f32_per_device": sum(
             r.get("wire_bytes_f32", 0.0) for r in c.coll.values()),
     }
+
+
+# ----------------------------------------------------------------------
+# live-footprint queries (serving fast-path acceptance checks)
+# ----------------------------------------------------------------------
+_FOOTPRINT_FREE = _ZERO_COST | {"parameter", "constant"}
+
+
+def materialized_shapes(hlo_text: str) -> list:
+    """Result shapes of every value-producing instruction, everywhere.
+
+    Walks ALL computations (fusion bodies and loop bodies included —
+    a buffer a fusion writes is still a live array while the fusion
+    runs) and returns ``[(dtype, (dims...)), ...]`` for each non-free
+    instruction.  Inputs (parameters/constants) and shape-only plumbing
+    (tuples, GTEs, bitcasts, iota) are excluded: the question this
+    answers is what the COMPILED program ever holds live beyond its
+    operands.
+
+    The serving acceptance check: the fused decision round's HLO must
+    contain no shape with an R·B·N term — the logit-sample tensor
+    (and any padded block of comparable size) never exists.
+    """
+    an = HloAnalyzer(hlo_text, 1)
+    out = []
+    for comp, lines in an.comps.items():
+        for line in lines:
+            op = an._op_name(line)
+            if not op or op in _FOOTPRINT_FREE:
+                continue
+            for dt, dims in an._result_shapes(line):
+                out.append((dt, tuple(dims)))
+    return out
+
+
+def largest_intermediate_bytes(hlo_text: str) -> float:
+    """Largest single materialized result in bytes — the dominant term
+    of a program's live-array footprint beyond its inputs/outputs.
+    serving_bench reports this for the compiled decision round as
+    ``peak_live_bytes_per_decision``."""
+    best = 0.0
+    for dt, dims in materialized_shapes(hlo_text):
+        n = 1
+        for d in dims:
+            n *= d
+        best = max(best, n * _DTYPE_BYTES[dt])
+    return best

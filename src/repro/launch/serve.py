@@ -66,8 +66,13 @@ def sar_layer_shapes(cfg) -> list:
 def serve(arch: str, *, smoke: bool = True, batch: int = 4,
           prompt_len: int = 16, gen_len: int = 8, n_requests: int | None = None,
           adaptive: bool = True, policy: TriagePolicy | None = None,
-          seed: int = 0, cache_margin: int = 4) -> dict:
-    """LM serving through the engine. ``batch`` is the slot count."""
+          seed: int = 0, cache_margin: int = 4, fused: bool = True) -> dict:
+    """LM serving through the engine. ``batch`` is the slot count.
+
+    ``fused``: run escalation rounds through the fused Pallas decision
+    kernel (kernels/decision_kernel.py — no [R, B, V] materialization);
+    False selects the materializing ``mix_samples → update_stats``
+    path (verdict-identical)."""
     cfg = get_config(arch, smoke=smoke)
     n_requests = n_requests or 2 * batch
     policy = policy or TriagePolicy()
@@ -94,7 +99,8 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
     engine = LMServingEngine(
         jax_params_init(cfg, seed), cfg, n_slots=batch,
         prompt_len=prompt_len, cache_len=cache_len, policy=policy,
-        adaptive_mode=adaptive, metrics=metrics, extras=extras)
+        adaptive_mode=adaptive, metrics=metrics, extras=extras,
+        fused=fused)
 
     rid = 0
     t0 = time.time()
@@ -108,6 +114,7 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
     out = engine.run()
     out["wall_s"] = time.time() - t0
     out["tokens_per_s"] = out["decisions"] / out["wall_s"]
+    out["host_syncs"] = engine.host_syncs
     out["flagged_fraction"] = out.get("flag_fraction", float("nan"))
     out["verdicts"] = [
         {"rid": r.rid, "verdict": r.verdict, "confidence": r.confidence,
@@ -157,7 +164,7 @@ def serve_sar(*, n_requests: int = 128, n_slots: int = 32,
               corrupt_frac: float = 0.0, corruption: str = "fog",
               params=None, cfg=None, seed: int = 0,
               chip_instance=None, calibrated: bool = True,
-              slot_axis: str | None = None) -> dict:
+              slot_axis: str | None = None, fused: bool = True) -> dict:
     """SAR image-stream serving. Untrained params unless provided.
 
     ``chip_instance``: a hw.ChipInstance (or an int seed — one chip is
@@ -205,7 +212,7 @@ def serve_sar(*, n_requests: int = 128, n_slots: int = 32,
     engine = SarServingEngine(params, cfg, n_slots=n_slots, policy=policy,
                               adaptive_mode=adaptive, metrics=metrics,
                               head=head, hcfg=hcfg, chip=chip_instance,
-                              slot_axis=slot_axis)
+                              slot_axis=slot_axis, fused=fused)
     for r in make_sar_stream(n_requests, corrupt_frac=corrupt_frac,
                              corruption=corruption,
                              image_size=cfg.image_size):
@@ -213,6 +220,9 @@ def serve_sar(*, n_requests: int = 128, n_slots: int = 32,
     t0 = time.time()
     out = engine.run()
     out["wall_s"] = time.time() - t0
+    out["host_syncs"] = engine.host_syncs
+    out["host_syncs_per_decision"] = (engine.host_syncs
+                                      / max(out["decisions"], 1))
     out["flagged_fraction"] = out.get("flag_fraction", float("nan"))
     return out
 
@@ -229,6 +239,11 @@ def main() -> None:
     ap.add_argument("--gen", type=int, default=8)
     ap.add_argument("--fixed", action="store_true",
                     help="fixed R=r_max per decision (paper baseline)")
+    ap.add_argument("--no-fused", dest="fused", action="store_false",
+                    default=True,
+                    help="disable the fused Pallas decision kernel and "
+                         "use the materializing mix_samples → "
+                         "update_stats path (verdict-identical)")
     ap.add_argument("--conf-threshold", type=float, default=0.8)
     ap.add_argument("--mi-threshold", type=float, default=0.5)
     ap.add_argument("--r-min", type=int, default=4)
@@ -263,7 +278,8 @@ def main() -> None:
                         corrupt_frac=args.corrupt_frac,
                         corruption=args.corruption,
                         chip_instance=chip,
-                        calibrated=not args.uncalibrated)
+                        calibrated=not args.uncalibrated,
+                        fused=args.fused)
         chip_note = ""
         if chip is not None:
             chip_note = (f" [chip seed={args.chip_instance} "
@@ -281,7 +297,7 @@ def main() -> None:
         out = serve(args.arch, smoke=args.smoke, batch=args.slots or 4,
                     prompt_len=args.prompt_len, gen_len=args.gen,
                     n_requests=args.requests, adaptive=not args.fixed,
-                    policy=policy)
+                    policy=policy, fused=args.fused)
         print(f"[serve] {out['requests']} requests / {out['decisions']} "
               f"tokens in {out['wall_s']:.2f}s "
               f"({out['tokens_per_s']:.1f} tok/s); mean samples/token "

@@ -14,7 +14,8 @@ escalation an exact extension of the fixed-R draw.
 
 from repro.serving.adaptive import (escalation_schedule, finalize,
                                     init_stats, stream_indices,
-                                    stream_selections, update_stats)
+                                    stream_selections, update_stats,
+                                    update_stats_streamed)
 from repro.serving.engine import (LMServingEngine, Request,
                                   SarServingEngine)
 from repro.serving.metrics import (RequestRecord, ServingMetrics,
@@ -29,4 +30,5 @@ __all__ = [
     "decide", "decision_energy", "energy_terms", "escalation_schedule",
     "finalize", "fixed_r_decide", "init_stats", "request_energy",
     "stream_indices", "stream_selections", "update_stats",
+    "update_stats_streamed",
 ]

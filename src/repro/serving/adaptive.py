@@ -101,6 +101,69 @@ def update_stats(stats: dict, logit_samples: jnp.ndarray,
         upd, stats)
 
 
+def update_stats_streamed(stats: dict, abasis: dict, sel: jnp.ndarray,
+                          hcfg, sample_idx=None, mask=None) -> dict:
+    """Fold one round into the running sums WITHOUT materializing
+    [R, B, N] — the pure-jnp twin of the fused decision kernel, built
+    for chunk-hoisted bases (``activation_basis`` ``m_host``).
+
+    Streams the basis column blocks twice, flash-attention style:
+    pass 1 accumulates the online (max, sumexp) per (sample, slot);
+    pass 2 normalizes each block against the finished logsumexp and
+    accumulates the probability/entropy sums.  Peak device memory per
+    step is one [R, B, tile_n] block — at vocab scale neither the 16×
+    basis nor the logit-sample tensor ever exists on device.  Matches
+    ``update_stats(stats, mix_samples(abasis, sel, ...), mask)`` to
+    fp32 tolerance (reduction order differs); call outside jit for
+    host-chunked bases.  ``hcfg``: the head's BayesHeadConfig.
+    """
+    from repro.core.sampling import _mix_block, _noise_key, basis_blocks
+    grng = hcfg.grng
+    key = _noise_key(sel, sample_idx) if grng.read_sigma else None
+    y_mu, x_sigma = abasis["y_mu"], abasis["x_sigma"]
+    x_sigsq = abasis.get("x_sigsq")
+    r, b = sel.shape[0], y_mu.shape[0]
+
+    def logits_block(m, c0, c1):
+        return _mix_block(
+            m, y_mu[:, c0:c1], x_sigma[:, c0:c1],
+            None if x_sigsq is None else x_sigsq[:, c0:c1],
+            sel, hcfg, key, col0=c0).astype(jnp.float32)
+
+    mrun = jnp.full((r, b), -1.0e30, jnp.float32)
+    lrun = jnp.zeros((r, b), jnp.float32)
+    for m, c0, c1 in basis_blocks(abasis):
+        logits = logits_block(m, c0, c1)
+        mnew = jnp.maximum(mrun, logits.max(-1))
+        lrun = (lrun * jnp.exp(mrun - mnew)
+                + jnp.exp(logits - mnew[..., None]).sum(-1))
+        mrun = mnew
+    lse = mrun + jnp.log(lrun)                            # [R, B]
+
+    p_parts, psq_parts = [], []
+    ent = jnp.zeros((r, b), jnp.float32)
+    for m, c0, c1 in basis_blocks(abasis):
+        logp = logits_block(m, c0, c1) - lse[..., None]
+        p = jnp.exp(logp)
+        p_parts.append(p.sum(0))
+        psq_parts.append((p * p).sum(0))
+        ent = ent + -(p * logp).sum(-1)
+    upd = {
+        "n": stats["n"] + r,
+        "sum_p": stats["sum_p"] + jnp.concatenate(p_parts, axis=-1),
+        "sum_psq": stats["sum_psq"] + jnp.concatenate(psq_parts, axis=-1),
+        "sum_ent": stats["sum_ent"] + ent.sum(0),
+        "sum_entsq": stats["sum_entsq"] + (ent * ent).sum(0),
+    }
+    if mask is None:
+        return upd
+    keep = jnp.asarray(mask)
+    return jax.tree.map(
+        lambda new, old: jnp.where(
+            keep.reshape((-1,) + (1,) * (new.ndim - 1)), new, old),
+        upd, stats)
+
+
 def finalize(stats: dict) -> dict:
     """Predictive quantities + MC standard errors from running sums.
 

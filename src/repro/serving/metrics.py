@@ -27,6 +27,7 @@ the same placed counts evaluated at the batch's total sample spend.
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import numpy as np
 
@@ -69,6 +70,53 @@ def decision_latency(n_samples: float, layers) -> float:
     t = 0.0
     for l in layers:
         t += ((1 + n_samples) if l.bayesian else 1) * energy.MVM_LATENCY
+    return t
+
+
+def placed_decision_latency(n_samples: float, layers, tile_program,
+                            replicated: bool = False) -> float:
+    """Tilemap-aware per-decision latency: the paper's per-layer serial
+    model evaluated on the COMPILED placement (ROADMAP reconciliation).
+
+    The two models disagreed in both directions: the §V-A math assumes
+    every layer's tiles fire concurrently in one configuration, while
+    the tile compiler's pass count ignores inter-layer data dependence
+    (a pass mixes blocks of several layers that cannot actually run
+    together).  The reconciled model keeps the dependence-respecting
+    serial walk over layers but charges each layer the number of
+    DISTINCT PASSES its primary blocks were placed into — a
+    time-multiplexed layer must reconfigure the grid that many times
+    per MVM, so
+
+        t = Σ_layers  span(layer) · (1 + R if bayesian else 1) · t_MVM
+            ≥  decision_latency(...)                    (span ≥ 1)
+
+    which is the property tests/test_tilemap_properties.py pins.
+
+    ``replicated=True`` additionally credits Bayesian replication
+    (compile_network packs replica blocks into free tiles): R samples
+    stream through ``rep`` concurrent block sets, so the σε term drops
+    to ceil(R / rep).  That OPTIMISTIC bound can undercut the logical
+    model — report it, never assert it.
+    """
+    shapes = dict(tile_program.layers)
+    if [tuple(dataclasses.astuple(s)) for s in shapes.values()] != \
+            [tuple(dataclasses.astuple(s)) for s in layers]:
+        raise ValueError(
+            "tile_program was compiled for a different layer stack")
+    t = 0.0
+    for name, shape in tile_program.layers:
+        span = len({p.pass_idx
+                    for p in tile_program.layer_placements(name)})
+        if shape.bayesian:
+            r_eff = n_samples
+            if replicated:
+                rep = tile_program.replication_factor(name)
+                if rep > 1:
+                    r_eff = math.ceil(n_samples / rep)
+            t += span * (1 + r_eff) * energy.MVM_LATENCY
+        else:
+            t += span * energy.MVM_LATENCY
     return t
 
 
@@ -184,6 +232,10 @@ class ServingMetrics:
                            energy_total_J=nan,
                            energy_saving_vs_R20=nan, model_latency_s=nan,
                            model_decisions_per_s=nan)
+                if self.tile_program is not None:
+                    out.update(placed_latency_s=nan,
+                               placed_decisions_per_s=nan,
+                               placed_latency_replicated_s=nan)
             out.update(self._tile_summary())
             out.update(self.extra)
             return out
@@ -222,11 +274,22 @@ class ServingMetrics:
                 for r in self.records)
             out["energy_saving_vs_R20"] = (
                 e20["energy_J"] / max(e["energy_J"], 1e-30))
-            # Latency stays the paper's per-layer serial model (§V-A FPS
-            # math): tilemap passes ignore inter-layer data dependence.
+            # Per-layer serial latency (§V-A FPS math), plus — when a
+            # placement is known — the tilemap-reconciled model: pass
+            # spans serialize (placed ≥ logical, property-tested) and
+            # the replication-credited optimistic bound.
             lat = decision_latency(n_bar, self.layers)
             out["model_latency_s"] = lat
             out["model_decisions_per_s"] = 1.0 / lat
+            if self.tile_program is not None:
+                placed = placed_decision_latency(n_bar, self.layers,
+                                                 self.tile_program)
+                out["placed_latency_s"] = placed
+                out["placed_decisions_per_s"] = 1.0 / placed
+                out["placed_latency_replicated_s"] = \
+                    placed_decision_latency(n_bar, self.layers,
+                                            self.tile_program,
+                                            replicated=True)
         out.update(self._tile_summary())
         out.update(self.extra)
         return out

@@ -1,0 +1,351 @@
+"""Fused sample→statistics decision kernel: oracle conformance, engine
+verdict-equivalence, and the live-footprint acceptance check.
+
+Three load-bearing claims:
+
+  1. the fused kernel (kernels/decision_kernel.py) computes EXACTLY the
+     ``update_stats(mix_samples(...))`` composition — on ideal chips to
+     fp32 tolerance, on degraded chip instances draw-for-draw on the
+     same hash-keyed read-noise stream, with masked (inactive) slots
+     untouched and escalation rounds extending the selection stream
+     additively across ``sample0`` offsets;
+  2. a serving engine on the fused path produces verdicts identical to
+     the materializing path, request for request, over a fixed SARD
+     stream at bench scale (192 requests) — ideal and chip-instance;
+  3. the compiled fused decision round holds NO array with an R·B·N
+     term (asserted on the post-optimization HLO via launch/
+     hlo_analysis.materialized_shapes), while the materializing path
+     demonstrably does — the memory claim of the kernel.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import clt_grng as g
+from repro.core.sampling import (BayesHeadConfig, activation_basis,
+                                 mix_samples, prepare_serving_head)
+from repro.kernels import ops, ref
+from repro.serving import TriagePolicy, adaptive
+
+CFG = g.GRNGConfig()
+
+
+def _basis(b, k, n, read_sigma=0.0, tile_n=0, seed=0):
+    grng = dataclasses.replace(CFG, read_sigma=read_sigma)
+    hcfg = BayesHeadConfig(num_samples=20, mode="rank16", grng=grng,
+                           compute_dtype=jnp.float32, hoist_basis=True,
+                           hoist_tile_n=tile_n)
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    mu = jax.random.normal(k1, (k, n)) * 0.05
+    sg = jax.nn.softplus(jax.random.normal(k2, (k, n)) - 3) * 0.2
+    head = prepare_serving_head(mu, sg, hcfg)
+    x = jax.random.normal(k3, (b, k))
+    return activation_basis(head, x, hcfg), hcfg
+
+
+def _round_inputs(hcfg, b, r, n_drawn=0):
+    base = jnp.asarray(np.arange(b, dtype=np.uint32) * 100)
+    drawn = jnp.full((b,), n_drawn, jnp.int32)
+    sel = adaptive.stream_selections(hcfg.grng, base, drawn, r)
+    idx = adaptive.stream_indices(base, drawn, r)
+    return sel, idx
+
+
+# ----------------------------------------------------------------------
+# 1. kernel ↔ oracle ↔ update_stats(mix_samples) conformance
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(5, 32, 8), (3, 16, 300), (9, 24, 130),
+                                   (1, 8, 1)])
+@pytest.mark.parametrize("read_sigma", [0.0, 0.4])
+@pytest.mark.parametrize("r", [1, 6])
+def test_decision_kernel_matches_composition(shape, read_sigma, r):
+    """Fused deltas == update_stats(init, mix_samples(...)) == oracle,
+    including tiled-N shapes (N > the 128 kernel block) and the
+    degraded-instance read-noise projection (same hash stream)."""
+    b, k, n = shape
+    ab, hcfg = _basis(b, k, n, read_sigma)
+    sel, idx = _round_inputs(hcfg, b, r)
+    mask = jnp.asarray(np.arange(b) % 2 == 0)
+
+    samples = mix_samples(ab, sel, hcfg, sample_idx=idx)
+    want = adaptive.update_stats(adaptive.init_stats(b, n), samples,
+                                 mask=mask)
+    got = ops.decision_update(adaptive.init_stats(b, n), ab, sel,
+                              hcfg.grng, sample_idx=idx, mask=mask,
+                              interpret=True)
+    orc = ref.decision_stats_ref(ab["y_mu"], ab["x_sigma"], ab["m"], sel,
+                                 hcfg.grng, x_sigsq=ab.get("x_sigsq"),
+                                 sample_idx=idx, mask=mask)
+    for key in ("sum_p", "sum_psq", "sum_ent", "sum_entsq", "n"):
+        np.testing.assert_allclose(np.asarray(got[key]),
+                                   np.asarray(want[key]),
+                                   rtol=1e-5, atol=1e-5, err_msg=key)
+        if key != "n":
+            np.testing.assert_allclose(np.asarray(orc[key]),
+                                       np.asarray(want[key]),
+                                       rtol=1e-5, atol=1e-5,
+                                       err_msg=f"oracle:{key}")
+    # masked rows advanced nothing
+    inactive = ~np.asarray(mask)
+    assert (np.asarray(got["n"])[inactive] == 0).all()
+    assert (np.asarray(got["sum_p"])[inactive] == 0).all()
+
+
+def test_decision_kernel_shared_selection_stream():
+    """[R, 16] shared-stream selection (no per-slot offsets) broadcasts
+    identically to the explicit [R, B, 16] form."""
+    ab, hcfg = _basis(4, 16, 12)
+    sel2 = g.selections(hcfg.grng, 5)                    # [R, 16]
+    sel3 = jnp.broadcast_to(sel2[:, None, :], (5, 4, 16))
+    idx = jnp.arange(5, dtype=jnp.uint32)
+    a = ops.decision_update(adaptive.init_stats(4, 12), ab, sel2,
+                            hcfg.grng, sample_idx=idx, interpret=True)
+    b = ops.decision_update(adaptive.init_stats(4, 12), ab, sel3,
+                            hcfg.grng,
+                            sample_idx=jnp.broadcast_to(idx[:, None],
+                                                        (5, 4)),
+                            interpret=True)
+    for key in a:
+        np.testing.assert_array_equal(np.asarray(a[key]),
+                                      np.asarray(b[key]), err_msg=key)
+
+
+@pytest.mark.parametrize("read_sigma", [0.0, 0.4])
+def test_escalation_stream_extension_exact(read_sigma):
+    """Two fused rounds at consecutive stream offsets accumulate the
+    SAME statistics as one large round over the union — sufficient-
+    statistic additivity + index-keyed noise make escalation an exact
+    stream extension (the serving engine's correctness invariant)."""
+    b, n = 5, 9
+    ab, hcfg = _basis(b, 24, n, read_sigma)
+    sel_a, idx_a = _round_inputs(hcfg, b, 4, n_drawn=0)
+    sel_b, idx_b = _round_inputs(hcfg, b, 8, n_drawn=4)
+    sel_all, idx_all = _round_inputs(hcfg, b, 12, n_drawn=0)
+
+    stats = ops.decision_update(adaptive.init_stats(b, n), ab, sel_a,
+                                hcfg.grng, sample_idx=idx_a,
+                                interpret=True)
+    stats = ops.decision_update(stats, ab, sel_b, hcfg.grng,
+                                sample_idx=idx_b, interpret=True)
+    want = ops.decision_update(adaptive.init_stats(b, n), ab, sel_all,
+                               hcfg.grng, sample_idx=idx_all,
+                               interpret=True)
+    for key in stats:
+        np.testing.assert_allclose(np.asarray(stats[key]),
+                                   np.asarray(want[key]),
+                                   rtol=1e-5, atol=1e-6, err_msg=key)
+
+
+@pytest.mark.parametrize("read_sigma", [0.0, 0.4])
+def test_update_stats_streamed_matches_dense(read_sigma):
+    """Chunk-hoisted basis (``m_host``): the streaming two-pass stats
+    update equals the dense materializing path — the tiled hoist now
+    bounds peak device memory without changing any number."""
+    b, k, n = 5, 32, 11
+    ab_d, hcfg = _basis(b, k, n, read_sigma)
+    ab_t, hcfg_t = _basis(b, k, n, read_sigma, tile_n=3)
+    assert "m_host" in ab_t and "m" not in ab_t
+    assert all(isinstance(blk, np.ndarray) for blk in ab_t["m_host"])
+    sel, idx = _round_inputs(hcfg, b, 6)
+    mask = jnp.asarray(np.arange(b) % 2 == 0)
+    want = adaptive.update_stats(
+        adaptive.init_stats(b, n),
+        mix_samples(ab_d, sel, hcfg, sample_idx=idx), mask=mask)
+    got = adaptive.update_stats_streamed(
+        adaptive.init_stats(b, n), ab_t, sel, hcfg_t, sample_idx=idx,
+        mask=mask)
+    for key in want:
+        np.testing.assert_allclose(np.asarray(got[key]),
+                                   np.asarray(want[key]),
+                                   rtol=1e-5, atol=1e-5, err_msg=key)
+    # and the sampled path over host chunks still equals dense mixing
+    s_t = mix_samples(ab_t, sel, hcfg_t, sample_idx=idx)
+    s_d = mix_samples(ab_d, sel, hcfg, sample_idx=idx)
+    np.testing.assert_allclose(np.asarray(s_t), np.asarray(s_d),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# 2. engine-level verdict equivalence on a fixed request stream
+# ----------------------------------------------------------------------
+def _run_sar(params, cfg, fused, n_requests, policy, chip=None,
+             head=None, hcfg=None):
+    from repro.launch.serve import make_sar_stream
+    from repro.serving import SarServingEngine
+    eng = SarServingEngine(params, cfg, n_slots=32, policy=policy,
+                           adaptive_mode=True, head=head, hcfg=hcfg,
+                           chip=chip, fused=fused)
+    for r in make_sar_stream(n_requests, corrupt_frac=0.25,
+                             corruption="fog"):
+        eng.submit(r)
+    eng.run()
+    return eng
+
+
+def _records_match(eng_a, eng_b, n_requests):
+    recs_a = {r.rid: r for r in eng_a.metrics.records}
+    recs_b = {r.rid: r for r in eng_b.metrics.records}
+    assert set(recs_a) == set(recs_b) == set(range(n_requests))
+    for rid in recs_a:
+        a, b = recs_a[rid], recs_b[rid]
+        assert a.verdict == b.verdict, rid
+        assert a.prediction == b.prediction, rid
+        assert a.n_samples == b.n_samples, rid
+        np.testing.assert_allclose(a.confidence, b.confidence, atol=1e-5)
+        np.testing.assert_allclose(a.mutual_information,
+                                   b.mutual_information, atol=1e-5)
+
+
+def test_sar_engine_fused_matches_baseline_192():
+    """Acceptance: fused-path verdicts identical to the materializing
+    engine, request for request, on the fixed 192-request SARD stream
+    at bench scale (ideal chip)."""
+    from repro.models.sar_cnn import SarCnnConfig, init_sar_cnn
+    cfg = SarCnnConfig()
+    params = init_sar_cnn(jax.random.PRNGKey(3), cfg)
+    policy = TriagePolicy(conf_threshold=0.7, mi_threshold=0.05,
+                          r_min=4, r_max=20)
+    eng_f = _run_sar(params, cfg, True, 192, policy)
+    eng_j = _run_sar(params, cfg, False, 192, policy)
+    _records_match(eng_f, eng_j, 192)
+    # the device-resident loop syncs at most once per retirement event
+    assert eng_f.host_syncs <= 192
+
+
+def test_sar_engine_fused_matches_baseline_chip_instance():
+    """Acceptance: on a degraded chip instance the fused path draws the
+    SAME read-noise stream (hash keyed by absolute sample index) —
+    verdicts and sample spend match the materializing path draw for
+    draw."""
+    from repro.core.bayes_layer import sigma_of
+    from repro.hw import (VariationSpec, prepare_instance_head,
+                          sample_instances)
+    from repro.models.sar_cnn import SarCnnConfig, init_sar_cnn
+    cfg = SarCnnConfig()
+    params = init_sar_cnn(jax.random.PRNGKey(3), cfg)
+    chip = sample_instances(11, 1, VariationSpec().scaled(2.0))[0]
+    base_hcfg = BayesHeadConfig(num_samples=20, mode="rank16",
+                                grng=cfg.grng, compute_dtype=jnp.float32,
+                                hoist_basis=True)
+    head, hcfg = prepare_instance_head(
+        params["head"]["mu"], sigma_of(params["head"]), base_hcfg, chip)
+    assert hcfg.grng.read_sigma > 0
+    policy = TriagePolicy(conf_threshold=0.7, mi_threshold=0.05,
+                          r_min=4, r_max=20)
+    eng_f = _run_sar(params, cfg, True, 48, policy, chip=chip,
+                     head=head, hcfg=hcfg)
+    eng_j = _run_sar(params, cfg, False, 48, policy, chip=chip,
+                     head=head, hcfg=hcfg)
+    _records_match(eng_f, eng_j, 48)
+
+
+def test_sar_engine_serves_chunk_hoisted_head():
+    """A ``hoist_tile_n`` head must still serve through the jitted
+    engine (activation_basis falls back to the dense concat under
+    tracing) on BOTH decision paths, with the same verdicts as the
+    dense-hoisted head."""
+    from repro.models.sar_cnn import SarCnnConfig, init_sar_cnn
+    cfg = SarCnnConfig()
+    params = init_sar_cnn(jax.random.PRNGKey(3), cfg)
+    policy = TriagePolicy(conf_threshold=0.7, mi_threshold=0.05,
+                          r_min=4, r_max=20)
+    hcfg_t = BayesHeadConfig(num_samples=20, mode="rank16",
+                             grng=cfg.grng, compute_dtype=jnp.float32,
+                             hoist_basis=True, hoist_tile_n=1)
+    from repro.core.bayes_layer import to_serving
+    head_t = to_serving(params["head"], hcfg_t)
+    assert "sigma_basis_host" in head_t
+    ref_eng = _run_sar(params, cfg, True, 16, policy)
+    for fused in (True, False):
+        eng = _run_sar(params, cfg, fused, 16, policy, head=head_t,
+                       hcfg=hcfg_t)
+        _records_match(eng, ref_eng, 16)
+
+
+def test_lm_engine_fused_matches_baseline():
+    """LM engine: per-token fused decisions reproduce the materializing
+    path — same verdicts, token counts and sample spend over a small
+    continuous-batching run."""
+    import time
+    from repro.configs import get_config
+    from repro.models.registry import get_api
+    from repro.serving import LMServingEngine, Request
+
+    cfg = get_config("qwen3-0.6b", smoke=True)
+    api = get_api(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (3, 8), 0, cfg.vocab), np.int32)
+    policy = TriagePolicy(conf_threshold=0.3, mi_threshold=1.0,
+                          r_min=4, r_max=8)
+
+    def run(fused):
+        eng = LMServingEngine(params, cfg, n_slots=2, prompt_len=8,
+                              cache_len=24, policy=policy,
+                              adaptive_mode=True, fused=fused)
+        for i in range(3):
+            eng.submit(Request(rid=i, payload=prompts[i],
+                               arrival_s=time.time(), max_new_tokens=2))
+        eng.run()
+        return eng
+
+    eng_f, eng_j = run(True), run(False)
+    recs_f = {r.rid: r for r in eng_f.metrics.records}
+    recs_j = {r.rid: r for r in eng_j.metrics.records}
+    assert set(recs_f) == set(recs_j) == {0, 1, 2}
+    for rid in recs_f:
+        assert recs_f[rid].verdict == recs_j[rid].verdict
+        assert recs_f[rid].prediction == recs_j[rid].prediction
+        assert recs_f[rid].n_samples == recs_j[rid].n_samples
+        assert recs_f[rid].n_decisions == recs_j[rid].n_decisions
+
+
+# ----------------------------------------------------------------------
+# 3. live-footprint acceptance: no [R, B, N] term in the fused round
+# ----------------------------------------------------------------------
+def test_fused_round_hlo_has_no_rbn_term():
+    """Compile both decision rounds at an LM-ish scale and scan the
+    post-optimization HLO: the materializing path holds [r, B, N]
+    logit-sample tensors; the fused path's largest live array is the
+    O(B·N·16) basis — nothing scales with R·B·N."""
+    from repro.launch.hlo_analysis import (largest_intermediate_bytes,
+                                           materialized_shapes)
+    from repro.serving.engine import _sar_round_fn
+
+    B, N, R, r_step = 8, 512, 20, 4
+    hcfg = BayesHeadConfig(num_samples=R, mode="rank16", grng=CFG,
+                           compute_dtype=jnp.float32, hoist_basis=True)
+    pol = TriagePolicy(conf_threshold=0.7, mi_threshold=0.05,
+                       r_min=r_step, r_max=R)
+    pool = {"y_mu": jnp.zeros((B, N)), "x_sigma": jnp.zeros((B, N)),
+            "m": jnp.zeros((B, N, 16))}
+    stats = adaptive.init_stats(B, N)
+    args = (pool, stats, jnp.zeros((B,), jnp.uint32),
+            jnp.ones((B,), bool))
+
+    def compiled_shapes(fused):
+        fn = _sar_round_fn(hcfg, pol, True, r_step, fused, None)
+        txt = fn.lower(*args).compile().as_text()
+        return txt, materialized_shapes(txt)
+
+    txt_f, shapes_f = compiled_shapes(True)
+    _, shapes_j = compiled_shapes(False)
+
+    sample_shape = {(r_step, B, N), (B, N, r_step), (B, r_step, N)}
+    dims_f = {d for _, d in shapes_f}
+    dims_j = {d for _, d in shapes_j}
+    # the materializing path really does hold the sample tensor …
+    assert dims_j & sample_shape, sorted(dims_j)[:10]
+    # … the fused path never does, in any layout
+    assert not (dims_f & sample_shape), sorted(dims_f & sample_shape)
+    # stronger: nothing in the fused round outgrows the rank-16 basis
+    basis_bytes = B * N * 16 * 4
+    assert largest_intermediate_bytes(txt_f) <= basis_bytes
+    # and nothing carries an R·B·N-sized buffer
+    for _, dims in shapes_f:
+        numel = int(np.prod(dims)) if dims else 1
+        assert numel <= basis_bytes // 4, dims

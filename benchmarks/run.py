@@ -10,9 +10,14 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
   kernel_bench       --        rank16-vs-paper FLOP scaling, kernels
   serving_bench      --        adaptive-R vs fixed-R serving engine
   hw_variation       --        chip-instance MC sweep, cal vs uncal
+  mission_bench      --        closed-loop SAR mission (BENCH_mission)
   roofline           --        3-term roofline over dry-run artifacts
 
-Run: PYTHONPATH=src python -m benchmarks.run [--only <module>] [--fast]
+Run:   PYTHONPATH=src python -m benchmarks.run [--only <m>] [--fast|--all]
+(or:   PYTHONPATH=src python benchmarks/run.py ... — both entry forms
+register the whole suite).  The default run skips nothing but honours
+historical behaviour; ``--fast`` skips the model-training benches,
+``--all`` forces every registered module even under ``--fast``.
 """
 
 from __future__ import annotations
@@ -20,6 +25,12 @@ from __future__ import annotations
 import argparse
 import sys
 import traceback
+from pathlib import Path
+
+if __package__ in (None, ""):                    # `python benchmarks/run.py`
+    _root = Path(__file__).resolve().parent.parent
+    sys.path.insert(0, str(_root))
+    sys.path.insert(0, str(_root / "src"))       # repro.* without PYTHONPATH
 
 MODULES = [
     "table1_comparison",
@@ -31,17 +42,20 @@ MODULES = [
     "hw_variation",
     "fig16_uq",
     "table2_corr",
+    "mission_bench",
     "roofline",
 ]
 FAST_SKIP = {"fig16_uq", "table2_corr", "serving_bench",
-             "hw_variation"}  # SAR training
+             "hw_variation", "mission_bench"}  # SAR training
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None, choices=MODULES)
     ap.add_argument("--fast", action="store_true",
                     help="skip benchmarks that train models")
+    ap.add_argument("--all", action="store_true",
+                    help="run every registered module (overrides --fast)")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -49,7 +63,7 @@ def main() -> None:
     for mod_name in MODULES:
         if args.only and mod_name != args.only:
             continue
-        if args.fast and mod_name in FAST_SKIP:
+        if args.fast and not args.all and mod_name in FAST_SKIP:
             continue
         try:
             mod = __import__(f"benchmarks.{mod_name}", fromlist=["bench"])

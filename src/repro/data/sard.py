@@ -56,9 +56,17 @@ def _blob(n, cy, cx, sy, sx, theta):
     return jnp.exp(-0.5 * ((u / sy) ** 2 + (v / sx) ** 2))
 
 
-def make_image(cfg: SardConfig, key, has_victim) -> jnp.ndarray:
+def make_image(cfg: SardConfig, key, has_victim,
+               noise_key=None) -> jnp.ndarray:
+    """One patch.  ``key`` fixes the SCENE (terrain, distractor, victim
+    placement/pose); ``noise_key`` (default: derived from ``key``, the
+    historical behaviour) draws the per-exposure sensor noise — a
+    re-observation of the same scene passes a fresh ``noise_key`` and
+    sees the same ground truth under new noise (mission orbit looks)."""
     n = cfg.image_size
     ks = jax.random.split(key, 10)
+    if noise_key is None:
+        noise_key = ks[5]
     img = cfg.clutter * _smooth_noise(ks[0], n)
     altitude = jax.random.uniform(ks[1], (), minval=cfg.altitude_range[0],
                                   maxval=cfg.altitude_range[1])
@@ -72,7 +80,7 @@ def make_image(cfg: SardConfig, key, has_victim) -> jnp.ndarray:
     victim = cfg.victim_intensity * _blob(
         n, vc[0], vc[1], 2.5 / altitude, 1.0 / altitude, theta)
     img = img + has_victim * victim
-    img = img + 0.1 * jax.random.normal(ks[5], (n, n))   # sensor noise
+    img = img + 0.1 * jax.random.normal(noise_key, (n, n))  # sensor noise
     return img[..., None]                                 # [n, n, 1]
 
 
@@ -129,9 +137,92 @@ CORRUPTIONS = {
 }
 
 
+# ----------------------------------------------------------------------
+# Severity-field API: per-image severity within one batch
+# ----------------------------------------------------------------------
+# The mission simulator (repro/mission) renders a *spatially correlated*
+# corruption field over its grid world: each observed patch carries the
+# severity of its map cell, so one batch of detector inputs mixes
+# severities.  The batch functions above take one scalar severity — the
+# per-image twins below take a severity PER IMAGE (and a key per image,
+# so weather is a pure function of the map cell).  The scalar batch
+# path is untouched: ``corrupt`` only routes to the per-image twins
+# when handed a severity array.
+
+# Motion blur re-derives the tap count in-graph (the batch fn bakes it
+# into the Python loop).  Taps are capped so the unrolled loop has a
+# static length; severities above the cap saturate at MOTION_TAPS_CAP
+# taps (= the scalar path at severity 5).
+MOTION_TAPS_CAP = 17
+
+
+def _corrupt_fog_image(image, key, severity):
+    haze = 0.7 * severity
+    return image * (1 - haze) + haze * 1.2
+
+
+def _corrupt_frost_image(image, key, severity):
+    n = image.shape[0]
+    mask = _smooth_noise(key, n, octaves=2)[..., None]
+    frost = (mask > 0.7).astype(image.dtype)
+    return image * (1 - 0.8 * severity * frost) + 1.5 * severity * frost
+
+
+def _corrupt_motion_image(image, key, severity):
+    """[H, W, C] directional blur; taps = int(2 + 3·severity), capped."""
+    taps = jnp.clip(jnp.floor(2 + 3 * severity).astype(jnp.int32), 2,
+                    MOTION_TAPS_CAP)
+    out = jnp.zeros_like(image)
+    for i in range(MOTION_TAPS_CAP):
+        rolled = jnp.roll(image, i - taps // 2, axis=1)   # W axis
+        out = out + jnp.where(i < taps, rolled, 0.0)
+    return out / taps
+
+
+def _corrupt_snow_image(image, key, severity):
+    specks = jax.random.bernoulli(key, 0.04 * severity, image.shape)
+    return jnp.where(specks, 2.0, image)
+
+
+CORRUPTIONS_IMAGE = {
+    "fog": _corrupt_fog_image,
+    "frost": _corrupt_frost_image,
+    "motion": _corrupt_motion_image,
+    "snow": _corrupt_snow_image,
+}
+
+
+def corrupt(images, key, severity, corruption: str = "fog"):
+    """Corrupt a batch with scalar OR per-image severity.
+
+    ``severity`` a Python/0-d scalar (traced included): delegates to
+    the original batch function — bit-identical to the pre-field
+    behaviour, one shared weather key for the batch.  (Exception: a
+    TRACED scalar for ``motion`` raises — its tap count is
+    shape-determining; pass a concrete scalar or a [B] array.)
+    ``severity`` a [B] array (traced or concrete): each image is
+    corrupted at its own severity through the per-image twins, with
+    ``key`` split per image (frost masks and snow draws then differ
+    across the batch, matching independent weather per patch).
+    """
+    if jnp.ndim(severity) == 0:
+        if isinstance(severity, jax.core.Tracer):
+            if corruption == "motion":
+                raise ValueError(
+                    "corrupt('motion', ...) cannot take a traced "
+                    "scalar severity (the tap count is shape-"
+                    "determining); pass a concrete scalar or a "
+                    "per-image [B] severity array")
+            return CORRUPTIONS[corruption](images, key, severity)
+        return CORRUPTIONS[corruption](images, key, float(severity))
+    sev = jnp.asarray(severity, jnp.float32)
+    keys = jax.random.split(key, images.shape[0])
+    return jax.vmap(CORRUPTIONS_IMAGE[corruption])(images, keys, sev)
+
+
 def corrupted_batch(cfg: SardConfig, step: int, batch: int,
                     corruption: str, severity: float = 1.0) -> dict:
     data = batch_at(cfg, step, batch)
     key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed ^ 0xC0DE), step)
-    images = CORRUPTIONS[corruption](data["images"], key, severity)
+    images = corrupt(data["images"], key, severity, corruption)
     return {"images": images, "labels": data["labels"]}

@@ -1,0 +1,33 @@
+"""repro.mission — closed-loop aerial SAR mission simulator.
+
+Turns the repo's serving stack into the system the paper's abstract
+actually claims: triage verdicts drive flight decisions, flight
+decisions burn battery, and battery bounds coverage and rescue delay.
+
+  world.py    grid-world map: victims + a spatially-correlated
+              corruption-severity field, rendered through data/sard.py
+  uav.py      fleet model: sectors, kinematics counters, and the
+              per-sortie energy/time ledger (DecisionCost-charged)
+  policy.py   lawnmower / information-gain planners + the verification
+              router (accept → verify maneuver, flag → orbit or skip)
+  rollout.py  device-resident episodes: one dispatch per die group,
+              fleet-scale batched through the fused decision kernel
+
+Entry points: ``fly_mission`` (rollout.py), ``launch/mission.py`` CLI,
+``benchmarks/mission_bench.py`` (BENCH_mission.json).
+"""
+
+from repro.mission.detector import trained_detector
+from repro.mission.policy import MissionPolicy
+from repro.mission.rollout import (MissionResult, fly_mission,
+                                   mission_horizon_s, sar_mission_cost)
+from repro.mission.uav import UavConfig, init_fleet, sector_rows
+from repro.mission.world import (WorldConfig, make_world, observe_cells,
+                                 stack_worlds)
+
+__all__ = [
+    "MissionPolicy", "MissionResult", "UavConfig", "WorldConfig",
+    "fly_mission", "init_fleet", "make_world", "mission_horizon_s",
+    "observe_cells", "sar_mission_cost", "sector_rows", "stack_worlds",
+    "trained_detector",
+]

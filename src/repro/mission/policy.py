@@ -1,0 +1,117 @@
+"""Mission policies: coverage planners + the verification router.
+
+Two coverage planners (both pure index arithmetic / argmax over [B]
+batches — they run inside the rollout's device-resident scan):
+
+  * ``lawnmower`` — the classic serpentine sweep of the drone's sector;
+    deterministic, revisit-free until the sector wraps.  The coverage
+    baseline every SAR study reports against.
+  * ``infogain`` — greedy uncertainty-directed search: fly to the
+    sector cell with the highest remaining predictive entropy,
+    distance-discounted.  Unvisited cells carry the maximal prior
+    entropy ln(n_classes); an observed cell keeps the entropy its
+    triage decision LEFT there, so a flagged-and-skipped cell stays
+    attractive and gets revisited while confidently-accepted cells
+    drop out — the map-level analogue of the paper's escalation.
+
+The verification router turns the serving-layer triage verdict
+(serving/triage: accept / flag) plus the class prediction into the
+flight decision the abstract prices:
+
+  accept + victim    → VERIFY: descend-orbit-confirm maneuver (costly;
+                       a false one is the metric the paper attacks)
+  accept + no victim → move on
+  flag               → ``flag_action``: 'orbit' re-decides once at full
+                       R from a loiter orbit (cheap vs a verification
+                       descent) and routes the collapsed accept/flag
+                       verdict; 'skip' defers the cell (the infogain
+                       planner may come back to it).
+
+``mode`` selects the decision engine the router sits on: Bayesian
+adaptive-R (the paper's Fig. 1 triage with sequential escalation),
+Bayesian fixed-R (R = r_max every cell), or the deterministic baseline
+(µ-only logits, zero GRNG samples, every positive verified — the
+overconfident detector the paper motivates against).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.serving.triage import TriagePolicy
+
+PLANNERS = ("lawnmower", "infogain")
+MODES = ("bayes_adaptive", "bayes_fixed", "deterministic")
+FLAG_ACTIONS = ("orbit", "skip")
+
+
+@dataclasses.dataclass(frozen=True)
+class MissionPolicy:
+    """Frozen (hashable) mission decision policy — keys the rollout's
+    compiled-episode cache together with the world/fleet configs."""
+    mode: str = "bayes_adaptive"
+    planner: str = "lawnmower"
+    flag_action: str = "orbit"
+    # Fig. 1 thresholds: conf 0.8 / MI 0.5 (TriagePolicy defaults).
+    triage: TriagePolicy = dataclasses.field(default_factory=TriagePolicy)
+    infogain_lambda: float = 0.05     # distance discount, nats per cell
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}: {self.mode}")
+        if self.planner not in PLANNERS:
+            raise ValueError(
+                f"planner must be one of {PLANNERS}: {self.planner}")
+        if self.flag_action not in FLAG_ACTIONS:
+            raise ValueError(
+                f"flag_action must be one of {FLAG_ACTIONS}: "
+                f"{self.flag_action}")
+
+    @property
+    def bayesian(self) -> bool:
+        return self.mode != "deterministic"
+
+
+# ----------------------------------------------------------------------
+# coverage planners ([B]-batched, jit/scan friendly)
+# ----------------------------------------------------------------------
+def lawnmower_cell(sector: jnp.ndarray, grid: int,
+                   k: jnp.ndarray) -> jnp.ndarray:
+    """Serpentine cell for path step ``k`` [B] in ``sector`` [B, 2]
+    (row0, n_rows).  Wraps at the sector size (a drone that outlives
+    its sweep starts over)."""
+    row0, n_rows = sector[:, 0], sector[:, 1]
+    s = k % (n_rows * grid)
+    r, c = s // grid, s % grid
+    col = jnp.where(r % 2 == 0, c, grid - 1 - c)
+    return (row0 + r) * grid + col
+
+
+def infogain_cell(pos: jnp.ndarray, entropy: jnp.ndarray,
+                  sector_mask: jnp.ndarray, grid: int,
+                  lam: float) -> jnp.ndarray:
+    """Greedy next cell [B]: argmax over the drone's sector of the
+    remaining predictive entropy minus ``lam`` · Manhattan distance.
+
+    pos [B] flat cells; entropy [B, n_cells] (each drone's view of ITS
+    world's entropy map); sector_mask [B, n_cells] bool.
+    """
+    cells = jnp.arange(entropy.shape[-1], dtype=jnp.int32)
+    pr, pc = pos // grid, pos % grid
+    cr, cc = cells // grid, cells % grid
+    dist = (jnp.abs(cr[None] - pr[:, None])
+            + jnp.abs(cc[None] - pc[:, None])).astype(jnp.float32)
+    score = entropy - lam * dist
+    return jnp.argmax(jnp.where(sector_mask, score, -jnp.inf),
+                      axis=-1).astype(jnp.int32)
+
+
+def next_cell(policy: MissionPolicy, grid: int, *, sector, path_k, pos,
+              entropy, sector_mask) -> jnp.ndarray:
+    """Planner dispatch (static on ``policy.planner``)."""
+    if policy.planner == "lawnmower":
+        return lawnmower_cell(sector, grid, path_k)
+    return infogain_cell(pos, entropy, sector_mask, grid,
+                         policy.infogain_lambda)

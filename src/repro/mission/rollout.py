@@ -1,0 +1,491 @@
+"""Device-resident mission rollouts: the closed loop the paper claims.
+
+One episode = a ``lax.scan`` over mission steps, jitted ONCE per
+(configs, chip) and executed in a SINGLE dispatch — the host is
+re-entered exactly once per rollout, to pull the finished logs.  Each
+step, for the whole (episodes × drones) flattened fleet batch:
+
+  observe   render every drone's current cell through the SARD
+            generators + the map's severity field (world.observe_cells)
+  featurize the serving engine's cached conv-trunk + activation-basis
+            builder (engine._sar_featurize_fn — nonideal CIM when a
+            chip is bound), so mission decisions flow through the SAME
+            compiled path as served requests
+  decide    the engine's cached device-resident token-decision builder
+            (engine._lm_token_fn): the full escalation schedule with
+            cond-skipped rounds through the FUSED decision kernel —
+            the [R, B, N] sample tensor never exists here either
+  route     verification policy (policy.py): the µ-MVM detection plus
+            an accepting posterior → verification descent; a FLAGGED
+            detection → loiter orbit (two further independent
+            exposures, each re-featurized and re-decided at full R —
+            descend only if the evidence repeats) or skip
+  ledger    battery/time charged from the frozen
+            serving.metrics.DecisionCost struct plus flight + maneuver
+            costs (uav.py); a drone past its budget freezes in place
+  plan      lawnmower or information-gain next cell (policy.py)
+
+Drones bound to DIFFERENT chip instances compile to different
+executables (each die's constants are static, exactly like the serving
+engines), so ``fly_mission`` groups the fleet by die and dispatches one
+episode per group — sectors partition the map, so groups are
+independent and their logs/maps merge exactly.  ``host_syncs`` counts
+the blocking pulls: one per die group, never per step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.mission import policy as mpolicy
+from repro.mission import uav as muav
+from repro.mission import world as mworld
+from repro.mission.policy import MissionPolicy
+from repro.mission.uav import UavConfig
+from repro.mission.world import WorldConfig
+from repro.serving import adaptive
+from repro.serving.metrics import DecisionCost, decision_cost
+from repro.serving.triage import ACCEPT, FLAG
+
+
+def sar_mission_cost(cfg) -> DecisionCost:
+    """The mission ledger's per-decision cost struct: tilemap-TRUE
+    (compiled placement, not logical tiles) for the SAR detector — the
+    same `DecisionCost` numbers `serve_sar`'s summaries charge."""
+    from repro.hw import compile_network
+    from repro.launch.serve import sar_layer_shapes
+    layers = sar_layer_shapes(cfg)
+    return decision_cost(layers, compile_network(layers))
+
+
+# ----------------------------------------------------------------------
+# compiled episode builder (process-wide cache, one entry per die group)
+# ----------------------------------------------------------------------
+@functools.lru_cache(maxsize=16)
+def _episode_fn(wcfg: WorldConfig, ucfg: UavConfig, pol: MissionPolicy,
+                snn_cfg, hcfg, chip, cost: DecisionCost, fused: bool,
+                n_steps: int, n_batch: int, n_classes: int):
+    """jit (params, head, logit_bias, worlds, fleet0, maps0, bind)
+           -> (fleet, maps, logs [n_steps, n_batch] pytree).
+
+    ``n_batch`` is the flattened episodes×group-drones batch — the
+    decision kernel's B.  Cached on the frozen configs + the chip's
+    identity, like every other pool builder in serving/engine.py.
+    """
+    from repro.serving.engine import _lm_token_fn, _sar_featurize_fn
+
+    tri = pol.triage
+    grid = wcfg.grid
+    featurize = _sar_featurize_fn(snn_cfg, hcfg, chip, None)
+    decide_fn = orbit_fn = None
+    if pol.bayesian:
+        schedule = (adaptive.escalation_schedule(tri)
+                    if pol.mode == "bayes_adaptive" else (tri.r_max,))
+        decide_fn = _lm_token_fn(hcfg, tri, pol.mode == "bayes_adaptive",
+                                 schedule, fused, n_batch, n_classes)
+        if pol.flag_action == "orbit":
+            orbit_fn = _lm_token_fn(hcfg, tri, False, (tri.r_max,),
+                                    fused, n_batch, n_classes)
+    r_max = jnp.uint32(tri.r_max)
+    lane = jnp.arange(n_batch, dtype=jnp.uint32)
+
+    def step(worlds, bind, params, head, logit_bias, carry, step_idx):
+        fleet, maps = carry
+        wid, cells = bind["wid"], fleet["pos"]
+        active = fleet["energy_J"] < ucfg.battery_J
+
+        def look_at(look):
+            """Observe + featurize one exposure, at the die's calibrated
+            operating point (per-class logit bias subtracted)."""
+            imgs = mworld.observe_cells(wcfg, worlds, wid, cells, look)
+            rows = dict(featurize(params, head, imgs))
+            rows["y_mu"] = rows["y_mu"] - logit_bias
+            return rows
+
+        # Exposure 3·step: the scene under this cell is persistent, but
+        # sensor noise and transient weather (snow specks, frost) are
+        # re-drawn every observation — a revisit gets fresh evidence.
+        rows = look_at(3 * step_idx)
+
+        orbited = jnp.zeros((n_batch,), bool)
+        if not pol.bayesian:
+            logp = jax.nn.log_softmax(rows["y_mu"].astype(jnp.float32))
+            pred = jnp.argmax(logp, -1).astype(jnp.int32)
+            conf = jnp.exp(logp.max(-1))
+            pred_ent = -(jnp.exp(logp) * logp).sum(-1)
+            verdict = jnp.full((n_batch,), ACCEPT, jnp.int32)
+            spent = jnp.zeros((n_batch,), jnp.int32)
+            want_verify = pred == 1          # verify EVERY detection
+        else:
+            # The DETECTION is the hardware's deterministic output (the
+            # X·µ' MVM it computes regardless); the posterior is the
+            # Fig. 1 UNCERTAINTY GATE on top of it.  Class from y_mu,
+            # accept/flag from the sampled predictive statistics.
+            pred = jnp.argmax(rows["y_mu"].astype(jnp.float32),
+                              -1).astype(jnp.int32)
+            # 3 decision slots per (step, drone): primary + 2 re-looks.
+            s2 = jnp.uint32(3) * step_idx.astype(jnp.uint32) \
+                * jnp.uint32(n_batch)
+            verdict, fin, spent = decide_fn(rows, (s2 + lane) * r_max,
+                                            active)
+            conf = fin["confidence"]
+            pred_ent = fin["predictive_entropy"]
+            want_verify = (verdict == ACCEPT) & (pred == 1)
+            if orbit_fn is not None:
+                # Flag-and-orbit: a LOW-CONFIDENCE detection buys one
+                # loiter orbit — TWO further independent exposures
+                # (looks 3t+1, 3t+2), each with a fresh featurization
+                # and a full-R decision, before any verification
+                # descent.  The descent launches if EITHER re-look
+                # detects again (2-of-3 evidence): a transient-weather
+                # false positive must re-roll twice to survive, while a
+                # persistent victim only has to show up once more.
+                flagged = active & (verdict == FLAG) & (pred == 1)
+
+                def orbit(state):
+                    relook, conf, pred_ent, spent = state
+                    for j in (1, 2):
+                        rows_j = look_at(3 * step_idx + j)
+                        _, fin_j, spent_j = orbit_fn(
+                            rows_j,
+                            (s2 + jnp.uint32(j * n_batch) + lane)
+                            * r_max, flagged)
+                        pred_j = jnp.argmax(
+                            rows_j["y_mu"].astype(jnp.float32),
+                            -1).astype(jnp.int32)
+                        relook = relook | (pred_j == 1)
+                        conf = jnp.where(flagged, fin_j["confidence"],
+                                         conf)
+                        pred_ent = jnp.where(
+                            flagged, fin_j["predictive_entropy"],
+                            pred_ent)
+                        spent = spent + spent_j
+                    return relook, conf, pred_ent, spent
+
+                # re-looks cost 2 more trunk sweeps + decisions — skip
+                # the whole branch on the (common) nothing-flagged step
+                relook, conf, pred_ent, spent = lax.cond(
+                    jnp.any(flagged), orbit, lambda s: s,
+                    (jnp.zeros((n_batch,), bool), conf, pred_ent,
+                     spent))
+                orbited = flagged
+                want_verify = want_verify | (flagged & relook)
+
+        truth = worlds["victims"][wid, cells]
+        already = (jnp.isfinite(maps["rescued_t"][wid, cells])
+                   | (maps["cleared"][wid, cells] > 0))
+        verify = active & want_verify & ~already
+        found = verify & truth
+        false_verify = verify & ~truth
+
+        # ledger: decision terms from the SAME DecisionCost struct the
+        # serving summaries use, plus the mission-level maneuver costs.
+        # An orbit re-featurizes twice (two more fixed MVM sweeps) and
+        # re-samples, so it charges 2·e_fixed + its sample spend.
+        spent_f = spent.astype(jnp.float32)
+        n_dec = 1.0 + 2.0 * orbited.astype(jnp.float32)
+        e_dec = n_dec * cost.e_fixed_J + spent_f * cost.e_per_sample_J
+        t_dec = n_dec * cost.t_fixed_s + spent_f * cost.t_per_sample_s
+        e_step = (ucfg.flight_energy_J + e_dec
+                  + jnp.where(orbited, ucfg.orbit_energy_J, 0.0)
+                  + jnp.where(verify, ucfg.verify_energy_J, 0.0))
+        t_step = (ucfg.flight_time_s + t_dec
+                  + jnp.where(orbited, ucfg.orbit_time_s, 0.0)
+                  + jnp.where(verify, ucfg.verify_time_s, 0.0))
+        energy = fleet["energy_J"] + jnp.where(active, e_step, 0.0)
+        time_s = fleet["time_s"] + jnp.where(active, t_step, 0.0)
+
+        maps = dict(maps)
+        maps["rescued_t"] = maps["rescued_t"].at[wid, cells].min(
+            jnp.where(found, time_s, jnp.inf))
+        maps["cleared"] = maps["cleared"].at[wid, cells].max(
+            verify.astype(jnp.int32))
+        maps["visited"] = maps["visited"].at[wid, cells].max(
+            active.astype(jnp.int32))
+        ent_seen = jnp.where(found, 0.0, pred_ent)
+        ent_old = maps["entropy"][wid, cells]
+        maps["entropy"] = maps["entropy"].at[wid, cells].set(
+            jnp.where(active, ent_seen, ent_old))
+
+        path_k = fleet["path_k"] + active.astype(jnp.int32)
+        ent_view = maps["entropy"][wid]
+        if pol.planner == "infogain":
+            # never loiter: the just-observed cell is excluded this turn
+            ent_view = ent_view.at[lane.astype(jnp.int32), cells].set(
+                -jnp.inf)
+        nxt = mpolicy.next_cell(pol, grid, sector=bind["sector"],
+                                path_k=path_k, pos=cells,
+                                entropy=ent_view,
+                                sector_mask=bind["sector_mask"])
+        fleet = {"pos": jnp.where(active, nxt, cells), "path_k": path_k,
+                 "energy_J": energy, "time_s": time_s}
+
+        log = {"cell": cells, "active": active, "verdict": verdict,
+               "prediction": pred, "confidence": conf, "spent": spent,
+               "orbited": orbited, "verify": verify, "found": found,
+               "false_verify": false_verify, "truth": truth,
+               "e_decision_J": jnp.where(active, e_dec, 0.0),
+               "energy_J": energy, "time_s": time_s}
+        return (fleet, maps), log
+
+    def episode(params, head, logit_bias, worlds, fleet0, maps0, bind):
+        (fleet, maps), logs = lax.scan(
+            functools.partial(step, worlds, bind, params, head,
+                              logit_bias),
+            (fleet0, maps0), jnp.arange(n_steps, dtype=jnp.int32))
+        return fleet, maps, logs
+
+    return jax.jit(episode)
+
+
+# ----------------------------------------------------------------------
+# mission driver
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class MissionResult:
+    summary: dict
+    logs: dict           # numpy [n_steps, E·D] arrays, fleet order
+    maps: dict           # merged {rescued_t, cleared, visited, entropy}
+    worlds: dict         # numpy world pytree [E, ...]
+    host_syncs: int      # blocking device→host pulls (one per die group)
+
+
+def _prepare_group_head(params, cfg, tri, chip, calibrated: bool):
+    """(head, serving hcfg) for one die group — golden transform when
+    ``chip`` is None, else hw/calib's per-instance deployment."""
+    from repro.core.bayes_layer import sigma_of
+    from repro.core.sampling import BayesHeadConfig
+    from repro.hw import prepare_instance_head
+    base = BayesHeadConfig(num_samples=tri.r_max, mode="rank16",
+                           grng=cfg.grng, compute_dtype=jnp.float32,
+                           hoist_basis=True)
+    return prepare_instance_head(params["head"]["mu"],
+                                 sigma_of(params["head"]), base,
+                                 chip, calibrated=calibrated)
+
+
+def operating_point_bias(params, cfg, head, chip,
+                         n_patches: int = 256) -> np.ndarray:
+    """Per-die detection operating-point transfer (logit bias [N]).
+
+    hw/calib recalibrates the HEAD (sum statistics + offsets), but a
+    degraded conv trunk — per-column ADC gain/offset, programming
+    error — additionally shifts and compresses the detection margin
+    y₁−y₀, which silently moves the die's alarm rate (one sampled
+    severity-2.5 die fires on 3× the cells of the golden chip, another
+    goes nearly blind).  The mission deployment closes that loop the
+    way §III-B1 closes the GRNG's: fly ``n_patches`` held-out SARD
+    calibration patches through BOTH the golden model and the die's
+    digital twin, and choose the margin offset τ that matches the
+    die's calibration alarm rate to the golden chip's (Neyman–Pearson
+    operating-point transfer; quantile matching, no labels needed).
+    Returns a per-class logit bias to SUBTRACT from y_mu — zeros when
+    ``chip`` is None.  Applied identically to every policy in the
+    bench, deterministic baseline included.
+    """
+    if chip is None:
+        return np.zeros((cfg.n_classes,), np.float32)
+    if cfg.n_classes != 2:
+        raise NotImplementedError(
+            "operating-point transfer is margin-based (binary heads)")
+    from repro.core.bayes_layer import to_serving
+    from repro.core.sampling import BayesHeadConfig
+    from repro.data.sard import SardConfig, batch_at
+    from repro.models.sar_cnn import features
+    dcfg = SardConfig(image_size=cfg.image_size, seed=0xCA1)
+    imgs = jnp.concatenate(
+        [batch_at(dcfg, i, 64)["images"]
+         for i in range((n_patches + 63) // 64)])[:n_patches]
+    gold = to_serving(params["head"], BayesHeadConfig(
+        mode="rank16", grng=cfg.grng, compute_dtype=jnp.float32))
+    y_g = np.asarray(features(params, imgs, cfg).astype(jnp.float32)
+                     @ gold["mu_prime"].astype(jnp.float32))
+    q = float((y_g[:, 1] - y_g[:, 0] > 0).mean())
+    y_d = np.asarray(
+        features(params, imgs, cfg, chip=chip).astype(jnp.float32)
+        @ jnp.asarray(head["mu_prime"], jnp.float32))
+    tau = float(np.quantile(y_d[:, 1] - y_d[:, 0], 1.0 - q))
+    return np.asarray([0.0, tau], np.float32)
+
+
+def fly_mission(wcfg: WorldConfig, ucfg: UavConfig, pol: MissionPolicy,
+                *, params=None, cfg=None, chips=None,
+                calibrated: bool = True, n_steps: int = 96,
+                n_episodes: int = 1, fused: bool = True) -> MissionResult:
+    """Run ``n_episodes`` independent missions for the whole fleet.
+
+    ``chips``: None (ideal fleet), one hw.ChipInstance (whole fleet on
+    that die), or a sequence of per-drone instances/None — drones are
+    grouped by die and each group flies its sectors in ONE device
+    dispatch per rollout.  Episodes are independent worlds (seeds
+    wcfg.seed+e) batched into the decision kernel's slot dimension —
+    fleet-scale batching, zero per-step host traffic.
+    """
+    from repro.models.sar_cnn import SarCnnConfig, init_sar_cnn
+    cfg = cfg or SarCnnConfig()
+    if params is None:
+        params = init_sar_cnn(jax.random.PRNGKey(3), cfg)
+    d, e = ucfg.n_drones, n_episodes
+    if chips is None or not isinstance(chips, (tuple, list)):
+        chips = [chips] * d
+    if len(chips) != d:
+        raise ValueError(f"chips: expected {d} per-drone entries, "
+                         f"got {len(chips)}")
+    cost = sar_mission_cost(cfg)
+    worlds = mworld.stack_worlds(wcfg, e)
+    fleet0 = muav.init_fleet(ucfg, wcfg.grid, e)
+    bind = muav.fleet_bindings(ucfg, wcfg.grid, e)
+    n_cells = wcfg.n_cells
+    maps0 = {
+        "rescued_t": jnp.full((e, n_cells), jnp.inf, jnp.float32),
+        "cleared": jnp.zeros((e, n_cells), jnp.int32),
+        "visited": jnp.zeros((e, n_cells), jnp.int32),
+        "entropy": jnp.full((e, n_cells), float(np.log(cfg.n_classes)),
+                            jnp.float32),
+    }
+
+    groups: dict[int, list[int]] = {}
+    for di, chip in enumerate(chips):
+        groups.setdefault(id(chip), []).append(di)
+
+    logs_full: dict[str, np.ndarray] = {}
+    maps_merged = {k: np.asarray(v) for k, v in maps0.items()}
+    fleet_final = {k: np.zeros_like(np.asarray(v))
+                   for k, v in fleet0.items()}
+    host_syncs = 0
+    for drone_ids in groups.values():
+        chip = chips[drone_ids[0]]
+        head, hcfg = _prepare_group_head(params, cfg, pol.triage, chip,
+                                         calibrated)
+        bias = operating_point_bias(params, cfg, head, chip) \
+            if calibrated else np.zeros((cfg.n_classes,), np.float32)
+        rows = np.asarray([ep * d + di for ep in range(e)
+                           for di in drone_ids])
+        sub = lambda t: jax.tree.map(lambda x: x[rows], t)  # noqa: E731
+        fn = _episode_fn(wcfg, ucfg, pol, cfg, hcfg, chip, cost, fused,
+                         n_steps, len(rows), cfg.n_classes)
+        fleet_g, maps_g, logs_g = fn(params, head, jnp.asarray(bias),
+                                     worlds, sub(fleet0), maps0,
+                                     sub(bind))
+        # the single blocking pull of this group's whole episode
+        fleet_g, maps_g, logs_g = jax.device_get(
+            (fleet_g, maps_g, logs_g))
+        host_syncs += 1
+        for k, v in logs_g.items():
+            logs_full.setdefault(k, np.zeros((n_steps, e * d), v.dtype))
+            logs_full[k][:, rows] = v
+        for k in fleet_final:
+            fleet_final[k][rows] = fleet_g[k]
+        maps_merged["rescued_t"] = np.minimum(maps_merged["rescued_t"],
+                                              maps_g["rescued_t"])
+        maps_merged["cleared"] = np.maximum(maps_merged["cleared"],
+                                            maps_g["cleared"])
+        maps_merged["visited"] = np.maximum(maps_merged["visited"],
+                                            maps_g["visited"])
+        # sectors partition the map: each group only moved its own
+        # cells' entropy, so elementwise min keeps every update
+        maps_merged["entropy"] = np.minimum(maps_merged["entropy"],
+                                            maps_g["entropy"])
+
+    summary = summarize(wcfg, ucfg, pol, cost, n_steps,
+                        {k: np.asarray(v) for k, v in worlds.items()},
+                        maps_merged, logs_full, fleet_final)
+    return MissionResult(summary=summary, logs=logs_full,
+                         maps=maps_merged,
+                         worlds={k: np.asarray(v)
+                                 for k, v in worlds.items()},
+                         host_syncs=host_syncs)
+
+
+def mission_horizon_s(ucfg: UavConfig, cost: DecisionCost,
+                      tri, n_steps: int) -> float:
+    """Static worst-case mission clock — the rescue-delay penalty for a
+    victim never rescued.  Identical across policies sharing a spec, so
+    delay comparisons between modes are apples-to-apples.  The worst
+    step flies, orbits (3 full decisions: primary + 2 re-looks, up to
+    3·r_max samples) AND verifies, so the per-step bound charges all of
+    it — the ledger's ``time_s`` can never cross the horizon."""
+    per_step = (ucfg.flight_time_s + ucfg.orbit_time_s
+                + ucfg.verify_time_s
+                + 3 * cost.decision_latency_s(tri.r_max))
+    return float(n_steps * per_step)
+
+
+def summarize(wcfg: WorldConfig, ucfg: UavConfig, pol: MissionPolicy,
+              cost: DecisionCost, n_steps: int, worlds: dict,
+              maps: dict, logs: dict, fleet_final: dict) -> dict:
+    """Mission metrics over all episodes (host-side, after the pull)."""
+    victims = np.asarray(worlds["victims"], bool)           # [E, C]
+    rescued_t = np.asarray(maps["rescued_t"])               # [E, C]
+    e = victims.shape[0]
+    horizon = mission_horizon_s(ucfg, cost, pol.triage, n_steps)
+
+    rescued = np.isfinite(rescued_t) & victims
+    n_victims = victims.sum(1)                              # [E]
+    n_rescued = rescued.sum(1)
+    t_rescue = np.where(n_rescued > 0,
+                        np.where(rescued, rescued_t, np.inf).min(1),
+                        horizon)
+    delay = np.where(victims, np.minimum(rescued_t, horizon), 0.0)
+    rescue_delay = delay.sum(1) / np.maximum(n_victims, 1)
+
+    active = logs["active"]
+    # first DETECTION (µ-positive on a true victim cell) per episode —
+    # distinct from the first completed rescue above
+    det_hit = active & (logs["prediction"] == 1) & logs["truth"]
+    drone_ep = np.arange(det_hit.shape[1]) // ucfg.n_drones  # [E·D]
+    t_first_det = np.full((e,), horizon)
+    for ep in range(e):
+        t = logs["time_s"][:, drone_ep == ep][det_hit[:, drone_ep == ep]]
+        if t.size:
+            t_first_det[ep] = t.min()
+    decisions = active.sum()
+    samples = logs["spent"].sum()
+    verifies = logs["verify"].sum()
+    false_verifies = logs["false_verify"].sum()
+    detections = (active & (logs["prediction"] == 1)).sum()
+    energy_total = fleet_final["energy_J"].sum()
+    e_decision = logs["e_decision_J"].sum()
+    e_verify = ucfg.verify_energy_J * verifies
+    e_orbit = ucfg.orbit_energy_J * logs["orbited"].sum()
+    e_flight = ucfg.flight_energy_J * decisions
+
+    return {
+        "episodes": int(e),
+        "n_drones": int(ucfg.n_drones),
+        "grid": int(wcfg.grid),
+        "n_steps": int(n_steps),
+        "battery_J": float(ucfg.battery_J),
+        "horizon_s": horizon,
+        "decisions": int(decisions),
+        "mean_samples_per_decision": float(samples / max(decisions, 1)),
+        "coverage": float(np.asarray(maps["visited"]).mean()),
+        "time_to_first_detection_s": float(t_first_det.mean()),
+        "time_to_first_rescue_s": float(t_rescue.mean()),
+        "rescue_delay_s": float(rescue_delay.mean()),
+        "victims": int(n_victims.sum()),
+        "rescued": int(n_rescued.sum()),
+        "missed_victim_rate": float(
+            1.0 - n_rescued.sum() / max(n_victims.sum(), 1)),
+        "detections": int(detections),
+        "verifications": int(verifies),
+        "false_verifications": int(false_verifies),
+        "false_verification_rate": float(
+            false_verifies / max(verifies, 1)),
+        "orbits": int(logs["orbited"].sum()),
+        "energy_total_J": float(energy_total),
+        "energy_decision_J": float(e_decision),
+        "energy_verify_J": float(e_verify),
+        "energy_orbit_J": float(e_orbit),
+        "energy_flight_J": float(e_flight),
+        "mean_time_s": float(fleet_final["time_s"].mean()),
+        "mode": pol.mode,
+        "planner": pol.planner,
+        "flag_action": pol.flag_action,
+    }

@@ -1,0 +1,108 @@
+"""UAV fleet model: kinematics, sectors, and the per-sortie ledger.
+
+A drone is four numbers of mutable state — flat cell position, a
+path-step counter, cumulative energy spent, cumulative mission time —
+plus static per-drone bindings: its search sector (a contiguous row
+band of the map; sectors partition the grid so drones never collide)
+and its chip instance (rollout.py groups drones by die, since each
+die's nonideal constants compile into their own executable).
+
+The battery is a LEDGER, not a decrement: energy accumulates from
+zero and the drone goes inactive once it crosses ``battery_J``.  That
+keeps float32 accumulation well-conditioned and makes the coverage-
+monotone-in-budget property exact (a larger budget replays the
+identical trajectory prefix).  Decision energy/latency are charged
+from the SAME frozen ``serving.metrics.DecisionCost`` struct the
+serving summaries use — the reconciliation test in
+tests/test_mission.py holds by construction.  Flight and maneuver
+costs are the mission-level terms the paper's abstract prices against
+triage quality: a verification maneuver (descend-orbit-confirm) costs
+orders of magnitude more than the decision that gates it, which is
+exactly why filtering low-confidence detections buys coverage.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class UavConfig:
+    """Fleet-wide platform constants (hashable, keys compile caches).
+
+    Energy scale: the SAR CNN's fixed decision sweep is ~7 nJ on the
+    analytic model, so the defaults put one cell transit at ~200
+    decisions and a full verification maneuver at ~6000 — maneuvers
+    dominate, inference is the cheap gate, matching the paper's
+    deployment story (88.7 mW platform vs aJ-scale GRNG).
+    """
+    n_drones: int = 3
+    battery_J: float = 250e-6         # per-sortie energy budget
+    flight_energy_J: float = 1.5e-6   # one cell-to-cell transit
+    verify_energy_J: float = 40e-6    # descend-orbit-confirm maneuver
+    orbit_energy_J: float = 8e-6      # flag-and-orbit second look
+    flight_time_s: float = 2.0
+    verify_time_s: float = 25.0
+    orbit_time_s: float = 8.0
+
+
+def sector_rows(grid: int, n_drones: int) -> np.ndarray:
+    """[n_drones, 2] (row0, n_rows): contiguous row bands partitioning
+    the map as evenly as possible — every cell is owned by exactly one
+    drone, so scatters inside an episode never collide.  Requires
+    n_drones ≤ grid: a zero-row sector would alias its drone onto a
+    neighbour's cells (index clamping), silently corrupting the maps
+    the partition invariant protects."""
+    if n_drones > grid:
+        raise ValueError(
+            f"n_drones={n_drones} exceeds grid rows={grid}: row-band "
+            f"sectors cannot give every drone at least one row")
+    base, extra = divmod(grid, n_drones)
+    out, r0 = [], 0
+    for d in range(n_drones):
+        rows = base + (1 if d < extra else 0)
+        out.append((r0, rows))
+        r0 += rows
+    return np.asarray(out, np.int32)
+
+
+def sector_masks(grid: int, n_drones: int) -> np.ndarray:
+    """[n_drones, grid²] bool — each drone's owned cells (the
+    information-gain planner's argmax domain)."""
+    rows = sector_rows(grid, n_drones)
+    cell_row = np.arange(grid * grid) // grid
+    return np.stack([(cell_row >= r0) & (cell_row < r0 + nr)
+                     for r0, nr in rows])
+
+
+def init_fleet(ucfg: UavConfig, grid: int, n_episodes: int = 1) -> dict:
+    """Fresh fleet state for ``n_episodes`` stacked worlds, flattened to
+    one batch of B = n_episodes · n_drones drones (the decision-kernel
+    batch dimension).  Each drone starts at its sector's origin."""
+    rows = sector_rows(grid, ucfg.n_drones)
+    start = jnp.asarray(rows[:, 0] * grid, jnp.int32)        # [D]
+    pos = jnp.tile(start, n_episodes)                        # [E·D]
+    b = pos.shape[0]
+    return {
+        "pos": pos,                                # flat cell index
+        "path_k": jnp.zeros((b,), jnp.int32),      # planner step counter
+        "energy_J": jnp.zeros((b,), jnp.float32),  # ledger: spent so far
+        "time_s": jnp.zeros((b,), jnp.float32),    # mission clock
+    }
+
+
+def fleet_bindings(ucfg: UavConfig, grid: int,
+                   n_episodes: int = 1) -> dict:
+    """Static per-drone arrays for the flattened fleet batch: world id
+    ``wid`` [B], sector (row0, n_rows) [B, 2], sector mask [B, grid²]."""
+    d = ucfg.n_drones
+    rows = sector_rows(grid, d)
+    masks = sector_masks(grid, d)
+    return {
+        "wid": jnp.repeat(jnp.arange(n_episodes, dtype=jnp.int32), d),
+        "sector": jnp.asarray(np.tile(rows, (n_episodes, 1)), jnp.int32),
+        "sector_mask": jnp.asarray(np.tile(masks, (n_episodes, 1))),
+    }

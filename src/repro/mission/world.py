@@ -1,0 +1,136 @@
+"""Grid-world SAR environment: victims + spatially-correlated weather.
+
+The mission map is a ``grid × grid`` lattice of aerial patches.  Each
+cell renders through the SAME generators the detector was trained and
+benchmarked on (data/sard.py ``make_image``), so mission observations
+stay distribution-matched to the serving stream — the only differences
+from a serving batch are (a) the victim prior is the map's, not the
+balanced 50 %, and (b) corruption severity varies OVER THE MAP: a
+multi-octave smooth field assigns every cell its own fog/frost/motion/
+snow severity, rendered through the per-image severity API
+(data/sard.corrupt / CORRUPTIONS_IMAGE).
+
+Observations split into a persistent SCENE and a transient EXPOSURE:
+the terrain, the distractor rock, and the victim (placement and pose)
+are a pure function of ``(map seed, cell)`` and never change, while
+sensor noise and transient weather (falling snow, frost crystals) are
+additionally keyed by the ``look`` index.  Re-observing a cell — an
+orbit maneuver, an information-gain revisit — therefore sees the same
+ground truth under fresh noise and fresh weather, which is exactly
+what lets the rollout's flag-and-orbit policy filter transient false
+positives without losing persistent victims (rollout.py's 2-of-3
+evidence rule depends on this split; do not re-merge the keys).
+``observe_cells`` is jittable and vmap-batched, so the rollout driver
+renders the whole fleet's observations inside its device-resident
+episode scan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.sard import (CORRUPTIONS_IMAGE, SardConfig, _smooth_noise,
+                             make_image)
+
+# Domain-separation tags for the world's three random substreams.
+_SEED_SCENE = 0x0B5E
+_SEED_WEATHER = 0x7EA7
+_SEED_LAYOUT = 0x5A12
+
+
+@dataclasses.dataclass(frozen=True)
+class WorldConfig:
+    """Static mission-map parameters (hashable: keys compile caches)."""
+    grid: int = 12                   # grid × grid cells
+    n_victims: int = 5
+    seed: int = 0
+    corruption: str = "snow"         # the map's weather modality
+    severity_lo: float = 0.0         # clear-sky corner of the field
+    severity_hi: float = 0.5         # worst-weather corner of the field
+    field_octaves: int = 3
+    image_size: int = 32
+
+    @property
+    def n_cells(self) -> int:
+        return self.grid * self.grid
+
+    def sard(self) -> SardConfig:
+        return SardConfig(image_size=self.image_size, seed=self.seed)
+
+
+def make_world(cfg: WorldConfig, seed: int | None = None) -> dict:
+    """Sample one mission map.  Returns a device pytree:
+
+      victims   [n_cells] bool — ground-truth victim presence
+      severity  [n_cells] f32  — the cell's corruption severity, from a
+                smooth multi-octave field min-max normalized into
+                [severity_lo, severity_hi] (spatially correlated: fog
+                banks, not salt-and-pepper)
+      seed      []        i32  — the map's seed (observe_cells keys the
+                per-cell scene/weather streams off it, so stacked
+                multi-episode worlds stay independent)
+
+    ``seed`` overrides ``cfg.seed`` — the episode-stacking path draws
+    world i from ``seed + i`` while everything static stays shared.
+    """
+    s = cfg.seed if seed is None else seed
+    key = jax.random.fold_in(jax.random.PRNGKey(_SEED_LAYOUT), s)
+    kv, kf = jax.random.split(key)
+    placed = jax.random.choice(kv, cfg.n_cells, (cfg.n_victims,),
+                               replace=False)
+    victims = jnp.zeros((cfg.n_cells,), bool).at[placed].set(True)
+    field = _smooth_noise(kf, cfg.grid, octaves=cfg.field_octaves)
+    lo, hi = field.min(), field.max()
+    field = (field - lo) / jnp.maximum(hi - lo, 1e-9)
+    severity = cfg.severity_lo + (cfg.severity_hi - cfg.severity_lo) * field
+    return {
+        "victims": victims,
+        "severity": severity.reshape(-1).astype(jnp.float32),
+        "seed": jnp.asarray(s, jnp.int32),
+    }
+
+
+def observe_cell(cfg: WorldConfig, wseed, cell, has_victim, severity,
+                 look=0):
+    """Render ONE cell's aerial patch.  The SCENE (terrain, distractor
+    rock, victim placement/pose) is a pure function of (map seed, cell)
+    and persists across observations; the EXPOSURE — sensor noise and
+    transient weather (falling snow specks, frost crystals) — is keyed
+    by ``look`` as well, so an orbit maneuver or a revisit sees the
+    same ground truth under an independent exposure.  That is exactly
+    why a second look filters weather-induced false positives but not
+    persistent victims (rollout.py's flag-and-orbit routing)."""
+    scene = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(_SEED_SCENE), wseed), cell)
+    noise = jax.random.fold_in(scene, 1 + jnp.asarray(look))
+    img = make_image(cfg.sard(), scene, has_victim, noise_key=noise)
+    weather = jax.random.fold_in(jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(_SEED_WEATHER), wseed),
+        cell), look)
+    return CORRUPTIONS_IMAGE[cfg.corruption](img, weather, severity)
+
+
+def observe_cells(cfg: WorldConfig, worlds: dict, wid: jnp.ndarray,
+                  cells: jnp.ndarray, look=0) -> jnp.ndarray:
+    """Batched fleet observation: drone b (on world ``wid[b]``) looks at
+    ``cells[b]`` (exposure index ``look``, scalar or [B]).  worlds:
+    ``make_world`` pytrees stacked on a leading episode axis.  Returns
+    [B, H, W, 1] detector inputs.  Jittable — the rollout calls this
+    inside its device-resident episode scan."""
+    has = worlds["victims"][wid, cells].astype(jnp.float32)
+    sev = worlds["severity"][wid, cells]
+    seeds = worlds["seed"][wid]
+    look = jnp.broadcast_to(jnp.asarray(look, jnp.int32), cells.shape)
+    return jax.vmap(
+        lambda s, c, h, v, lk: observe_cell(cfg, s, c, h, v, lk)
+    )(seeds, cells, has, sev, look)
+
+
+def stack_worlds(cfg: WorldConfig, n_episodes: int) -> dict:
+    """``n_episodes`` independent maps (seeds cfg.seed … cfg.seed+E-1)
+    stacked leaf-wise — the fleet-scale rollout's world batch."""
+    worlds = [make_world(cfg, cfg.seed + e) for e in range(n_episodes)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *worlds)

@@ -18,17 +18,18 @@ from repro.serving.adaptive import (escalation_schedule, finalize,
                                     update_stats_streamed)
 from repro.serving.engine import (LMServingEngine, Request,
                                   SarServingEngine)
-from repro.serving.metrics import (RequestRecord, ServingMetrics,
-                                   decision_energy, energy_terms,
-                                   request_energy)
+from repro.serving.metrics import (DecisionCost, RequestRecord,
+                                   ServingMetrics, decision_cost,
+                                   decision_energy, decision_latency,
+                                   energy_terms, request_energy)
 from repro.serving.triage import (ACCEPT, ESCALATE, FLAG, TriagePolicy,
                                   decide, fixed_r_decide)
 
 __all__ = [
-    "ACCEPT", "ESCALATE", "FLAG", "LMServingEngine", "Request",
-    "RequestRecord", "SarServingEngine", "ServingMetrics", "TriagePolicy",
-    "decide", "decision_energy", "energy_terms", "escalation_schedule",
-    "finalize", "fixed_r_decide", "init_stats", "request_energy",
-    "stream_indices", "stream_selections", "update_stats",
-    "update_stats_streamed",
+    "ACCEPT", "DecisionCost", "ESCALATE", "FLAG", "LMServingEngine",
+    "Request", "RequestRecord", "SarServingEngine", "ServingMetrics",
+    "TriagePolicy", "decide", "decision_cost", "decision_energy",
+    "decision_latency", "energy_terms", "escalation_schedule", "finalize",
+    "fixed_r_decide", "init_stats", "request_energy", "stream_indices",
+    "stream_selections", "update_stats", "update_stats_streamed",
 ]

@@ -61,6 +61,57 @@ class RequestRecord:
         return self.done_s - self.arrival_s
 
 
+@dataclasses.dataclass(frozen=True)
+class DecisionCost:
+    """Frozen per-config decision cost coefficients — THE energy/latency
+    numbers of one triage decision on a given layer stack + placement.
+
+    Every consumer that charges a decision — the serving summaries
+    below AND the mission simulator's per-drone battery ledger
+    (repro/mission/rollout.py) — derives its numbers from one instance
+    of this struct, so the two accountings reconcile by construction
+    (tested in tests/test_mission.py) instead of by copy-pasted
+    constants.  Frozen + scalar fields: hashable, so jitted episode
+    builders can key their compile cache on it.
+
+    Affine model (exactly ``decision_energy``/``decision_latency``):
+        E(n) = e_fixed_J + n · e_per_sample_J
+        T(n) = t_fixed_s + n · t_per_sample_s
+    """
+    e_fixed_J: float          # one MVM sweep over every placed block
+    e_per_sample_J: float     # σε re-read of the Bayesian blocks
+    grng_cells_per_sample: float
+    t_fixed_s: float          # serial layer walk at n = 0
+    t_per_sample_s: float     # per-sample σε latency share
+
+    def decision_energy_J(self, n_samples):
+        return self.e_fixed_J + n_samples * self.e_per_sample_J
+
+    def decision_latency_s(self, n_samples):
+        return self.t_fixed_s + n_samples * self.t_per_sample_s
+
+    def grng_energy_aJ(self, n_samples):
+        return (self.grng_cells_per_sample * n_samples
+                * energy.GRNG_ENERGY_PER_SAMPLE * 1e18)
+
+
+def decision_cost(layers, tile_program=None,
+                  terms: dict | None = None) -> DecisionCost:
+    """Build the frozen per-decision cost struct for a layer stack.
+
+    Energy coefficients come from ``energy_terms`` (tilemap-true placed
+    blocks when ``tile_program`` is given); latency coefficients from
+    the §V-A serial layer walk (``decision_latency``'s math, factored
+    into its affine form)."""
+    t = terms if terms is not None else energy_terms(layers, tile_program)
+    n_bayes = sum(1 for l in layers if l.bayesian)
+    return DecisionCost(
+        e_fixed_J=t["e_fixed"], e_per_sample_J=t["e_per_sample"],
+        grng_cells_per_sample=t["cells_per_sample"],
+        t_fixed_s=len(layers) * energy.MVM_LATENCY,
+        t_per_sample_s=n_bayes * energy.MVM_LATENCY)
+
+
 def decision_latency(n_samples: float, layers) -> float:
     """Analytic per-decision latency on the FeFET engine (§V-A): one
     MVM per deterministic layer, (1 + n_samples) serial σε re-reads for
@@ -166,15 +217,15 @@ def decision_energy(n_samples: float, layers, tile_program=None,
     """
     # energy.inference_energy expects an integer-ish R; evaluate the
     # Bayesian terms at the *measured mean* sample count instead.
-    t = terms if terms is not None else energy_terms(layers, tile_program)
-    e_sigma = t["e_per_sample"] * n_samples
-    grng_samples = t["cells_per_sample"] * n_samples
+    # Routed through the frozen DecisionCost struct so any other
+    # consumer of the same struct (the mission battery ledger) charges
+    # provably identical numbers.
+    cost = decision_cost(layers, tile_program, terms=terms)
     return {
-        "energy_J": t["e_fixed"] + e_sigma,
-        "energy_sigma_J": e_sigma,
-        "grng_energy_aJ": grng_samples * energy.GRNG_ENERGY_PER_SAMPLE
-        * 1e18,
-        "grng_samples": grng_samples,
+        "energy_J": cost.decision_energy_J(n_samples),
+        "energy_sigma_J": n_samples * cost.e_per_sample_J,
+        "grng_energy_aJ": cost.grng_energy_aJ(n_samples),
+        "grng_samples": cost.grng_cells_per_sample * n_samples,
     }
 
 

@@ -1,0 +1,301 @@
+"""Mission-loop tests: determinism, ledger reconciliation, coverage
+monotonicity, verification-policy sanity, and device residency — plus
+the two satellite APIs the loop leans on (per-image severity-field
+corruptions in data/sard.py, the frozen DecisionCost struct in
+serving/metrics.py).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.sard import (CORRUPTIONS, SardConfig, batch_at, corrupt)
+from repro.mission import (MissionPolicy, UavConfig, WorldConfig,
+                           fly_mission)
+from repro.mission import rollout as mrollout
+from repro.mission import uav as muav
+from repro.models.sar_cnn import SarCnnConfig, init_sar_cnn
+from repro.serving.metrics import (RequestRecord, decision_cost,
+                                   decision_energy, decision_latency,
+                                   energy_terms, request_energy)
+
+WCFG = WorldConfig(grid=6, n_victims=3, seed=2)
+UCFG = UavConfig(n_drones=2, battery_J=120e-6)
+N_STEPS = 18
+
+
+@pytest.fixture(scope="module")
+def sar():
+    cfg = SarCnnConfig()
+    return init_sar_cnn(jax.random.PRNGKey(3), cfg), cfg
+
+
+def _fly(sar, pol=None, ucfg=UCFG, wcfg=WCFG, **kw):
+    params, cfg = sar
+    pol = pol or MissionPolicy()
+    kw.setdefault("n_steps", N_STEPS)
+    return fly_mission(wcfg, ucfg, pol, params=params, cfg=cfg, **kw)
+
+
+# ----------------------------------------------------------------------
+# satellite: per-image severity-field corruption API
+# ----------------------------------------------------------------------
+def test_corrupt_scalar_path_bit_identical():
+    """A scalar severity must route through the ORIGINAL batch
+    functions — bit-identical to the pre-field behaviour."""
+    data = batch_at(SardConfig(seed=7), 3, 6)
+    key = jax.random.PRNGKey(5)
+    for name, fn in CORRUPTIONS.items():
+        want = np.asarray(fn(data["images"], key, 1.3))
+        got = np.asarray(corrupt(data["images"], key, 1.3, name))
+        np.testing.assert_array_equal(got, want, err_msg=name)
+
+
+@pytest.mark.parametrize("name", ["fog", "motion"])
+def test_corrupt_per_image_matches_scalar_for_keyfree(name):
+    """For key-free corruptions a CONSTANT severity vector reproduces
+    the scalar batch path (frost/snow legitimately differ: the field
+    API draws independent weather per image)."""
+    data = batch_at(SardConfig(seed=7), 4, 5)
+    key = jax.random.PRNGKey(5)
+    want = np.asarray(CORRUPTIONS[name](data["images"], key, 0.8))
+    got = np.asarray(corrupt(data["images"], key,
+                             jnp.full((5,), 0.8), name))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_corrupt_per_image_severity_varies():
+    """Severity 0 reproduces the scalar severity-0 image while its
+    batchmates corrupt — the property the mission's severity field
+    needs.  (Motion at severity 0 still runs its 2-tap floor, exactly
+    like the scalar path.)"""
+    data = batch_at(SardConfig(seed=7), 1, 4)
+    key = jax.random.PRNGKey(9)
+    sev = jnp.asarray([0.0, 0.5, 1.0, 2.0])
+    for name in CORRUPTIONS:
+        out = np.asarray(corrupt(data["images"], key, sev, name))
+        want0 = np.asarray(
+            CORRUPTIONS[name](data["images"], key, 0.0))[0]
+        np.testing.assert_allclose(out[0], want0, rtol=1e-5, atol=1e-6,
+                                   err_msg=name)
+        assert np.abs(out[1:] - np.asarray(data["images"][1:])).max() \
+            > 1e-3, name
+
+
+# ----------------------------------------------------------------------
+# satellite: DecisionCost — one struct, every consumer
+# ----------------------------------------------------------------------
+def test_decision_cost_matches_metrics_functions():
+    from repro.hw import compile_network
+    from repro.launch.serve import sar_layer_shapes
+    layers = sar_layer_shapes(SarCnnConfig())
+    for program in (None, compile_network(layers)):
+        c = decision_cost(layers, program)
+        for n in (0.0, 4.0, 7.5, 20.0):
+            e = decision_energy(n, layers, tile_program=program)
+            assert e["energy_J"] == c.decision_energy_J(n)
+            assert e["grng_energy_aJ"] == c.grng_energy_aJ(n)
+            np.testing.assert_allclose(c.decision_latency_s(n),
+                                       decision_latency(n, layers),
+                                       rtol=1e-12)
+        # frozen + hashable: usable as a compile-cache key
+        assert hash(c) == hash(decision_cost(layers, program))
+
+
+# ----------------------------------------------------------------------
+# mission loop properties
+# ----------------------------------------------------------------------
+def test_mission_determinism(sar):
+    """Same seed ⇒ bit-identical trajectory, ledger, and maps."""
+    a = _fly(sar)
+    b = _fly(sar)
+    assert a.summary == b.summary
+    for k in a.logs:
+        np.testing.assert_array_equal(a.logs[k], b.logs[k], err_msg=k)
+    for k in a.maps:
+        np.testing.assert_array_equal(a.maps[k], b.maps[k], err_msg=k)
+
+
+def test_mission_ledger_reconciles_with_serving_metrics(sar):
+    """Σ ledger decision energy == serving/metrics request_energy of
+    the logged decision/sample counts — the same DecisionCost numbers,
+    no copy-pasted constants."""
+    _, cfg = sar
+    from repro.hw import compile_network
+    from repro.launch.serve import sar_layer_shapes
+    res = _fly(sar)
+    layers = sar_layer_shapes(cfg)
+    program = compile_network(layers)
+    assert mrollout.sar_mission_cost(cfg) == decision_cost(layers,
+                                                           program)
+    terms = energy_terms(layers, program)
+    active = res.logs["active"]
+    orbited = res.logs["orbited"]
+    spent = res.logs["spent"]
+    want = sum(
+        request_energy(
+            RequestRecord(rid=0, verdict=0,
+                          n_samples=int(spent[t, b]),
+                          n_decisions=1 + 2 * int(orbited[t, b]),
+                          arrival_s=0.0, admit_s=0.0, done_s=0.0),
+            layers, terms=terms)
+        for t, b in zip(*np.nonzero(active)))
+    got = float(res.logs["e_decision_J"].sum())
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+    assert res.summary["energy_decision_J"] == got
+    # and the ledger total splits exactly into its components
+    np.testing.assert_allclose(
+        res.summary["energy_total_J"],
+        res.summary["energy_decision_J"]
+        + res.summary["energy_verify_J"]
+        + res.summary["energy_orbit_J"]
+        + res.summary["energy_flight_J"], rtol=1e-5)
+
+
+def test_mission_coverage_monotone_in_energy_budget(sar):
+    """A larger battery replays the identical trajectory prefix and
+    flies further: coverage is non-decreasing in the budget."""
+    covs = []
+    for budget in (30e-6, 60e-6, 120e-6, 240e-6):
+        res = _fly(sar, ucfg=dataclasses.replace(UCFG, battery_J=budget),
+                   n_steps=24)
+        covs.append(res.summary["coverage"])
+    assert covs == sorted(covs), covs
+    assert covs[0] < covs[-1]     # the budget actually binds somewhere
+
+
+def test_mission_verifications_bounded_by_detections(sar):
+    """Every verification descends on a detection (µ-positive), every
+    orbit loiters over a flagged detection — counts can never exceed
+    the detection count; rescues require ground truth."""
+    res = _fly(sar, n_episodes=2)
+    logs = res.logs
+    detections = logs["active"] & (logs["prediction"] == 1)
+    assert (logs["verify"] <= detections).all()
+    assert (logs["orbited"] <= detections).all()
+    assert (logs["found"] <= logs["verify"]).all()
+    assert (logs["found"] <= logs["truth"]).all()
+    s = res.summary
+    assert s["verifications"] <= s["detections"]
+    assert s["orbits"] <= s["detections"]
+    assert s["false_verifications"] <= s["verifications"]
+    assert s["rescued"] <= s["victims"]
+
+
+def test_mission_deterministic_mode_verifies_every_detection(sar):
+    res = _fly(sar, pol=MissionPolicy(mode="deterministic"))
+    logs = res.logs
+    already_free = logs["verify"] | ~(logs["active"]
+                                      & (logs["prediction"] == 1))
+    # det verifies every detection except re-visits of cleared cells
+    fresh = (logs["active"] & (logs["prediction"] == 1)
+             & ~already_free)
+    assert fresh.sum() == 0
+    assert res.summary["orbits"] == 0
+    assert res.summary["mean_samples_per_decision"] == 0.0
+
+
+def test_mission_sectors_partition_grid():
+    for grid, d in ((6, 2), (7, 3), (12, 5)):
+        masks = muav.sector_masks(grid, d)
+        assert masks.shape == (d, grid * grid)
+        np.testing.assert_array_equal(masks.sum(0),
+                                      np.ones(grid * grid))
+
+
+def test_mission_infogain_planner_runs(sar):
+    res = _fly(sar, pol=MissionPolicy(planner="infogain"))
+    assert res.summary["coverage"] > 0.2
+    # infogain stays inside each drone's sector
+    masks = muav.sector_masks(WCFG.grid, UCFG.n_drones)
+    cells = res.logs["cell"]                     # [T, E·D]
+    for d in range(UCFG.n_drones):
+        assert masks[d, cells[:, d]].all()
+
+
+# ----------------------------------------------------------------------
+# device residency — asserted like test_decision_kernel checks the
+# engine: one host sync per rollout, and the compiled episode never
+# materializes a whole-mission image stream (everything per-step in
+# the scan) nor an [R, B, N] sample tensor on the fused path.
+# ----------------------------------------------------------------------
+def test_mission_rollout_single_dispatch(sar):
+    res = _fly(sar)
+    assert res.host_syncs == 1
+    res2 = _fly(sar, n_episodes=2)
+    assert res2.host_syncs == 1                  # episodes batch, not loop
+
+
+def test_mission_per_drone_chips_one_dispatch_per_die(sar):
+    """A heterogeneous fleet groups by die: one dispatch per distinct
+    chip, sectors merged exactly (every drone's ledger advances)."""
+    from repro.hw import VariationSpec, sample_instances
+    chip = sample_instances(11, 1, VariationSpec().scaled(1.5))[0]
+    res = _fly(sar, chips=[None, chip], n_steps=10)
+    assert res.host_syncs == 2
+    assert (res.logs["energy_J"][-1] > 0).all()
+    assert res.logs["active"][0].all()
+
+
+def test_mission_episode_hlo_stays_per_step(sar):
+    from repro.launch.hlo_analysis import materialized_shapes
+    from repro.mission import world as mworld
+    params, cfg = sar
+    pol = MissionPolicy()
+    chip = None
+    head, hcfg = mrollout._prepare_group_head(params, cfg, pol.triage,
+                                              chip, True)
+    cost = mrollout.sar_mission_cost(cfg)
+    n_steps, e = 12, 1
+    b = e * UCFG.n_drones
+    fn = mrollout._episode_fn(WCFG, UCFG, pol, cfg, hcfg, chip, cost,
+                              True, n_steps, b, cfg.n_classes)
+    worlds = mworld.stack_worlds(WCFG, e)
+    fleet0 = muav.init_fleet(UCFG, WCFG.grid, e)
+    bind = muav.fleet_bindings(UCFG, WCFG.grid, e)
+    maps0 = {"rescued_t": jnp.full((e, WCFG.n_cells), jnp.inf),
+             "cleared": jnp.zeros((e, WCFG.n_cells), jnp.int32),
+             "visited": jnp.zeros((e, WCFG.n_cells), jnp.int32),
+             "entropy": jnp.full((e, WCFG.n_cells), 0.7)}
+    bias = jnp.zeros((cfg.n_classes,), jnp.float32)
+    txt = fn.lower(params, head, bias, worlds, fleet0, maps0,
+                   bind).compile().as_text()
+    img_stream = n_steps * b * cfg.image_size**2
+    r, n = pol.triage.r_max, cfg.n_classes
+    for _, dims in materialized_shapes(txt):
+        numel = int(np.prod(dims)) if dims else 1
+        # no whole-mission image stream is ever live …
+        assert numel < img_stream, dims
+        # … and no [R, B, N] logit-sample tensor in any layout
+        assert set(dims) != {r, b, n} or len(dims) != 3, dims
+
+
+def test_mission_fused_matches_jnp(sar):
+    """Fused decision kernel and the materializing path fly the same
+    mission — verdict-for-verdict (the engine-level guarantee
+    test_decision_kernel.py pins at bench scale), with the float
+    ledger compared to fp32 tolerance (the two paths reduce the
+    logsumexp in different orders)."""
+    a = _fly(sar, fused=True)
+    b = _fly(sar, fused=False)
+    for k in ("verdict", "prediction", "spent", "verify", "found",
+              "orbited"):
+        np.testing.assert_array_equal(a.logs[k], b.logs[k], err_msg=k)
+    for k in ("energy_J", "time_s"):
+        np.testing.assert_allclose(a.logs[k], b.logs[k], rtol=1e-6,
+                                   err_msg=k)
+    for k, v in a.summary.items():
+        if isinstance(v, float):
+            np.testing.assert_allclose(v, b.summary[k], rtol=1e-6,
+                                       err_msg=k)
+        else:
+            assert v == b.summary[k], k
+
+
+def test_operating_point_bias_zero_without_chip(sar):
+    params, cfg = sar
+    bias = mrollout.operating_point_bias(params, cfg, None, None)
+    np.testing.assert_array_equal(bias, np.zeros((cfg.n_classes,)))

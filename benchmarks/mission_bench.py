@@ -87,6 +87,7 @@ def bench() -> list[tuple[str, float, str]]:
     out, report = [], {"knobs": knobs, "chip_seed": CHIP_SEED,
                        "world_seed": WORLD_SEED, "configs": {}}
     results: dict[str, dict] = {}
+    full_system = None          # ideal/bayes_adaptive, for metrics/trace
     for chip_tag, chip in chips.items():
         for mode in MODES:
             pol = MissionPolicy(mode=mode)
@@ -102,9 +103,18 @@ def bench() -> list[tuple[str, float, str]]:
             s = dict(res.summary)
             s["wall_s"] = wall
             s["host_syncs"] = res.host_syncs
+            # observability rider: per-die-group telemetry + online
+            # GRNG drift verdict, pulled at the existing die-group sync
+            if res.telemetry:
+                s["obs"] = {
+                    group: {"telemetry": t["telemetry"],
+                            "drift": t["drift"]}
+                    for group, t in res.telemetry.items()}
             name = f"{chip_tag}/{mode}"
             results[name] = s
             report["configs"][name] = s
+            if chip_tag == "ideal" and mode == "bayes_adaptive":
+                full_system = res
             out.append((
                 f"mission_{chip_tag}_{mode}",
                 wall * 1e6 / max(s["decisions"], 1),
@@ -148,6 +158,18 @@ def bench() -> list[tuple[str, float, str]]:
     text = json.dumps(report, indent=2, sort_keys=True, default=float)
     BENCH_JSON.write_text(text)
     (ART / "report.json").write_text(text)
+
+    if full_system is not None:
+        # metrics snapshot + per-drone Perfetto trace for the full
+        # system on the ideal die (CI artifacts)
+        from repro.obs.registry import mission_registry
+        from repro.obs.trace import mission_trace
+        reg = mission_registry(results["ideal/bayes_adaptive"],
+                               telemetry=full_system.telemetry,
+                               policy="bayes_adaptive", chip="ideal")
+        reg.write(str(ART / "metrics"))
+        (ART / "trace.json").write_text(
+            json.dumps(mission_trace(full_system.logs)))
 
     if not overridden:
         # regression gate — only at the pinned default scale, where the

@@ -206,6 +206,11 @@ def bench() -> list[tuple[str, float, str]]:
                 "energy_total_J": rec["energy_total_J"],
                 "grng_energy_per_decision_aJ":
                     rec["grng_energy_per_decision_aJ"],
+                # observability rider: device-resident telemetry pulled
+                # at the engine's existing drain point + the online
+                # GRNG drift verdict against the calibration reference
+                "grng_probe": (rec.get("telemetry") or {}).get("grng"),
+                "drift": rec.get("drift"),
             } for name, rec in results.items()
         },
         "speedups": {
@@ -217,6 +222,16 @@ def bench() -> list[tuple[str, float, str]]:
         },
     }
     BENCH_JSON.write_text(json.dumps(report, indent=2, sort_keys=True))
+
+    # Prometheus/JSON metrics snapshot for the fast-path config,
+    # uploaded next to BENCH_serving.json as a CI artifact.
+    from repro.obs.registry import serving_registry
+    ada = results["adaptive"]
+    reg = serving_registry(ada, telemetry=ada.get("telemetry"),
+                           drift=ada.get("drift"),
+                           arch="sar_cnn", config="adaptive")
+    ART.mkdir(parents=True, exist_ok=True)
+    reg.write(str(ART / "metrics"))
     return out
 
 

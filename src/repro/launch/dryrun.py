@@ -37,7 +37,10 @@ from repro.launch.hlo_analysis import analyze as hlo_analyze
 from repro.launch.mesh import make_production_mesh, mesh_context
 from repro.launch.steps import (jit_decode_step, jit_prefill_step,
                                 jit_train_step)
+from repro.obs.log import get_logger
 from repro.optim import AdamWConfig
+
+log = get_logger("dryrun")
 
 _DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
                 "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
@@ -133,7 +136,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_dev = mesh.devices.size
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
-    t0 = time.time()
+    t0 = time.perf_counter()
 
     with mesh_context(mesh):
         if shape.kind == "train":
@@ -148,18 +151,18 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             jitted, abstracts, _, cfg2 = jit_decode_step(
                 cfg, mesh, shape.seq_len, shape.global_batch)
         lowered = jitted.lower(*abstracts)
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
     hlo = compiled.as_text()
     loop_aware = hlo_analyze(hlo, n_dev)   # trip-count-corrected
     colls = loop_aware["collectives"]
-    print(compiled.memory_analysis())
-    print({k: v for k, v in cost.items()
-           if k in ("flops", "bytes accessed", "optimal_seconds")})
+    log.debug(str(compiled.memory_analysis()))
+    log.debug(str({k: v for k, v in cost.items()
+                   if k in ("flops", "bytes accessed", "optimal_seconds")}))
 
     # Useful-FLOP accounting (global, whole step).
     n_tokens = shape.global_batch * shape.seq_len
@@ -207,9 +210,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     suffix = f"__{tag}" if tag else ""
     path = out_dir / f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
     path.write_text(json.dumps(result, indent=2))
-    print(f"[dryrun] OK {arch} × {shape_name} × {mesh_name}"
-          f" (lower {t_lower:.1f}s, compile {t_compile:.1f}s)"
-          f" -> {path}")
+    log.info(f"OK {arch} × {shape_name} × {mesh_name}"
+             f" (lower {t_lower:.1f}s, compile {t_compile:.1f}s)"
+             f" -> {path}")
     return result
 
 
@@ -239,7 +242,7 @@ def main() -> None:
                 mesh_name = "pod2x16x16" if args.multi_pod else "pod16x16"
                 path = out_dir / f"{arch}__{shape_name}__{mesh_name}.json"
                 if args.skip_existing and path.exists():
-                    print(f"[dryrun] skip existing {path.name}")
+                    log.info(f"skip existing {path.name}")
                     continue
                 try:
                     run_cell(arch, shape_name, args.multi_pod, out_dir)
@@ -247,11 +250,11 @@ def main() -> None:
                     failures.append((arch, shape_name, repr(e)))
                     traceback.print_exc()
         if failures:
-            print(f"[dryrun] {len(failures)} FAILURES:")
+            log.error(f"{len(failures)} FAILURES:")
             for f in failures:
-                print("  ", f)
+                log.error(f"  {f}")
             raise SystemExit(1)
-        print("[dryrun] all cells OK")
+        log.info("all cells OK")
     else:
         assert args.arch and args.shape, "--arch/--shape or --all required"
         run_cell(args.arch, args.shape, args.multi_pod, out_dir,

@@ -58,11 +58,29 @@ def main() -> None:
                          "mission operating-point transfer")
     ap.add_argument("--no-fused", dest="fused", action="store_false",
                     default=True)
+    ap.add_argument("--train-steps", type=int, default=None,
+                    help="detector training steps (default: the shared "
+                         "1600-step detector; CI smoke passes the "
+                         "mission bench's 400 to reuse its cache)")
+    ap.add_argument("--no-telemetry", dest="telemetry",
+                    action="store_false", default=True,
+                    help="disable per-die-group device-resident "
+                         "telemetry + GRNG drift monitoring")
+    ap.add_argument("--trace", type=str, default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace JSON of the "
+                         "mission (per-drone tracks on the simulated "
+                         "clock) to PATH")
+    ap.add_argument("--metrics-out", type=str, default=None,
+                    metavar="PREFIX",
+                    help="write PREFIX.prom / PREFIX.json with the "
+                         "mission summary + per-die telemetry")
     args = ap.parse_args()
 
     from repro.mission import (MissionPolicy, UavConfig, WorldConfig,
                                fly_mission, trained_detector)
+    from repro.obs.log import get_logger
     from repro.serving import TriagePolicy
+    log = get_logger("mission")
 
     wcfg = WorldConfig(grid=args.grid, n_victims=args.victims,
                        seed=args.seed, corruption=args.corruption,
@@ -86,30 +104,61 @@ def main() -> None:
                      f"sev={args.chip_severity} "
                      f"{'UNCAL' if args.uncalibrated else 'cal'}]")
 
+    det_kw = {} if args.train_steps is None else \
+        {"steps": args.train_steps}
     params, cfg = trained_detector(corruption=args.corruption,
-                                   severity_hi=args.severity_hi)
+                                   severity_hi=args.severity_hi,
+                                   **det_kw)
     res = fly_mission(wcfg, ucfg, pol, params=params, cfg=cfg,
                       chips=chips, calibrated=not args.uncalibrated,
                       n_steps=args.steps, n_episodes=args.episodes,
-                      fused=args.fused)
+                      fused=args.fused, telemetry=args.telemetry)
     s = res.summary
-    print(f"[mission:{args.policy}/{args.planner}] "
-          f"{s['episodes']}x{s['n_drones']} drones on "
-          f"{s['grid']}x{s['grid']}{chip_note}: "
-          f"rescued {s['rescued']}/{s['victims']}, "
-          f"rescue delay {s['rescue_delay_s']:.0f}s, "
-          f"coverage {100*s['coverage']:.0f}%, "
-          f"false-verification rate "
-          f"{100*s['false_verification_rate']:.1f}% "
-          f"({s['false_verifications']}/{s['verifications']})")
-    print(f"  {s['decisions']} decisions, "
-          f"{s['mean_samples_per_decision']:.1f} samples/decision, "
-          f"{s['orbits']} orbits; energy "
-          f"{1e6*s['energy_total_J']:.0f} uJ "
-          f"(decisions {1e6*s['energy_decision_J']:.2f}, verify "
-          f"{1e6*s['energy_verify_J']:.0f}, flight "
-          f"{1e6*s['energy_flight_J']:.0f}); "
-          f"host syncs {res.host_syncs}")
+    log.info(
+        f"[{args.policy}/{args.planner}] "
+        f"{s['episodes']}x{s['n_drones']} drones on "
+        f"{s['grid']}x{s['grid']}{chip_note}: "
+        f"rescued {s['rescued']}/{s['victims']}, "
+        f"rescue delay {s['rescue_delay_s']:.0f}s, "
+        f"coverage {100*s['coverage']:.0f}%, "
+        f"false-verification rate "
+        f"{100*s['false_verification_rate']:.1f}% "
+        f"({s['false_verifications']}/{s['verifications']})")
+    log.info(
+        f"{s['decisions']} decisions, "
+        f"{s['mean_samples_per_decision']:.1f} samples/decision, "
+        f"{s['orbits']} orbits; energy "
+        f"{1e6*s['energy_total_J']:.0f} uJ "
+        f"(decisions {1e6*s['energy_decision_J']:.2f}, verify "
+        f"{1e6*s['energy_verify_J']:.0f}, flight "
+        f"{1e6*s['energy_flight_J']:.0f}); "
+        f"host syncs {res.host_syncs}")
+    for group, t in (res.telemetry or {}).items():
+        drift = t["drift"]
+        if drift.get("advisory"):
+            log.warning(drift["advisory"], die_group=group)
+        else:
+            log.info("die group healthy", die_group=group,
+                     z_mean=round(drift["z_mean"], 2),
+                     z_std=round(drift["z_std"], 2),
+                     decisions=t["telemetry"]["decisions"])
+
+    if args.trace:
+        import json
+        import os
+        from repro.obs.trace import mission_trace
+        d = os.path.dirname(args.trace)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(args.trace, "w") as f:
+            json.dump(mission_trace(res.logs), f)
+        log.info("trace written", path=args.trace)
+    if args.metrics_out:
+        from repro.obs.registry import mission_registry
+        reg = mission_registry(s, telemetry=res.telemetry,
+                               policy=args.policy, planner=args.planner)
+        prom, js = reg.write(args.metrics_out)
+        log.info("metrics written", prom=prom, json=js)
 
 
 if __name__ == "__main__":

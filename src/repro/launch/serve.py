@@ -42,8 +42,12 @@ from repro.configs import ARCHS, get_config
 from repro.core.energy import LayerShape
 from repro.data.tokens import TokenPipelineConfig, batch_at, stub_frames, \
     stub_image_embeds
+from repro.obs.log import get_logger
+from repro.obs.telemetry import TelemetryConfig
 from repro.serving import (LMServingEngine, Request, SarServingEngine,
                            ServingMetrics, TriagePolicy)
+
+log = get_logger("serve")
 
 
 def lm_layer_shapes(cfg) -> list:
@@ -66,13 +70,18 @@ def sar_layer_shapes(cfg) -> list:
 def serve(arch: str, *, smoke: bool = True, batch: int = 4,
           prompt_len: int = 16, gen_len: int = 8, n_requests: int | None = None,
           adaptive: bool = True, policy: TriagePolicy | None = None,
-          seed: int = 0, cache_margin: int = 4, fused: bool = True) -> dict:
+          seed: int = 0, cache_margin: int = 4, fused: bool = True,
+          telemetry: bool | TelemetryConfig = True,
+          tracer=None) -> dict:
     """LM serving through the engine. ``batch`` is the slot count.
 
     ``fused``: run escalation rounds through the fused Pallas decision
     kernel (kernels/decision_kernel.py — no [R, B, V] materialization);
     False selects the materializing ``mix_samples → update_stats``
-    path (verdict-identical)."""
+    path (verdict-identical).
+
+    ``telemetry``/``tracer``: obs/ device-resident telemetry (snapshot
+    under out["telemetry"]) and per-request span tracing."""
     cfg = get_config(arch, smoke=smoke)
     n_requests = n_requests or 2 * batch
     policy = policy or TriagePolicy()
@@ -100,10 +109,10 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
         jax_params_init(cfg, seed), cfg, n_slots=batch,
         prompt_len=prompt_len, cache_len=cache_len, policy=policy,
         adaptive_mode=adaptive, metrics=metrics, extras=extras,
-        fused=fused)
+        fused=fused, telemetry=telemetry, tracer=tracer)
 
     rid = 0
-    t0 = time.time()
+    t0 = time.perf_counter()
     for step in range((n_requests + batch - 1) // batch):
         prompts = np.asarray(batch_at(pipe, step)["tokens"])
         for i in range(min(batch, n_requests - rid)):
@@ -112,7 +121,7 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
                                   max_new_tokens=gen_len))
             rid += 1
     out = engine.run()
-    out["wall_s"] = time.time() - t0
+    out["wall_s"] = time.perf_counter() - t0
     out["tokens_per_s"] = out["decisions"] / out["wall_s"]
     out["host_syncs"] = engine.host_syncs
     out["flagged_fraction"] = out.get("flag_fraction", float("nan"))
@@ -164,7 +173,9 @@ def serve_sar(*, n_requests: int = 128, n_slots: int = 32,
               corrupt_frac: float = 0.0, corruption: str = "fog",
               params=None, cfg=None, seed: int = 0,
               chip_instance=None, calibrated: bool = True,
-              slot_axis: str | None = None, fused: bool = True) -> dict:
+              slot_axis: str | None = None, fused: bool = True,
+              telemetry: bool | TelemetryConfig = True,
+              tracer=None) -> dict:
     """SAR image-stream serving. Untrained params unless provided.
 
     ``chip_instance``: a hw.ChipInstance (or an int seed — one chip is
@@ -212,18 +223,31 @@ def serve_sar(*, n_requests: int = 128, n_slots: int = 32,
     engine = SarServingEngine(params, cfg, n_slots=n_slots, policy=policy,
                               adaptive_mode=adaptive, metrics=metrics,
                               head=head, hcfg=hcfg, chip=chip_instance,
-                              slot_axis=slot_axis, fused=fused)
+                              slot_axis=slot_axis, fused=fused,
+                              telemetry=telemetry, tracer=tracer)
     for r in make_sar_stream(n_requests, corrupt_frac=corrupt_frac,
                              corruption=corruption,
                              image_size=cfg.image_size):
         engine.submit(r)
-    t0 = time.time()
+    t0 = time.perf_counter()
     out = engine.run()
-    out["wall_s"] = time.time() - t0
+    out["wall_s"] = time.perf_counter() - t0
     out["host_syncs"] = engine.host_syncs
     out["host_syncs_per_decision"] = (engine.host_syncs
                                       / max(out["decisions"], 1))
     out["flagged_fraction"] = out.get("flag_fraction", float("nan"))
+    if engine.tcfg is not None and out.get("telemetry"):
+        # Online drift check against the deployment's calibration-time
+        # belief: the measured instance config when calibrated, the
+        # golden factory config otherwise (obs/drift docstring).
+        from repro.obs.drift import drift_status, reference_for
+        ref = reference_for(cfg, engine.hcfg,
+                            calibrated=(chip_instance is not None
+                                        and calibrated),
+                            probe_cells=engine.tcfg.probe_cells)
+        out["drift"] = drift_status(out["telemetry"], ref).to_dict()
+        if out["drift"]["advisory"]:
+            log.warning(out["drift"]["advisory"])
     return out
 
 
@@ -260,10 +284,27 @@ def main() -> None:
     ap.add_argument("--uncalibrated", action="store_true",
                     help="skip per-instance recalibration (golden "
                          "factory transform on the degraded chip)")
+    ap.add_argument("--no-telemetry", dest="telemetry",
+                    action="store_false", default=True,
+                    help="disable the device-resident obs/ telemetry "
+                         "(compiles the exact pre-telemetry graph)")
+    ap.add_argument("--trace", type=str, default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace JSON of the "
+                         "run's request spans to PATH")
+    ap.add_argument("--metrics-out", type=str, default=None,
+                    metavar="PREFIX",
+                    help="write PREFIX.prom (Prometheus text) and "
+                         "PREFIX.json with the run's metrics + "
+                         "telemetry snapshot")
     args = ap.parse_args()
     policy = TriagePolicy(conf_threshold=args.conf_threshold,
                           mi_threshold=args.mi_threshold,
                           r_min=args.r_min, r_max=args.r_max)
+
+    tracer = None
+    if args.trace:
+        from repro.obs.trace import Tracer
+        tracer = Tracer("repro-serving")
 
     if args.arch == "sar_cnn":
         chip = None
@@ -279,7 +320,8 @@ def main() -> None:
                         corruption=args.corruption,
                         chip_instance=chip,
                         calibrated=not args.uncalibrated,
-                        fused=args.fused)
+                        fused=args.fused, telemetry=args.telemetry,
+                        tracer=tracer)
         chip_note = ""
         if chip is not None:
             chip_note = (f" [chip seed={args.chip_instance} "
@@ -287,22 +329,47 @@ def main() -> None:
                          f"{'cal' if not args.uncalibrated else 'UNCAL'} "
                          f"area={out['tile_area_mm2']:.2f}mm2 "
                          f"util={out['tile_utilization']:.2f}]")
-        print(f"[serve:sar] {out['decisions']} decisions in "
-              f"{out['wall_s']:.2f}s ({out['decisions_per_s']:.1f}/s); "
-              f"mean samples/decision {out['mean_samples_per_decision']:.1f}; "
-              f"{100*out['flagged_fraction']:.1f}% flagged; "
-              f"GRNG {out['grng_energy_per_decision_aJ']:.0f} aJ/decision"
-              + chip_note)
+        log.info(
+            f"[sar] {out['decisions']} decisions in "
+            f"{out['wall_s']:.2f}s ({out['decisions_per_s']:.1f}/s); "
+            f"mean samples/decision {out['mean_samples_per_decision']:.1f}; "
+            f"{100*out['flagged_fraction']:.1f}% flagged; "
+            f"GRNG {out['grng_energy_per_decision_aJ']:.0f} aJ/decision"
+            + chip_note)
+        if out.get("drift"):
+            log.info("drift", drifted=out["drift"]["drifted"],
+                     z_mean=round(out["drift"]["z_mean"], 2),
+                     z_std=round(out["drift"]["z_std"], 2))
     else:
         out = serve(args.arch, smoke=args.smoke, batch=args.slots or 4,
                     prompt_len=args.prompt_len, gen_len=args.gen,
                     n_requests=args.requests, adaptive=not args.fixed,
-                    policy=policy, fused=args.fused)
-        print(f"[serve] {out['requests']} requests / {out['decisions']} "
-              f"tokens in {out['wall_s']:.2f}s "
-              f"({out['tokens_per_s']:.1f} tok/s); mean samples/token "
-              f"{out['mean_samples_per_decision']:.1f}; "
-              f"{100*out['flagged_fraction']:.1f}% flagged for verification")
+                    policy=policy, fused=args.fused,
+                    telemetry=args.telemetry, tracer=tracer)
+        log.info(
+            f"{out['requests']} requests / {out['decisions']} "
+            f"tokens in {out['wall_s']:.2f}s "
+            f"({out['tokens_per_s']:.1f} tok/s); mean samples/token "
+            f"{out['mean_samples_per_decision']:.1f}; "
+            f"{100*out['flagged_fraction']:.1f}% flagged for verification")
+
+    if tracer is not None:
+        import os
+        d = os.path.dirname(args.trace)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        tracer.export(args.trace)
+        log.info("trace written", path=args.trace,
+                 events=len(tracer.events))
+    if args.metrics_out:
+        from repro.obs.registry import serving_registry
+        reg = serving_registry(
+            {k: v for k, v in out.items()
+             if isinstance(v, (int, float)) and not isinstance(v, bool)},
+            telemetry=out.get("telemetry"), drift=out.get("drift"),
+            arch=args.arch)
+        prom, js = reg.write(args.metrics_out)
+        log.info("metrics written", prom=prom, json=js)
 
 
 if __name__ == "__main__":

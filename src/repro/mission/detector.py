@@ -26,6 +26,9 @@ import jax.numpy as jnp
 
 from repro.data.sard import SardConfig, batch_at, corrupt
 from repro.models.sar_cnn import SarCnnConfig, init_sar_cnn, train_loss
+from repro.obs.log import get_logger
+
+log = get_logger("mission.detector")
 
 ART = Path("artifacts/mission")
 TRAIN_STEPS = 1600
@@ -77,7 +80,7 @@ def trained_detector(cfg: SarCnnConfig | None = None,
                  "labels": batch["labels"]}
         params, opt, m = step_fn(params, opt, batch, jnp.int32(s))
         if s % 400 == 0:
-            print(f"[mission:detector] step {s} "
-                  f"ce={float(m['ce']):.4f} acc={float(m['acc']):.3f}")
+            log.info(f"step {s} ce={float(m['ce']):.4f} "
+                     f"acc={float(m['acc']):.3f}")
     save(ckpt_dir, steps, params)
     return params, cfg

@@ -49,6 +49,9 @@ from repro.mission import world as mworld
 from repro.mission.policy import MissionPolicy
 from repro.mission.uav import UavConfig
 from repro.mission.world import WorldConfig
+from repro.obs.telemetry import (TelemetryConfig, init_telemetry,
+                                 record_decisions)
+from repro.obs.telemetry import snapshot as telemetry_snapshot
 from repro.serving import adaptive
 from repro.serving.metrics import DecisionCost, decision_cost
 from repro.serving.triage import ACCEPT, FLAG
@@ -70,13 +73,20 @@ def sar_mission_cost(cfg) -> DecisionCost:
 @functools.lru_cache(maxsize=16)
 def _episode_fn(wcfg: WorldConfig, ucfg: UavConfig, pol: MissionPolicy,
                 snn_cfg, hcfg, chip, cost: DecisionCost, fused: bool,
-                n_steps: int, n_batch: int, n_classes: int):
+                n_steps: int, n_batch: int, n_classes: int,
+                tcfg: TelemetryConfig | None = None):
     """jit (params, head, logit_bias, worlds, fleet0, maps0, bind)
            -> (fleet, maps, logs [n_steps, n_batch] pytree).
 
     ``n_batch`` is the flattened episodes×group-drones batch — the
     decision kernel's B.  Cached on the frozen configs + the chip's
     identity, like every other pool builder in serving/engine.py.
+
+    With ``tcfg`` set (obs/telemetry), the episode takes a telemetry
+    pytree as an eighth argument and returns it as a fourth output: it
+    rides the scan carry (and the orbit ``lax.cond`` state) across all
+    ``n_steps``, so this die group's counters and GRNG probe moments
+    come home in the SAME single device pull as the logs.
     """
     from repro.serving.engine import _lm_token_fn, _sar_featurize_fn
 
@@ -88,15 +98,16 @@ def _episode_fn(wcfg: WorldConfig, ucfg: UavConfig, pol: MissionPolicy,
         schedule = (adaptive.escalation_schedule(tri)
                     if pol.mode == "bayes_adaptive" else (tri.r_max,))
         decide_fn = _lm_token_fn(hcfg, tri, pol.mode == "bayes_adaptive",
-                                 schedule, fused, n_batch, n_classes)
+                                 schedule, fused, n_batch, n_classes,
+                                 tcfg)
         if pol.flag_action == "orbit":
             orbit_fn = _lm_token_fn(hcfg, tri, False, (tri.r_max,),
-                                    fused, n_batch, n_classes)
+                                    fused, n_batch, n_classes, tcfg)
     r_max = jnp.uint32(tri.r_max)
     lane = jnp.arange(n_batch, dtype=jnp.uint32)
 
     def step(worlds, bind, params, head, logit_bias, carry, step_idx):
-        fleet, maps = carry
+        fleet, maps, telem = carry
         wid, cells = bind["wid"], fleet["pos"]
         active = fleet["energy_J"] < ucfg.battery_J
 
@@ -122,6 +133,17 @@ def _episode_fn(wcfg: WorldConfig, ucfg: UavConfig, pol: MissionPolicy,
             verdict = jnp.full((n_batch,), ACCEPT, jnp.int32)
             spent = jnp.zeros((n_batch,), jnp.int32)
             want_verify = pred == 1          # verify EVERY detection
+            if telem is not None:
+                # deterministic decisions have no sampled statistics:
+                # record the softmax-derived quality fields so verdict
+                # mix / entropy histograms stay comparable across modes
+                fin_lite = {"probs": jnp.exp(logp), "confidence": conf,
+                            "predictive_entropy": pred_ent,
+                            "mutual_information":
+                                jnp.zeros((n_batch,), jnp.float32),
+                            "n": jnp.zeros((n_batch,), jnp.int32)}
+                telem = record_decisions(telem, tcfg, fin_lite, verdict,
+                                         active)
         else:
             # The DETECTION is the hardware's deterministic output (the
             # X·µ' MVM it computes regardless); the posterior is the
@@ -132,8 +154,12 @@ def _episode_fn(wcfg: WorldConfig, ucfg: UavConfig, pol: MissionPolicy,
             # 3 decision slots per (step, drone): primary + 2 re-looks.
             s2 = jnp.uint32(3) * step_idx.astype(jnp.uint32) \
                 * jnp.uint32(n_batch)
-            verdict, fin, spent = decide_fn(rows, (s2 + lane) * r_max,
-                                            active)
+            if telem is None:
+                verdict, fin, spent = decide_fn(
+                    rows, (s2 + lane) * r_max, active)
+            else:
+                verdict, fin, spent, telem = decide_fn(
+                    rows, (s2 + lane) * r_max, active, telem)
             conf = fin["confidence"]
             pred_ent = fin["predictive_entropy"]
             want_verify = (verdict == ACCEPT) & (pred == 1)
@@ -149,13 +175,17 @@ def _episode_fn(wcfg: WorldConfig, ucfg: UavConfig, pol: MissionPolicy,
                 flagged = active & (verdict == FLAG) & (pred == 1)
 
                 def orbit(state):
-                    relook, conf, pred_ent, spent = state
+                    relook, conf, pred_ent, spent, telem = state
                     for j in (1, 2):
                         rows_j = look_at(3 * step_idx + j)
-                        _, fin_j, spent_j = orbit_fn(
-                            rows_j,
-                            (s2 + jnp.uint32(j * n_batch) + lane)
-                            * r_max, flagged)
+                        b_j = (s2 + jnp.uint32(j * n_batch) + lane) \
+                            * r_max
+                        if telem is None:
+                            _, fin_j, spent_j = orbit_fn(rows_j, b_j,
+                                                         flagged)
+                        else:
+                            _, fin_j, spent_j, telem = orbit_fn(
+                                rows_j, b_j, flagged, telem)
                         pred_j = jnp.argmax(
                             rows_j["y_mu"].astype(jnp.float32),
                             -1).astype(jnp.int32)
@@ -166,14 +196,14 @@ def _episode_fn(wcfg: WorldConfig, ucfg: UavConfig, pol: MissionPolicy,
                             flagged, fin_j["predictive_entropy"],
                             pred_ent)
                         spent = spent + spent_j
-                    return relook, conf, pred_ent, spent
+                    return relook, conf, pred_ent, spent, telem
 
                 # re-looks cost 2 more trunk sweeps + decisions — skip
                 # the whole branch on the (common) nothing-flagged step
-                relook, conf, pred_ent, spent = lax.cond(
+                relook, conf, pred_ent, spent, telem = lax.cond(
                     jnp.any(flagged), orbit, lambda s: s,
                     (jnp.zeros((n_batch,), bool), conf, pred_ent,
-                     spent))
+                     spent, telem))
                 orbited = flagged
                 want_verify = want_verify | (flagged & relook)
 
@@ -232,14 +262,20 @@ def _episode_fn(wcfg: WorldConfig, ucfg: UavConfig, pol: MissionPolicy,
                "false_verify": false_verify, "truth": truth,
                "e_decision_J": jnp.where(active, e_dec, 0.0),
                "energy_J": energy, "time_s": time_s}
-        return (fleet, maps), log
+        return (fleet, maps, telem), log
 
-    def episode(params, head, logit_bias, worlds, fleet0, maps0, bind):
-        (fleet, maps), logs = lax.scan(
+    # ``telem0=None`` keeps the pre-telemetry signature and return
+    # arity for callers that lower/execute the 7-argument form (None is
+    # an empty pytree, so the carry slot costs nothing).
+    def episode(params, head, logit_bias, worlds, fleet0, maps0, bind,
+                telem0=None):
+        (fleet, maps, telem), logs = lax.scan(
             functools.partial(step, worlds, bind, params, head,
                               logit_bias),
-            (fleet0, maps0), jnp.arange(n_steps, dtype=jnp.int32))
-        return fleet, maps, logs
+            (fleet0, maps0, telem0), jnp.arange(n_steps, dtype=jnp.int32))
+        if telem0 is None:
+            return fleet, maps, logs
+        return fleet, maps, logs, telem
 
     return jax.jit(episode)
 
@@ -254,6 +290,9 @@ class MissionResult:
     maps: dict           # merged {rescued_t, cleared, visited, entropy}
     worlds: dict         # numpy world pytree [E, ...]
     host_syncs: int      # blocking device→host pulls (one per die group)
+    # per die group: {"telemetry": obs snapshot, "drift": obs.drift
+    # status dict} — None when telemetry was disabled
+    telemetry: dict | None = None
 
 
 def _prepare_group_head(params, cfg, tri, chip, calibrated: bool):
@@ -317,7 +356,8 @@ def operating_point_bias(params, cfg, head, chip,
 def fly_mission(wcfg: WorldConfig, ucfg: UavConfig, pol: MissionPolicy,
                 *, params=None, cfg=None, chips=None,
                 calibrated: bool = True, n_steps: int = 96,
-                n_episodes: int = 1, fused: bool = True) -> MissionResult:
+                n_episodes: int = 1, fused: bool = True,
+                telemetry: bool | TelemetryConfig = True) -> MissionResult:
     """Run ``n_episodes`` independent missions for the whole fleet.
 
     ``chips``: None (ideal fleet), one hw.ChipInstance (whole fleet on
@@ -326,6 +366,12 @@ def fly_mission(wcfg: WorldConfig, ucfg: UavConfig, pol: MissionPolicy,
     dispatch per rollout.  Episodes are independent worlds (seeds
     wcfg.seed+e) batched into the decision kernel's slot dimension —
     fleet-scale batching, zero per-step host traffic.
+
+    ``telemetry``: per-die-group device-resident telemetry riding the
+    episode scan (obs/telemetry) — the snapshot and its GRNG drift
+    status (obs/drift, z-tested against the group's calibration-time
+    belief) land in ``MissionResult.telemetry`` without any extra host
+    pull; False compiles the exact pre-telemetry episode.
     """
     from repro.models.sar_cnn import SarCnnConfig, init_sar_cnn
     cfg = cfg or SarCnnConfig()
@@ -354,11 +400,16 @@ def fly_mission(wcfg: WorldConfig, ucfg: UavConfig, pol: MissionPolicy,
     for di, chip in enumerate(chips):
         groups.setdefault(id(chip), []).append(di)
 
+    if telemetry is True:
+        telemetry = TelemetryConfig()
+    tcfg = telemetry or None
+
     logs_full: dict[str, np.ndarray] = {}
     maps_merged = {k: np.asarray(v) for k, v in maps0.items()}
     fleet_final = {k: np.zeros_like(np.asarray(v))
                    for k, v in fleet0.items()}
     host_syncs = 0
+    telemetry_out: dict[str, dict] | None = {} if tcfg else None
     for drone_ids in groups.values():
         chip = chips[drone_ids[0]]
         head, hcfg = _prepare_group_head(params, cfg, pol.triage, chip,
@@ -369,13 +420,33 @@ def fly_mission(wcfg: WorldConfig, ucfg: UavConfig, pol: MissionPolicy,
                            for di in drone_ids])
         sub = lambda t: jax.tree.map(lambda x: x[rows], t)  # noqa: E731
         fn = _episode_fn(wcfg, ucfg, pol, cfg, hcfg, chip, cost, fused,
-                         n_steps, len(rows), cfg.n_classes)
-        fleet_g, maps_g, logs_g = fn(params, head, jnp.asarray(bias),
-                                     worlds, sub(fleet0), maps0,
-                                     sub(bind))
-        # the single blocking pull of this group's whole episode
-        fleet_g, maps_g, logs_g = jax.device_get(
-            (fleet_g, maps_g, logs_g))
+                         n_steps, len(rows), cfg.n_classes, tcfg)
+        if tcfg is None:
+            fleet_g, maps_g, logs_g = fn(params, head, jnp.asarray(bias),
+                                         worlds, sub(fleet0), maps0,
+                                         sub(bind))
+            # the single blocking pull of this group's whole episode
+            fleet_g, maps_g, logs_g = jax.device_get(
+                (fleet_g, maps_g, logs_g))
+        else:
+            telem0 = init_telemetry(tcfg, pol.triage.r_max)
+            fleet_g, maps_g, logs_g, telem_g = fn(
+                params, head, jnp.asarray(bias), worlds, sub(fleet0),
+                maps0, sub(bind), telem0)
+            # telemetry comes home in the SAME single pull as the logs
+            fleet_g, maps_g, logs_g, telem_g = jax.device_get(
+                (fleet_g, maps_g, logs_g, telem_g))
+            from repro.obs.drift import drift_status, reference_for
+            snap = telemetry_snapshot(telem_g, tcfg)
+            ref = reference_for(cfg, hcfg, calibrated=calibrated,
+                                probe_cells=tcfg.probe_cells)
+            gname = ("ideal" if chip is None else
+                     f"chip{chip.chip_id}_seed{chip.device_seed}")
+            telemetry_out[gname] = {
+                "drones": [int(di) for di in drone_ids],
+                "telemetry": snap,
+                "drift": drift_status(snap, ref).to_dict(),
+            }
         host_syncs += 1
         for k, v in logs_g.items():
             logs_full.setdefault(k, np.zeros((n_steps, e * d), v.dtype))
@@ -400,7 +471,8 @@ def fly_mission(wcfg: WorldConfig, ucfg: UavConfig, pol: MissionPolicy,
                          maps=maps_merged,
                          worlds={k: np.asarray(v)
                                  for k, v in worlds.items()},
-                         host_syncs=host_syncs)
+                         host_syncs=host_syncs,
+                         telemetry=telemetry_out)
 
 
 def mission_horizon_s(ucfg: UavConfig, cost: DecisionCost,

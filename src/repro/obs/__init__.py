@@ -1,0 +1,41 @@
+"""Observability for the serving + mission stack.
+
+The paper's value proposition is operational — write-free FeFET
+sampling holds calibration over device lifetime while triage verdicts
+gate costly UAV maneuvers — so the repo needs more than factory-time
+conformance (hw/calib, test_hw_conformance): it needs to SEE a
+deployment drift while serving.  This package adds that layer without
+touching the device-resident fast path:
+
+  telemetry  counters/histograms/GRNG sample moments carried as a
+             pytree THROUGH the engines' lax.while_loop / lax.scan
+             bodies and drained only at the existing retirement /
+             die-group sync points (zero added host syncs, zero
+             verdict changes — asserted in tests/test_obs.py)
+  trace      per-request span tracing on time.perf_counter clocks,
+             exported as Chrome-trace JSON (loadable in Perfetto)
+  drift      streaming conformance monitor: per-die z-scores of the
+             served GRNG probe moments against the calibration-time
+             Fig. 9 reference; emits recalibration advisories
+  registry   Prometheus-text / JSON metric exporters
+  log        structured logger (REPRO_LOG_LEVEL / REPRO_LOG_JSON)
+"""
+
+from repro.obs.drift import (DriftGate, DriftMonitor, DriftReference,
+                             DriftStatus, drift_status)
+from repro.obs.log import get_logger
+from repro.obs.registry import (MetricsRegistry, mission_registry,
+                                serving_registry)
+from repro.obs.telemetry import (TelemetryConfig, count_dispatch,
+                                 init_telemetry, merge_snapshots,
+                                 record_decisions, record_round,
+                                 snapshot)
+from repro.obs.trace import NULL_TRACER, Tracer, mission_trace
+
+__all__ = [
+    "DriftGate", "DriftMonitor", "DriftReference", "DriftStatus",
+    "MetricsRegistry", "NULL_TRACER", "TelemetryConfig", "Tracer",
+    "count_dispatch", "drift_status", "get_logger", "init_telemetry",
+    "merge_snapshots", "mission_registry", "mission_trace",
+    "record_decisions", "record_round", "serving_registry", "snapshot",
+]

@@ -1,0 +1,92 @@
+"""Structured logging for the launch drivers and benches.
+
+The repo's CLIs used ad-hoc ``print()``; this is the drop-in
+replacement: leveled, optionally JSON-lines (one object per line, for
+log shippers), tunable via environment so CI and operators control
+verbosity without touching code.
+
+  REPRO_LOG_LEVEL   debug | info | warning | error   (default info)
+  REPRO_LOG_JSON    1/true → JSON-lines records on stdout
+
+Text mode keeps the old ``[component] message`` shape so existing CI
+log greps and humans see what they always saw.  The env knobs are read
+at EMIT time (cheap dict lookups), so tests and long-lived processes
+can flip them without rebuilding loggers.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+_LEVELS = {"debug": 10, "info": 20, "warning": 30, "error": 40}
+
+
+def _threshold() -> int:
+    name = os.environ.get("REPRO_LOG_LEVEL", "info").strip().lower()
+    return _LEVELS.get(name, _LEVELS["info"])
+
+
+def _json_mode() -> bool:
+    raw = os.environ.get("REPRO_LOG_JSON", "").strip().lower()
+    return raw in ("1", "true", "yes", "on")
+
+
+class Logger:
+    """Leveled logger with key=value structured fields.
+
+    ``log.info("served", decisions=192)`` renders as
+    ``[name] served decisions=192`` in text mode and as a JSON object
+    in JSON-lines mode.  Numeric/bool/None fields pass through to JSON
+    verbatim; everything else is stringified.
+    """
+
+    def __init__(self, name: str, stream=None):
+        self.name = name
+        self._stream = stream
+
+    @property
+    def stream(self):
+        return self._stream if self._stream is not None else sys.stdout
+
+    def _emit(self, level: str, msg: str, fields: dict) -> None:
+        if _LEVELS[level] < _threshold():
+            return
+        if _json_mode():
+            rec = {"ts": time.time(), "level": level, "logger": self.name,
+                   "msg": msg}
+            for k, v in fields.items():
+                rec[k] = v if isinstance(v, (int, float, bool, str,
+                                             type(None))) else str(v)
+            print(json.dumps(rec), file=self.stream, flush=True)
+            return
+        kv = " ".join(f"{k}={v}" for k, v in fields.items())
+        tag = f"[{self.name}] " if self.name else ""
+        line = f"{tag}{msg}"
+        if kv:
+            line = f"{line} {kv}"
+        print(line, file=self.stream, flush=True)
+
+    def debug(self, msg: str, **fields) -> None:
+        self._emit("debug", msg, fields)
+
+    def info(self, msg: str, **fields) -> None:
+        self._emit("info", msg, fields)
+
+    def warning(self, msg: str, **fields) -> None:
+        self._emit("warning", msg, fields)
+
+    def error(self, msg: str, **fields) -> None:
+        self._emit("error", msg, fields)
+
+
+_LOGGERS: dict[str, Logger] = {}
+
+
+def get_logger(name: str) -> Logger:
+    """Process-cached logger for ``name`` (the ``[name]`` text prefix)."""
+    if name not in _LOGGERS:
+        _LOGGERS[name] = Logger(name)
+    return _LOGGERS[name]

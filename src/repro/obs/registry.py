@@ -1,0 +1,189 @@
+"""Metric registry with Prometheus-text and JSON exporters.
+
+Nothing here talks to a network — the serving loop is a benchmark
+process, not a daemon — so "export" means writing the standard
+Prometheus text exposition format (and a JSON twin) to files that CI
+uploads as artifacts and operators can scrape or diff.  Histograms are
+emitted with cumulative ``_bucket{le=...}`` counts per the exposition
+spec; ``_sum`` is approximated from bin midpoints since the
+device-resident histograms bin on device and never keep raw values.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+from typing import Any
+
+_BAD = {ord(c): "_" for c in "-. /"}
+
+
+def _name(n: str) -> str:
+    return n.translate(_BAD)
+
+
+def _labels(labels: dict[str, Any]) -> str:
+    if not labels:
+        return ""
+    inner = ",".join(f'{_name(str(k))}="{v}"' for k, v in labels.items())
+    return "{" + inner + "}"
+
+
+def _fmt(v: float) -> str:
+    if isinstance(v, float) and math.isnan(v):
+        return "NaN"
+    if v == float("inf"):
+        return "+Inf"
+    return repr(float(v)) if isinstance(v, float) else str(v)
+
+
+class MetricsRegistry:
+    """Ordered collection of counters, gauges, and histograms."""
+
+    def __init__(self, namespace: str = "repro"):
+        self.namespace = namespace
+        self._metrics: list[dict[str, Any]] = []
+
+    def _add(self, kind: str, name: str, value, help_: str,
+             labels: dict[str, Any]) -> None:
+        self._metrics.append({
+            "kind": kind, "name": f"{self.namespace}_{_name(name)}",
+            "value": value, "help": help_, "labels": dict(labels or {})})
+
+    def counter(self, name: str, value: float, help: str = "",
+                **labels) -> None:
+        self._add("counter", name, float(value), help, labels)
+
+    def gauge(self, name: str, value: float, help: str = "",
+              **labels) -> None:
+        self._add("gauge", name, float(value), help, labels)
+
+    def histogram(self, name: str, counts: list, edges: list,
+                  help: str = "", **labels) -> None:
+        """``counts`` has len(edges)-1 bins; edges are ascending."""
+        self._add("histogram", name,
+                  {"counts": [int(c) for c in counts],
+                   "edges": [float(e) for e in edges]}, help, labels)
+
+    def to_json(self) -> dict[str, Any]:
+        return {"namespace": self.namespace, "metrics": self._metrics}
+
+    def to_prometheus(self) -> str:
+        lines: list[str] = []
+        seen_header: set[str] = set()
+        for m in self._metrics:
+            name, kind = m["name"], m["kind"]
+            if name not in seen_header:
+                if m["help"]:
+                    lines.append(f"# HELP {name} {m['help']}")
+                lines.append(f"# TYPE {name} {kind}")
+                seen_header.add(name)
+            if kind in ("counter", "gauge"):
+                lines.append(f"{name}{_labels(m['labels'])} "
+                             f"{_fmt(m['value'])}")
+                continue
+            counts, edges = m["value"]["counts"], m["value"]["edges"]
+            cum, total, approx_sum = 0, 0, 0.0
+            for i, c in enumerate(counts):
+                cum += c
+                total += c
+                approx_sum += c * 0.5 * (edges[i] + edges[i + 1])
+                lb = dict(m["labels"]);  lb["le"] = _fmt(float(edges[i + 1]))
+                lines.append(f"{name}_bucket{_labels(lb)} {cum}")
+            lb = dict(m["labels"]);  lb["le"] = "+Inf"
+            lines.append(f"{name}_bucket{_labels(lb)} {cum}")
+            lines.append(f"{name}_sum{_labels(m['labels'])} "
+                         f"{_fmt(approx_sum)}")
+            lines.append(f"{name}_count{_labels(m['labels'])} {total}")
+        return "\n".join(lines) + "\n"
+
+    def write(self, prefix: str) -> tuple[str, str]:
+        """Write ``<prefix>.prom`` and ``<prefix>.json``; return paths."""
+        import os
+        d = os.path.dirname(prefix)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        prom, js = f"{prefix}.prom", f"{prefix}.json"
+        with open(prom, "w") as f:
+            f.write(self.to_prometheus())
+        with open(js, "w") as f:
+            json.dump(self.to_json(), f, indent=2)
+        return prom, js
+
+
+def add_summary(reg: MetricsRegistry, summary: dict[str, Any],
+                **labels) -> None:
+    """Map a ServingMetrics / mission summary's scalars to gauges."""
+    for k, v in summary.items():
+        if isinstance(v, bool) or not isinstance(v, (int, float)):
+            continue
+        reg.gauge(k, float(v), **labels)
+
+
+def add_telemetry(reg: MetricsRegistry, snap: dict[str, Any],
+                  **labels) -> None:
+    """Map an obs.telemetry snapshot into the registry."""
+    if not snap:
+        return
+    for k in ("rounds", "dispatches", "samples", "decisions"):
+        reg.counter(f"telemetry_{k}_total", snap[k], **labels)
+    for verdict, c in snap["verdicts"].items():
+        reg.counter("telemetry_verdicts_total", c, verdict=verdict,
+                    **labels)
+    r_hist = snap["r_hist"]
+    reg.histogram("telemetry_samples_at_verdict", r_hist,
+                  list(range(len(r_hist) + 1)),
+                  help="GRNG samples spent when the verdict landed",
+                  **labels)
+    reg.histogram("telemetry_confidence", snap["conf_hist"],
+                  snap["conf_edges"], **labels)
+    reg.histogram("telemetry_predictive_entropy", snap["ent_hist"],
+                  snap["ent_edges"], **labels)
+    reg.histogram("telemetry_mutual_information", snap["mi_hist"],
+                  snap["ent_edges"], **labels)
+    g = snap["grng"]
+    reg.gauge("grng_probe_samples", g["n"], **labels)
+    reg.gauge("grng_probe_sum_mean_uA", g["sum_mean_uA"], **labels)
+    reg.gauge("grng_probe_sum_std_uA", g["sum_std_uA"], **labels)
+
+
+def add_drift(reg: MetricsRegistry, status: dict[str, Any],
+              **labels) -> None:
+    """Map an obs.drift status dict into the registry."""
+    if not status:
+        return
+    reg.gauge("grng_drift_z_mean", status["z_mean"], **labels)
+    reg.gauge("grng_drift_z_std", status["z_std"], **labels)
+    reg.gauge("grng_drift_advisory", 1.0 if status["drifted"] else 0.0,
+              help="1 when recalibration is advised", **labels)
+
+
+def serving_registry(summary: dict[str, Any], *,
+                     telemetry: dict[str, Any] | None = None,
+                     drift: dict[str, Any] | None = None,
+                     **labels) -> MetricsRegistry:
+    """One-call registry for a serving run's summary + telemetry."""
+    reg = MetricsRegistry()
+    add_summary(reg, summary, job="serving", **labels)
+    if telemetry:
+        add_telemetry(reg, telemetry, job="serving", **labels)
+    if drift:
+        add_drift(reg, drift, job="serving", **labels)
+    return reg
+
+
+def mission_registry(summary: dict[str, Any], *,
+                     telemetry: dict[str, Any] | None = None,
+                     **labels) -> MetricsRegistry:
+    """Registry for a mission run; ``telemetry`` maps group name →
+    {"telemetry": snapshot, "drift": status}."""
+    reg = MetricsRegistry()
+    add_summary(reg, summary, job="mission", **labels)
+    for group, t in (telemetry or {}).items():
+        if t.get("telemetry"):
+            add_telemetry(reg, t["telemetry"], job="mission",
+                          die_group=group, **labels)
+        if t.get("drift"):
+            add_drift(reg, t["drift"], job="mission", die_group=group,
+                      **labels)
+    return reg

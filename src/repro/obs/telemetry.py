@@ -1,0 +1,242 @@
+"""Device-resident serving telemetry.
+
+The engines' fast path makes ~0.05 host syncs per decision: the SAR
+engine runs its whole escalation ladder inside one ``lax.while_loop``
+dispatch, and a mission episode is a single ``lax.scan`` pulled once
+per die group.  Naive instrumentation (a host callback, an extra
+``device_get`` per round) would destroy exactly the property the repo
+measures.  So telemetry lives ON the device: a small pytree of int32
+counters, histograms, and float32 GRNG sample moments that rides the
+loop carries and crosses to the host only when the caller was already
+syncing (retirement, die-group pull, end of bench).
+
+Contents of the pytree (see :func:`init_telemetry`):
+
+  rounds / dispatches / samples     scalar int32 counters
+  verdicts[3]                       ACCEPT / ESCALATE / FLAG at retire
+  r_hist[r_max+1]                   samples-at-verdict histogram
+  conf_hist / ent_hist / mi_hist    decision-quality histograms
+  grng_n, grng_sum, grng_sumsq      per-die Fig. 9 probe moments
+  ent_max                           static log(n_classes), for edges
+
+The GRNG probe re-reads the raw 16-cell array sums for a fixed block
+of ``probe_cells`` stream slots each round — the same measurement
+``hw/calib.measured_grng`` performs at calibration time — but riding
+the serving stream, so ``obs/drift`` can z-test the deployment against
+its calibration reference without any dedicated measurement pass.
+Probing is a gather + tiny matmul over a [probe_cells, 16] constant:
+far below the round's own ``sel`` / basis intermediates, so the HLO
+largest-intermediate is unchanged (asserted in tests/test_obs.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import clt_grng
+
+Telemetry = dict[str, jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryConfig:
+    """Static (hashable) telemetry shape — safe to key jit caches on.
+
+    probe_cells: stream slots re-read per round for GRNG drift moments
+                 (0 disables the probe; counters/histograms remain).
+    conf_bins:   confidence histogram bins over [0, 1].
+    ent_bins:    entropy and mutual-information bins over [0, ln K].
+    """
+
+    probe_cells: int = 32
+    conf_bins: int = 16
+    ent_bins: int = 16
+
+
+def init_telemetry(tcfg: TelemetryConfig, r_max: int) -> Telemetry:
+    """Zeroed telemetry pytree for a policy with ``r_max`` max samples."""
+    return {
+        "rounds": jnp.zeros((), jnp.int32),
+        "dispatches": jnp.zeros((), jnp.int32),
+        "samples": jnp.zeros((), jnp.int32),
+        "verdicts": jnp.zeros((3,), jnp.int32),
+        "r_hist": jnp.zeros((int(r_max) + 1,), jnp.int32),
+        "conf_hist": jnp.zeros((tcfg.conf_bins,), jnp.int32),
+        "ent_hist": jnp.zeros((tcfg.ent_bins,), jnp.int32),
+        "mi_hist": jnp.zeros((tcfg.ent_bins,), jnp.int32),
+        "grng_n": jnp.zeros((), jnp.float32),
+        "grng_sum": jnp.zeros((), jnp.float32),
+        "grng_sumsq": jnp.zeros((), jnp.float32),
+        "ent_max": jnp.zeros((), jnp.float32),
+    }
+
+
+def _probe_raw(tcfg: TelemetryConfig, grng_cfg, sel: jax.Array,
+               sample_idx: jax.Array, lane: jax.Array) -> jax.Array:
+    """Raw 16-cell array-sum currents [r, probe_cells] (µA) for one lane.
+
+    ``sel`` is the round's thermometer selections [r, B, 16] and
+    ``sample_idx`` the absolute stream indices [r, B]; both are already
+    materialized by the decision kernel, so the probe reuses them
+    instead of regenerating streams.  The probe block is rows
+    0..probe_cells-1, col 0 of the die — the same corner
+    ``hw/calib.measured_grng`` measures first.
+    """
+    p = tcfg.probe_cells
+    rows = jnp.arange(p, dtype=jnp.int32)
+    currents = clt_grng.device_currents(grng_cfg, rows, jnp.zeros_like(rows))
+    sel_lane = jnp.take(sel, lane, axis=1).astype(jnp.float32)  # [r, 16]
+    raw = sel_lane @ currents.T  # [r, p]
+    if grng_cfg.read_sigma > 0.0:
+        idx_lane = jnp.take(sample_idx, lane, axis=1)  # [r]
+        raw = raw + clt_grng.read_noise_at(
+            grng_cfg, rows[None, :], jnp.zeros((1, p), jnp.int32),
+            idx_lane[:, None].astype(jnp.int32))
+    return raw
+
+
+def record_round(telem: Telemetry, tcfg: TelemetryConfig, grng_cfg,
+                 sel: jax.Array, sample_idx: jax.Array,
+                 upd: jax.Array) -> Telemetry:
+    """Fold one decision round into ``telem`` (in-graph, no syncs).
+
+    ``upd`` marks slots whose statistics actually advance this round.
+    The probe follows the FIRST updating lane: inactive slots' streams
+    do not advance, so re-reading a stale lane each round would repeat
+    the same selections and bias the measured variance low.  When no
+    slot updates (fully idle round) the weight is 0 and the moments
+    are unchanged.
+    """
+    r = sel.shape[0]
+    any_upd = jnp.any(upd)
+    w = any_upd.astype(jnp.float32)
+    out = dict(telem)
+    out["rounds"] = telem["rounds"] + any_upd.astype(jnp.int32)
+    out["samples"] = telem["samples"] + r * jnp.sum(upd.astype(jnp.int32))
+    if tcfg.probe_cells > 0:
+        lane = jnp.argmax(upd)
+        raw = _probe_raw(tcfg, grng_cfg, sel, sample_idx, lane)
+        out["grng_n"] = telem["grng_n"] + w * raw.size
+        out["grng_sum"] = telem["grng_sum"] + w * jnp.sum(raw)
+        out["grng_sumsq"] = telem["grng_sumsq"] + w * jnp.sum(raw * raw)
+    return out
+
+
+def record_decisions(telem: Telemetry, tcfg: TelemetryConfig,
+                     fin: dict[str, jax.Array], verdict: jax.Array,
+                     decided: jax.Array) -> Telemetry:
+    """Fold retiring decisions into verdict/R/quality histograms.
+
+    ``decided`` masks the slots whose verdict is final this dispatch;
+    each decision must be recorded exactly once, so callers pass e.g.
+    ``active & (verdict != ESCALATE)`` after the escalation loop.
+    """
+    di = decided.astype(jnp.int32)
+    n_classes = fin["probs"].shape[-1]
+    ent_max = float(np.log(max(n_classes, 2)))
+    out = dict(telem)
+    out["verdicts"] = telem["verdicts"].at[jnp.clip(verdict, 0, 2)].add(di)
+    out["r_hist"] = telem["r_hist"].at[
+        jnp.clip(fin["n"], 0, telem["r_hist"].shape[0] - 1)].add(di)
+    conf_bin = jnp.clip(
+        (fin["confidence"] * tcfg.conf_bins).astype(jnp.int32),
+        0, tcfg.conf_bins - 1)
+    out["conf_hist"] = telem["conf_hist"].at[conf_bin].add(di)
+    ent_bin = jnp.clip(
+        (fin["predictive_entropy"] / ent_max * tcfg.ent_bins).astype(jnp.int32),
+        0, tcfg.ent_bins - 1)
+    out["ent_hist"] = telem["ent_hist"].at[ent_bin].add(di)
+    mi_bin = jnp.clip(
+        (fin["mutual_information"] / ent_max * tcfg.ent_bins).astype(jnp.int32),
+        0, tcfg.ent_bins - 1)
+    out["mi_hist"] = telem["mi_hist"].at[mi_bin].add(di)
+    out["ent_max"] = jnp.maximum(telem["ent_max"], jnp.float32(ent_max))
+    return out
+
+
+def count_dispatch(telem: Telemetry) -> Telemetry:
+    """Count one engine dispatch (one jitted call, however many rounds)."""
+    out = dict(telem)
+    out["dispatches"] = telem["dispatches"] + 1
+    return out
+
+
+def snapshot(telem: Telemetry, tcfg: TelemetryConfig) -> dict[str, Any]:
+    """Pull ``telem`` to the host and derive summary statistics.
+
+    This is the ONLY host sync in the module — call it at points that
+    already sync (engine drain, end of bench).  Returns plain python /
+    lists, JSON-ready.  GRNG raw moments are kept alongside the derived
+    mean/std so streaming monitors can keep folding snapshots.
+    """
+    host = jax.device_get(telem)
+    n = float(host["grng_n"])
+    g_mean = float(host["grng_sum"]) / n if n > 0 else float("nan")
+    if n > 1:
+        var = (float(host["grng_sumsq"]) - n * g_mean * g_mean) / (n - 1.0)
+        g_std = float(np.sqrt(max(var, 0.0)))
+    else:
+        g_std = float("nan")
+    ent_max = float(host["ent_max"])
+    if ent_max <= 0.0:
+        ent_max = float("nan")
+    verdicts = np.asarray(host["verdicts"], dtype=np.int64)
+    return {
+        "rounds": int(host["rounds"]),
+        "dispatches": int(host["dispatches"]),
+        "samples": int(host["samples"]),
+        "decisions": int(verdicts.sum()),
+        "verdicts": {"accept": int(verdicts[0]), "escalate": int(verdicts[1]),
+                     "flag": int(verdicts[2])},
+        "r_hist": np.asarray(host["r_hist"]).astype(int).tolist(),
+        "conf_hist": np.asarray(host["conf_hist"]).astype(int).tolist(),
+        "conf_edges": np.linspace(0.0, 1.0, tcfg.conf_bins + 1).tolist(),
+        "ent_hist": np.asarray(host["ent_hist"]).astype(int).tolist(),
+        "mi_hist": np.asarray(host["mi_hist"]).astype(int).tolist(),
+        "ent_edges": (np.linspace(0.0, 1.0, tcfg.ent_bins + 1)
+                      * (ent_max if np.isfinite(ent_max) else 1.0)).tolist(),
+        "ent_max": ent_max,
+        "grng": {
+            "probe_cells": tcfg.probe_cells,
+            "n": n,
+            "sum": float(host["grng_sum"]),
+            "sumsq": float(host["grng_sumsq"]),
+            "sum_mean_uA": g_mean,
+            "sum_std_uA": g_std,
+        },
+    }
+
+
+def merge_snapshots(snaps: list[dict[str, Any]]) -> dict[str, Any]:
+    """Combine host snapshots from several engines/groups of one die."""
+    if not snaps:
+        return {}
+    out = {k: v for k, v in snaps[0].items()}
+    for s in snaps[1:]:
+        for k in ("rounds", "dispatches", "samples", "decisions"):
+            out[k] = out[k] + s[k]
+        out["verdicts"] = {k: out["verdicts"][k] + s["verdicts"][k]
+                           for k in out["verdicts"]}
+        for k in ("r_hist", "conf_hist", "ent_hist", "mi_hist"):
+            a, b = out[k], s[k]
+            if len(a) < len(b):
+                a = a + [0] * (len(b) - len(a))
+            out[k] = [x + (b[i] if i < len(b) else 0)
+                      for i, x in enumerate(a)]
+        g, h = out["grng"], s["grng"]
+        out["grng"] = dict(g)
+        for k in ("n", "sum", "sumsq"):
+            out["grng"][k] = g[k] + h[k]
+    g = out["grng"]
+    n = g["n"]
+    if n > 1:
+        mean = g["sum"] / n
+        var = (g["sumsq"] - n * mean * mean) / (n - 1.0)
+        out["grng"]["sum_mean_uA"] = mean
+        out["grng"]["sum_std_uA"] = float(np.sqrt(max(var, 0.0)))
+    return out

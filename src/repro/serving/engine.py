@@ -86,6 +86,11 @@ from jax import lax
 
 from repro.core.sampling import (BayesHeadConfig, activation_basis,
                                  mix_samples)
+from repro.obs.telemetry import (TelemetryConfig, count_dispatch,
+                                 init_telemetry, record_decisions,
+                                 record_round)
+from repro.obs.telemetry import snapshot as telemetry_snapshot
+from repro.obs.trace import NULL_TRACER
 from repro.serving import adaptive, triage
 from repro.serving.metrics import RequestRecord, ServingMetrics
 from repro.serving.triage import ACCEPT, ESCALATE, FLAG, TriagePolicy
@@ -93,18 +98,24 @@ from repro.serving.triage import ACCEPT, ESCALATE, FLAG, TriagePolicy
 
 @dataclasses.dataclass
 class Request:
-    """One unit of admission: an image (SAR) or a prompt (LM)."""
+    """One unit of admission: an image (SAR) or a prompt (LM).
+
+    ``arrival_s`` is a wall-clock timestamp (when the request entered
+    the system); ``arrival_pc`` is the monotonic ``perf_counter`` twin
+    stamped at ``submit`` and used for latency intervals, so a wall
+    clock stepping backwards can never produce negative latencies."""
     rid: int
     payload: Any                      # [H,W,1] image | [L] token ids
     arrival_s: float = 0.0
     max_new_tokens: int = 8           # LM only
     meta: dict = dataclasses.field(default_factory=dict)
+    arrival_pc: float = 0.0
 
 
 @dataclasses.dataclass
 class _Slot:
     req: Request | None = None
-    admit_s: float = 0.0
+    admit_s: float = 0.0              # perf_counter stamp at admission
     n_samples: int = 0                # accumulated over the request
     n_decisions: int = 0              # tokens decided (LM) / 1 (SAR)
 
@@ -169,9 +180,14 @@ def _sar_featurize_fn(cfg, hcfg: BayesHeadConfig, chip,
 
 def _one_round(pool, stats, base, active, *, hcfg: BayesHeadConfig,
                policy: TriagePolicy, adaptive_mode: bool, r_step: int,
-               fused: bool, constrain):
+               fused: bool, constrain, tcfg: TelemetryConfig | None = None,
+               telem=None):
     """One escalation round: draw r_step per active slot, fold into the
-    running stats (fused kernel or jnp), finalize, decide."""
+    running stats (fused kernel or jnp), finalize, decide.
+
+    With ``tcfg``/``telem`` set, the round also folds the device-resident
+    telemetry pytree (round counters + GRNG probe moments) — pure extra
+    arithmetic on arrays already in the graph, never a sync."""
     grng = hcfg.grng
     sel = adaptive.stream_selections(grng, base, stats["n"], r_step)
     idx = adaptive.stream_indices(base, stats["n"], r_step)
@@ -189,13 +205,16 @@ def _one_round(pool, stats, base, active, *, hcfg: BayesHeadConfig,
                                 final=fin["n"] >= policy.r_max)
     else:
         verdict = triage.fixed_r_decide(fin, policy)
-    return stats, verdict, fin
+    if telem is not None:
+        telem = record_round(telem, tcfg, grng, sel, idx, active)
+    return stats, verdict, fin, telem
 
 
 @functools.lru_cache(maxsize=128)
 def _sar_round_fn(hcfg: BayesHeadConfig, policy: TriagePolicy,
                   adaptive_mode: bool, r_step: int, fused: bool,
-                  slot_axis: str | None):
+                  slot_axis: str | None,
+                  tcfg: TelemetryConfig | None = None):
     """jit (pool, stats, base, active) -> (stats, verdict, fin, rounds).
 
     Device-resident escalation: a ``lax.while_loop`` keeps drawing
@@ -204,53 +223,100 @@ def _sar_round_fn(hcfg: BayesHeadConfig, policy: TriagePolicy,
     moment any slot's verdict leaves ESCALATE (that slot must retire —
     a host decision) or the budget forces a decision.  ``rounds`` is
     the number of rounds executed this dispatch (every active slot drew
-    ``r_step · rounds`` samples)."""
+    ``r_step · rounds`` samples).
+
+    With ``tcfg`` set the signature becomes
+    (pool, stats, base, active, telem) -> (..., rounds, telem): the
+    telemetry pytree rides the while_loop carry and is donated back,
+    so enabling it changes neither dispatch count nor sync count.
+    Decisions are recorded once, after the loop: the loop only exits
+    when a verdict leaves ESCALATE (or the pool idles), so every
+    intermediate round is all-escalate by construction."""
     constrain = _constrainer(slot_axis)
     kw = dict(hcfg=hcfg, policy=policy, adaptive_mode=adaptive_mode,
               r_step=r_step, fused=fused, constrain=constrain)
 
-    def multi_round(pool, stats, base, active):
-        stats, verdict, fin = _one_round(pool, stats, base, active, **kw)
+    if tcfg is None:
+        def multi_round(pool, stats, base, active):
+            stats, verdict, fin, _ = _one_round(pool, stats, base,
+                                                active, **kw)
+
+            def cond(state):
+                _, v, _f, _k = state
+                return jnp.any(active) & ~jnp.any(active
+                                                  & (v != ESCALATE))
+
+            def body(state):
+                s, _v, _f, k = state
+                s, v, f, _ = _one_round(pool, s, base, active, **kw)
+                return (s, v, f, k + jnp.int32(1))
+
+            return lax.while_loop(cond, body,
+                                  (stats, verdict, fin, jnp.int32(1)))
+
+        return jax.jit(multi_round, donate_argnums=(1,))
+
+    kw_t = dict(kw, tcfg=tcfg)
+
+    def multi_round_t(pool, stats, base, active, telem):
+        stats, verdict, fin, telem = _one_round(pool, stats, base,
+                                                active, telem=telem,
+                                                **kw_t)
 
         def cond(state):
-            _, v, _f, _k = state
+            _, v, _f, _k, _t = state
             return jnp.any(active) & ~jnp.any(active & (v != ESCALATE))
 
         def body(state):
-            s, _v, _f, k = state
-            s, v, f = _one_round(pool, s, base, active, **kw)
-            return (s, v, f, k + jnp.int32(1))
+            s, _v, _f, k, t = state
+            s, v, f, t = _one_round(pool, s, base, active, telem=t,
+                                    **kw_t)
+            return (s, v, f, k + jnp.int32(1), t)
 
-        return lax.while_loop(cond, body,
-                              (stats, verdict, fin, jnp.int32(1)))
+        stats, verdict, fin, rounds, telem = lax.while_loop(
+            cond, body, (stats, verdict, fin, jnp.int32(1), telem))
+        decided = active & (verdict != ESCALATE)
+        telem = record_decisions(telem, tcfg, fin, verdict, decided)
+        telem = count_dispatch(telem)
+        return stats, verdict, fin, rounds, telem
 
-    return jax.jit(multi_round, donate_argnums=(1,))
+    return jax.jit(multi_round_t, donate_argnums=(1, 4))
 
 
 @functools.lru_cache(maxsize=128)
 def _lm_token_fn(hcfg: BayesHeadConfig, policy: TriagePolicy,
                  adaptive_mode: bool, schedule: tuple, fused: bool,
-                 n_slots: int, n_classes: int):
+                 n_slots: int, n_classes: int,
+                 tcfg: TelemetryConfig | None = None):
     """jit (abasis, base, active) -> (verdict, fin, spent).
 
     One whole token decision on device: zeroed stats, then the full
     geometric escalation schedule unrolled with ``lax.cond``-skipped
     rounds once every active slot has decided — stats advance only for
     active & undecided slots, exactly the old per-round host loop but
-    in a single dispatch."""
+    in a single dispatch.
+
+    With ``tcfg`` set the signature becomes
+    (abasis, base, active, telem) -> (..., spent, telem): telemetry
+    rides the ``lax.cond`` state (it skips with the round), and every
+    active slot's token verdict is final at schedule end (triage forces
+    a decision at r_max), so decisions are recorded once on ``active``."""
     grng = hcfg.grng
     identity = lambda st: st                                 # noqa: E731
 
-    def token_decision(abasis, base, active):
+    def token_decision(abasis, base, active, telem=None):
         stats = adaptive.init_stats(n_slots, n_classes)
         fin = adaptive.finalize(stats)
         verdict = jnp.full((n_slots,), ESCALATE, jnp.int32)
         spent = jnp.zeros((n_slots,), jnp.int32)
-        state = (stats, active, spent, verdict, fin)
+        # None is a valid (empty) pytree leaf-set: when telemetry is
+        # off the carry element costs nothing and the graph is the old
+        # one.
+        state = (stats, active, spent, verdict, fin, telem)
 
         for r_k in schedule:
             def run_round(st, _r=r_k):
-                stats, undec, spent, _v, _f = st
+                stats, undec, spent, _v, _f, telem = st
                 upd = active & undec
                 sel = adaptive.stream_selections(grng, base,
                                                  stats["n"], _r)
@@ -272,14 +338,23 @@ def _lm_token_fn(hcfg: BayesHeadConfig, policy: TriagePolicy,
                     verdict = triage.fixed_r_decide(fin, policy)
                 spent = spent + jnp.where(upd, _r, 0).astype(spent.dtype)
                 undec = undec & (verdict == ESCALATE)
-                return (stats, undec, spent, verdict, fin)
+                if telem is not None:
+                    telem = record_round(telem, tcfg, grng, sel, idx,
+                                         upd)
+                return (stats, undec, spent, verdict, fin, telem)
 
             state = lax.cond(jnp.any(state[1]), run_round, identity,
                              state)
-        _, _, spent, verdict, fin = state
-        return verdict, fin, spent
+        _, _, spent, verdict, fin, telem = state
+        if telem is None:
+            return verdict, fin, spent
+        telem = record_decisions(telem, tcfg, fin, verdict, active)
+        telem = count_dispatch(telem)
+        return verdict, fin, spent, telem
 
-    # no donation: the basis is consumed, not aliased into any output
+    # no donation: the basis is consumed, not aliased into any output,
+    # and this function also runs inside the mission episode jit where
+    # donation of a captured carry would warn.
     return jax.jit(token_decision)
 
 
@@ -287,7 +362,9 @@ class _EngineBase:
     """Queue + slot bookkeeping shared by both engines."""
 
     def __init__(self, n_slots: int, policy: TriagePolicy,
-                 metrics: ServingMetrics | None):
+                 metrics: ServingMetrics | None,
+                 telemetry: bool | TelemetryConfig = True,
+                 tracer=None):
         self.n_slots = n_slots
         self.policy = policy
         self.queue: deque[Request] = deque()
@@ -300,10 +377,22 @@ class _EngineBase:
         # host_syncs / decisions — the tentpole metric of the
         # device-resident escalation loop.
         self.host_syncs = 0
+        # Device-resident telemetry (obs/telemetry): rides the jitted
+        # round dispatches and is pulled only in telemetry_snapshot().
+        if telemetry is True:
+            telemetry = TelemetryConfig()
+        self.tcfg: TelemetryConfig | None = telemetry or None
+        self._telem = (init_telemetry(self.tcfg, policy.r_max)
+                       if self.tcfg else None)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        for i in range(n_slots):
+            self.tracer.name_thread(i + 1, f"slot {i}")
 
     def submit(self, request: Request) -> None:
         if request.arrival_s == 0.0:
             request.arrival_s = time.time()
+        if request.arrival_pc == 0.0:
+            request.arrival_pc = time.perf_counter()
         self.queue.append(request)
 
     @property
@@ -322,7 +411,7 @@ class _EngineBase:
                 extra_samples: int) -> None:
         slot = self.slots[slot_idx]
         req = slot.req
-        now = time.time()
+        now = time.perf_counter()
         self.metrics.mark(now)
         self.metrics.record(RequestRecord(
             rid=req.rid, verdict=int(verdict),
@@ -332,10 +421,24 @@ class _EngineBase:
             prediction=int(fin["prediction"][slot_idx]),
             confidence=float(fin["confidence"][slot_idx]),
             mutual_information=float(fin["mutual_information"][slot_idx]),
+            arrival_pc=req.arrival_pc,
         ))
+        if self.tracer.enabled:
+            start = slot.admit_s - self.tracer.t0
+            self.tracer.complete(
+                f"req {req.rid}", start, now - slot.admit_s,
+                tid=slot_idx + 1, verdict=int(verdict),
+                n_samples=slot.n_samples + extra_samples,
+                n_decisions=max(slot.n_decisions, 1))
         slot.req = None
         slot.n_samples = slot.n_decisions = 0
         self.free.append(slot_idx)
+
+    def telemetry_snapshot(self) -> dict | None:
+        """Host snapshot of the device-resident telemetry (one sync)."""
+        if self.tcfg is None or self._telem is None:
+            return None
+        return telemetry_snapshot(self._telem, self.tcfg)
 
 
 # ----------------------------------------------------------------------
@@ -363,7 +466,9 @@ class SarServingEngine(_EngineBase):
                  head: dict | None = None,
                  hcfg: BayesHeadConfig | None = None,
                  chip=None, slot_axis: str | None = None,
-                 fused: bool = True):
+                 fused: bool = True,
+                 telemetry: bool | TelemetryConfig = True,
+                 tracer=None):
         """``head``/``hcfg``: pre-deployed serving head + its config —
         the repro/hw chip-instance path (hw.calib.prepare_instance_head
         returns both; the rank-16 fast path below runs unchanged on the
@@ -384,8 +489,15 @@ class SarServingEngine(_EngineBase):
         decision kernel (kernels/decision_kernel.py) instead of the
         materializing ``mix_samples → update_stats`` path.  Verdicts
         are identical; the fused path never holds [R, B, N].
+
+        ``telemetry``: device-resident counters/histograms/GRNG probe
+        moments (obs/telemetry) riding the round dispatches — True for
+        the default TelemetryConfig, a TelemetryConfig to customize,
+        False to compile the exact pre-telemetry graph.  ``tracer``: an
+        obs.trace.Tracer collecting per-request/per-dispatch spans.
+        Neither adds host syncs or changes verdicts (tests/test_obs.py).
         """
-        super().__init__(n_slots, policy, metrics)
+        super().__init__(n_slots, policy, metrics, telemetry, tracer)
         from repro.core.bayes_layer import to_serving
         self.cfg = cfg
         self.adaptive_mode = adaptive_mode
@@ -405,7 +517,8 @@ class SarServingEngine(_EngineBase):
         self._scatter = _scatter_fn(slot_axis)
         self._stats_reset = _stats_reset_fn()
         self._round = _sar_round_fn(self.hcfg, policy, adaptive_mode,
-                                    self.r_step, fused, slot_axis)
+                                    self.r_step, fused, slot_axis,
+                                    self.tcfg)
         self.pool = None
         self.stats = None
         self.base = None
@@ -420,9 +533,10 @@ class SarServingEngine(_EngineBase):
         if take < self.n_slots:                       # fixed-shape batch
             pad = np.repeat(imgs[-1:], self.n_slots - take, axis=0)
             imgs = np.concatenate([imgs, pad], axis=0)
-        rows = self._featurize(jnp.asarray(imgs))
+        with self.tracer.span("featurize", n_admitted=take):
+            rows = self._featurize(jnp.asarray(imgs))
         idx = np.full((self.n_slots,), self.n_slots, np.int32)  # drop
-        now = time.time()
+        now = time.perf_counter()
         bases = self._next_bases(take)
         for j, req in enumerate(reqs):
             s = self.free.pop()
@@ -451,21 +565,35 @@ class SarServingEngine(_EngineBase):
             active = np.zeros((self.n_slots,), bool)
             for i, s in enumerate(self.slots):
                 active[i] = s.req is not None
-            self.stats, verdict, fin, rounds = self._round(
-                self.pool, self.stats, jnp.asarray(self.base),
-                jnp.asarray(active))
+            t_disp = self.tracer.now()
+            if self.tcfg is None:
+                self.stats, verdict, fin, rounds = self._round(
+                    self.pool, self.stats, jnp.asarray(self.base),
+                    jnp.asarray(active))
+            else:
+                (self.stats, verdict, fin, rounds,
+                 self._telem) = self._round(
+                    self.pool, self.stats, jnp.asarray(self.base),
+                    jnp.asarray(active), self._telem)
             # ONE blocking host↔device round trip per dispatch — the
             # while_loop above already ran every all-escalate round.
             verdict = np.asarray(verdict)
             fin = {k: np.asarray(v) for k, v in fin.items()}
             spent = self.r_step * int(rounds)
             self.host_syncs += 1
+            if self.tracer.enabled:
+                self.tracer.complete(
+                    "sar_rounds", t_disp, self.tracer.now() - t_disp,
+                    rounds=int(rounds), n_active=int(active.sum()),
+                    samples_per_slot=spent)
             for i in np.nonzero(active)[0]:
                 self.slots[i].n_samples += spent
                 if verdict[i] != ESCALATE:
                     self.slots[i].n_decisions = 1
                     # n_samples already accumulated; fin["n"] agrees
                     self._retire(i, verdict[i], fin, extra_samples=0)
+        if self.tcfg is not None:
+            self.metrics.attach_telemetry(self.telemetry_snapshot())
         return self.metrics.summary()
 
 
@@ -497,8 +625,10 @@ class LMServingEngine(_EngineBase):
                  policy: TriagePolicy = TriagePolicy(),
                  adaptive_mode: bool = True,
                  metrics: ServingMetrics = None, extras: dict | None = None,
-                 fused: bool = True):
-        super().__init__(n_slots, policy, metrics)
+                 fused: bool = True,
+                 telemetry: bool | TelemetryConfig = True,
+                 tracer=None):
+        super().__init__(n_slots, policy, metrics, telemetry, tracer)
         from repro.models.registry import get_api
         from repro.models.transformer import _head_serving
         assert cfg.bayesian_head, "adaptive serving needs the Bayesian head"
@@ -572,7 +702,7 @@ class LMServingEngine(_EngineBase):
 
         self._token_decision = _lm_token_fn(
             self.hcfg, policy, adaptive_mode, self.schedule, fused,
-            n_slots, cfg.vocab_padded)
+            n_slots, cfg.vocab_padded, self.tcfg)
         self.cache = None
         self.token = None
         self.hidden = None
@@ -617,9 +747,10 @@ class LMServingEngine(_EngineBase):
         lens = np.full((self.n_slots,), self.prompt_len, np.int32)
         for j, r in enumerate(reqs):
             toks[j], lens[j] = self._pad_prompt(r.payload)
-        new_cache, last_h = self._prefill(jnp.asarray(toks),
-                                          jnp.asarray(lens))
-        now = time.time()
+        with self.tracer.span("prefill", n_admitted=take):
+            new_cache, last_h = self._prefill(jnp.asarray(toks),
+                                              jnp.asarray(lens))
+        now = time.perf_counter()
         idx = np.full((self.n_slots,), self.n_slots, np.int32)
         for j, req in enumerate(reqs):
             s = self.free.pop()
@@ -659,14 +790,25 @@ class LMServingEngine(_EngineBase):
             active = np.array([s.req is not None for s in self.slots])
             # one token decision for every active slot, ONE dispatch:
             # the whole escalation schedule runs device-resident.
+            t_disp = self.tracer.now()
             abasis = self._basis(self.hidden)
             self.base = self._next_bases(self.n_slots)
-            verdict, fin, spent = self._token_decision(
-                abasis, jnp.asarray(self.base), jnp.asarray(active))
+            if self.tcfg is None:
+                verdict, fin, spent = self._token_decision(
+                    abasis, jnp.asarray(self.base), jnp.asarray(active))
+            else:
+                verdict, fin, spent, self._telem = self._token_decision(
+                    abasis, jnp.asarray(self.base), jnp.asarray(active),
+                    self._telem)
             verdict = np.asarray(verdict)
             spent = np.asarray(spent)
             fin = {k: np.asarray(v) for k, v in fin.items()}
             self.host_syncs += 1
+            if self.tracer.enabled:
+                self.tracer.complete(
+                    "lm_token", t_disp, self.tracer.now() - t_disp,
+                    n_active=int(active.sum()),
+                    samples=int(spent[active].sum()))
             self.token = jnp.asarray(
                 fin["prediction"].astype(np.int32)[:, None])
             for i in np.nonzero(active)[0]:
@@ -681,4 +823,6 @@ class LMServingEngine(_EngineBase):
             # advance the pool clock: committed tokens -> next hidden
             self.hidden, self.cache = self._decode_hidden(self.cache,
                                                           self.token)
+        if self.tcfg is not None:
+            self.metrics.attach_telemetry(self.telemetry_snapshot())
         return self.metrics.summary()

@@ -37,6 +37,17 @@ from repro.serving.triage import VERDICT_NAMES
 
 @dataclasses.dataclass
 class RequestRecord:
+    """One retired request.
+
+    Clocks: the engines stamp ``admit_s``/``done_s`` from
+    ``time.perf_counter`` and record the monotonic arrival twin in
+    ``arrival_pc`` — latency intervals are then immune to wall-clock
+    steps.  ``arrival_s`` stays wall-clock (it is semantically "when
+    did this arrive").  Records built with only the ``*_s`` trio (older
+    tests, hand-made records) keep working: the properties fall back to
+    ``arrival_s`` when ``arrival_pc`` is NaN, in which case all three
+    fields must share one clock as before.
+    """
     rid: int
     verdict: int                 # triage.ACCEPT or triage.FLAG
     n_samples: int               # GRNG samples spent on this decision
@@ -47,10 +58,16 @@ class RequestRecord:
     prediction: int = -1
     confidence: float = float("nan")
     mutual_information: float = float("nan")
+    arrival_pc: float = float("nan")
+
+    @property
+    def _arrival(self) -> float:
+        return (self.arrival_pc if math.isfinite(self.arrival_pc)
+                else self.arrival_s)
 
     @property
     def queue_latency_s(self) -> float:
-        return self.admit_s - self.arrival_s
+        return self.admit_s - self._arrival
 
     @property
     def service_latency_s(self) -> float:
@@ -58,7 +75,7 @@ class RequestRecord:
 
     @property
     def latency_s(self) -> float:
-        return self.done_s - self.arrival_s
+        return self.done_s - self._arrival
 
 
 @dataclasses.dataclass(frozen=True)
@@ -258,9 +275,15 @@ class ServingMetrics:
         self.extra = dict(extra or {})
         self.wall_start: float | None = None
         self.wall_end: float | None = None
+        # obs/telemetry snapshot attached by the engine at drain time;
+        # surfaced under summary()["telemetry"].
+        self.telemetry: dict | None = None
 
     def record(self, rec: RequestRecord) -> None:
         self.records.append(rec)
+
+    def attach_telemetry(self, snapshot: dict | None) -> None:
+        self.telemetry = snapshot
 
     def mark(self, t: float) -> None:
         if self.wall_start is None:
@@ -288,6 +311,8 @@ class ServingMetrics:
                                placed_decisions_per_s=nan,
                                placed_latency_replicated_s=nan)
             out.update(self._tile_summary())
+            if self.telemetry is not None:
+                out["telemetry"] = self.telemetry
             out.update(self.extra)
             return out
         n_dec = sum(r.n_decisions for r in self.records)
@@ -342,6 +367,8 @@ class ServingMetrics:
                                             self.tile_program,
                                             replicated=True)
         out.update(self._tile_summary())
+        if self.telemetry is not None:
+            out["telemetry"] = self.telemetry
         out.update(self.extra)
         return out
 

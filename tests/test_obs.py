@@ -1,0 +1,346 @@
+"""obs/ acceptance: telemetry must be free, tracing must not perturb
+verdicts, and the drift monitor must separate healthy from degraded.
+
+The load-bearing claims:
+
+  1. zero overhead — with telemetry enabled the SAR engine produces
+     bit-identical verdicts, the SAME number of host syncs, and the
+     compiled decision round's largest live intermediate is unchanged
+     (the probe is a gather + [probe_cells, 16] matmul, far below the
+     rank-16 basis);
+  2. the counters are CORRECT — snapshot decisions/samples/verdict mix
+     reconcile exactly against the engine's retired records;
+  3. request tracing exports valid Chrome/Perfetto JSON without
+     changing a single verdict;
+  4. the drift monitor stays quiet on a golden die and raises a
+     recalibration advisory on a σ-shifted one (unit level here; the
+     engine-level separation runs as the CI drift smoke via
+     ``python -m repro.obs.drift``);
+  5. the mission loop carries telemetry through its ``lax.scan`` with
+     log-identical trajectories and still one host sync per die group.
+"""
+
+import dataclasses
+import json
+from collections import Counter
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import clt_grng
+from repro.models.sar_cnn import SarCnnConfig, init_sar_cnn
+from repro.obs.drift import (DriftGate, DriftMonitor, DriftReference,
+                             drift_status)
+from repro.obs.log import Logger
+from repro.obs.registry import (MetricsRegistry, add_telemetry,
+                                serving_registry)
+from repro.obs.telemetry import TelemetryConfig
+from repro.obs.trace import NULL_TRACER, Tracer, mission_trace
+from repro.serving import TriagePolicy
+
+POLICY = TriagePolicy(conf_threshold=0.7, mi_threshold=0.05,
+                      r_min=4, r_max=20)
+
+
+@pytest.fixture(scope="module")
+def sar():
+    cfg = SarCnnConfig()
+    return init_sar_cnn(jax.random.PRNGKey(3), cfg), cfg
+
+
+def _run_sar(sar, n_requests, *, telemetry, tracer=None, n_slots=8):
+    from repro.launch.serve import make_sar_stream
+    from repro.serving import SarServingEngine
+    params, cfg = sar
+    eng = SarServingEngine(params, cfg, n_slots=n_slots, policy=POLICY,
+                          adaptive_mode=True, fused=True,
+                          telemetry=telemetry, tracer=tracer)
+    for r in make_sar_stream(n_requests, corrupt_frac=0.25,
+                             corruption="fog"):
+        eng.submit(r)
+    eng.run()
+    return eng
+
+
+def _records_match(eng_a, eng_b, n_requests):
+    recs_a = {r.rid: r for r in eng_a.metrics.records}
+    recs_b = {r.rid: r for r in eng_b.metrics.records}
+    assert set(recs_a) == set(recs_b) == set(range(n_requests))
+    for rid in recs_a:
+        a, b = recs_a[rid], recs_b[rid]
+        assert a.verdict == b.verdict, rid
+        assert a.prediction == b.prediction, rid
+        assert a.n_samples == b.n_samples, rid
+        np.testing.assert_allclose(a.confidence, b.confidence, atol=1e-6)
+
+
+# ----------------------------------------------------------------------
+# 1-2. telemetry: zero overhead + exact counter reconciliation
+# ----------------------------------------------------------------------
+def test_sar_telemetry_zero_overhead_and_counts(sar):
+    """Telemetry on vs off: bit-identical verdicts, equal host syncs,
+    and a snapshot that reconciles exactly against the retired
+    records."""
+    n = 24
+    eng_on = _run_sar(sar, n, telemetry=True)
+    eng_off = _run_sar(sar, n, telemetry=False)
+    _records_match(eng_on, eng_off, n)
+    # same dispatch pattern ⇒ same number of blocking host syncs
+    assert eng_on.host_syncs == eng_off.host_syncs
+    assert eng_off.telemetry_snapshot() is None
+
+    snap = eng_on.telemetry_snapshot()
+    recs = eng_on.metrics.records
+    assert snap["decisions"] == len(recs) == n
+    assert snap["samples"] == sum(r.n_samples for r in recs)
+    mix = Counter(r.verdict for r in recs)
+    assert snap["verdicts"]["accept"] == mix.get(0, 0)
+    assert snap["verdicts"]["escalate"] == mix.get(1, 0)
+    assert snap["verdicts"]["flag"] == mix.get(2, 0)
+    # R-at-verdict histogram totals one entry per decision, r ≤ r_max
+    assert sum(snap["r_hist"]) == n
+    assert len(snap["r_hist"]) == POLICY.r_max + 1
+    assert sum(snap["conf_hist"]) == n
+    # GRNG probe moments land near the golden die's array-sum stats
+    g = snap["grng"]
+    assert g["n"] > 0
+    assert abs(g["sum_mean_uA"] - 10.1) < 1.0
+    assert 0.5 < g["sum_std_uA"] < 2.0
+    # perf_counter interval clocks: latencies are non-negative
+    for r in recs:
+        assert r.latency_s >= 0.0
+        assert r.queue_latency_s >= 0.0
+
+
+def test_sar_round_hlo_footprint_unchanged_by_telemetry():
+    """The compiled fused decision round's largest live intermediate is
+    IDENTICAL with telemetry riding the while_loop carry — the probe
+    must never introduce a new largest array."""
+    from repro.core.sampling import BayesHeadConfig
+    from repro.launch.hlo_analysis import largest_intermediate_bytes
+    from repro.obs.telemetry import init_telemetry
+    from repro.serving import adaptive
+    from repro.serving.engine import _sar_round_fn
+
+    B, N = 8, 512
+    cfg = clt_grng.GRNGConfig()
+    hcfg = BayesHeadConfig(num_samples=POLICY.r_max, mode="rank16",
+                           grng=cfg, compute_dtype=jnp.float32,
+                           hoist_basis=True)
+    pool = {"y_mu": jnp.zeros((B, N)), "x_sigma": jnp.zeros((B, N)),
+            "m": jnp.zeros((B, N, 16))}
+    stats = adaptive.init_stats(B, N)
+    base = jnp.zeros((B,), jnp.uint32)
+    active = jnp.ones((B,), bool)
+
+    fn0 = _sar_round_fn(hcfg, POLICY, True, POLICY.r_min, True, None)
+    txt0 = fn0.lower(pool, stats, base, active).compile().as_text()
+
+    tcfg = TelemetryConfig()
+    telem = init_telemetry(tcfg, POLICY.r_max)
+    fn1 = _sar_round_fn(hcfg, POLICY, True, POLICY.r_min, True, None,
+                        tcfg)
+    txt1 = fn1.lower(pool, stats, base, active,
+                     telem).compile().as_text()
+    assert (largest_intermediate_bytes(txt1)
+            == largest_intermediate_bytes(txt0))
+
+
+# ----------------------------------------------------------------------
+# 3. request tracing
+# ----------------------------------------------------------------------
+def test_tracer_chrome_export_and_verdict_identity(sar, tmp_path):
+    n = 16
+    tracer = Tracer("test-serving")
+    eng_t = _run_sar(sar, n, telemetry=True, tracer=tracer)
+    eng_0 = _run_sar(sar, n, telemetry=True, tracer=None)
+    _records_match(eng_t, eng_0, n)
+    assert eng_0.tracer is NULL_TRACER and not NULL_TRACER.enabled
+
+    doc = tracer.to_chrome()
+    evs = doc["traceEvents"]
+    spans = [e for e in evs if e.get("ph") == "X"]
+    # one complete span per retired request + per-dispatch spans
+    req_spans = [e for e in spans if e["name"].startswith("req ")]
+    assert len(req_spans) == n
+    assert any(e["name"] == "sar_rounds" for e in spans)
+    assert any(e["name"] == "featurize" for e in spans)
+    for e in spans:
+        assert e["dur"] >= 0.0 and e["ts"] >= 0.0
+    for e in req_spans:
+        assert e["args"]["verdict"] in (0, 1, 2)
+        assert e["args"]["n_samples"] >= POLICY.r_min
+
+    path = tmp_path / "trace.json"
+    tracer.export(str(path))
+    loaded = json.loads(path.read_text())
+    assert loaded["traceEvents"]
+
+
+# ----------------------------------------------------------------------
+# 4. drift monitor
+# ----------------------------------------------------------------------
+def _stream_moments(grng_cfg, probe_cells=32, n_samples=40):
+    raw = np.asarray(clt_grng.raw_sums(grng_cfg, probe_cells, 1,
+                                       n_samples), np.float64)
+    return float(raw.size), float(raw.sum()), float((raw * raw).sum())
+
+
+def test_drift_monitor_golden_quiet_shifted_fires():
+    cfg = clt_grng.GRNGConfig()
+    ref = DriftReference.measure(cfg, probe_cells=32, n_samples=256)
+    assert abs(ref.sum_mean_uA - cfg.sum_mean) < 1.0
+
+    mon = DriftMonitor(ref)
+    mon.observe(*_stream_moments(cfg))
+    st = mon.status()
+    assert st.ok and not st.drifted and st.advisory is None
+    assert abs(st.z_mean) < 5.0 and abs(st.z_std) < 5.0
+
+    # σ-shifted die, golden belief: the monitor must fire with an
+    # advisory that points at the hw/calib recalibration path
+    shifted = dataclasses.replace(cfg, i_lo=cfg.i_lo * 1.15,
+                                  delta_i=cfg.delta_i * 1.2)
+    mon2 = DriftMonitor(ref)
+    mon2.observe(*_stream_moments(shifted))
+    st2 = mon2.status()
+    assert st2.drifted and not st2.ok
+    assert "recalibration" in st2.advisory
+    assert max(abs(st2.z_mean), abs(st2.z_std)) > DriftGate().z_gate
+
+    # round-trip: to_dict is JSON-ready and re-judgeable
+    d = st2.to_dict()
+    json.dumps(d)
+    ref2 = DriftReference(**d["reference"])
+    assert ref2 == ref
+
+
+def test_drift_min_samples_gate():
+    cfg = clt_grng.GRNGConfig()
+    ref = DriftReference.measure(cfg, probe_cells=4, n_samples=64)
+    # far-off moments, but only n=8 samples: the gate must hold fire
+    st = drift_status({"n": 8.0, "sum": 8 * 25.0, "sumsq": 8 * 626.0},
+                      ref, DriftGate(min_samples=256))
+    assert st.ok and not st.drifted and np.isnan(st.z_mean)
+    # same moments past min_samples: fires
+    st2 = drift_status({"n": 512.0, "sum": 512 * 25.0,
+                        "sumsq": 512 * 626.0}, ref,
+                       DriftGate(min_samples=256))
+    assert st2.drifted
+
+
+# ----------------------------------------------------------------------
+# 5. mission: telemetry rides the scan, trajectories untouched
+# ----------------------------------------------------------------------
+def test_mission_telemetry_identity_and_residency(sar):
+    from repro.mission import MissionPolicy, UavConfig, WorldConfig, \
+        fly_mission
+    params, cfg = sar
+    wcfg = WorldConfig(grid=6, n_victims=3, seed=2)
+    ucfg = UavConfig(n_drones=2, battery_J=120e-6)
+    pol = MissionPolicy()
+    on = fly_mission(wcfg, ucfg, pol, params=params, cfg=cfg,
+                     n_steps=18, telemetry=True)
+    off = fly_mission(wcfg, ucfg, pol, params=params, cfg=cfg,
+                      n_steps=18, telemetry=False)
+    assert on.summary == off.summary
+    for k in on.logs:
+        np.testing.assert_array_equal(on.logs[k], off.logs[k], err_msg=k)
+    # still exactly one host sync per die group, telemetry riding along
+    assert on.host_syncs == off.host_syncs == 1
+    assert off.telemetry is None
+
+    t = on.telemetry["ideal"]
+    snap, drift = t["telemetry"], t["drift"]
+    assert snap["decisions"] > 0
+    # inside the scan, "dispatches" counts decision-kernel invocations
+    # (look + orbit rounds), not host round trips — host_syncs above is
+    # the residency claim
+    assert snap["dispatches"] >= 1
+    # golden die serving its factory belief: no advisory
+    assert not drift["drifted"] and drift["advisory"] is None
+
+    # post-hoc Perfetto trace on the simulated clock: one span per
+    # active drone-step
+    doc = mission_trace(on.logs)
+    spans = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+    assert len(spans) == int(np.asarray(on.logs["active"]).sum())
+    json.dumps(doc)
+
+
+# ----------------------------------------------------------------------
+# satellites: structured logging + metric exporters + clock fallback
+# ----------------------------------------------------------------------
+def test_logger_levels_and_json_mode(capsys, monkeypatch):
+    monkeypatch.delenv("REPRO_LOG_LEVEL", raising=False)
+    monkeypatch.delenv("REPRO_LOG_JSON", raising=False)
+    log = Logger("t")
+    log.debug("hidden")
+    log.info("served", decisions=192)
+    out = capsys.readouterr().out
+    assert "hidden" not in out
+    assert "[t] served decisions=192" in out
+
+    monkeypatch.setenv("REPRO_LOG_LEVEL", "error")
+    log.warning("also hidden")
+    assert capsys.readouterr().out == ""
+
+    monkeypatch.setenv("REPRO_LOG_LEVEL", "debug")
+    monkeypatch.setenv("REPRO_LOG_JSON", "1")
+    log.debug("drained", n=3, obj={"a": 1})
+    rec = json.loads(capsys.readouterr().out)
+    assert rec["level"] == "debug" and rec["logger"] == "t"
+    assert rec["msg"] == "drained" and rec["n"] == 3
+    assert isinstance(rec["obj"], str)   # non-scalars stringified
+
+
+def test_registry_prometheus_exposition(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("decisions_total", 192, job="serving")
+    reg.gauge("flag_fraction", 0.25)
+    reg.histogram("confidence", [5, 10, 9], [0.0, 0.5, 0.8, 1.0])
+    text = reg.to_prometheus()
+    assert "# TYPE repro_decisions_total counter" in text
+    assert 'repro_decisions_total{job="serving"} 192' in text
+    # cumulative buckets, +Inf bucket equals _count
+    assert 'repro_confidence_bucket{le="0.5"} 5' in text
+    assert 'repro_confidence_bucket{le="0.8"} 15' in text
+    assert 'repro_confidence_bucket{le="+Inf"} 24' in text
+    assert "repro_confidence_count 24" in text
+
+    prom, js = reg.write(str(tmp_path / "m"))
+    assert json.loads(open(js).read())["metrics"]
+    assert open(prom).read() == text
+
+
+def test_serving_registry_from_engine_snapshot(sar):
+    eng = _run_sar(sar, 16, telemetry=True)
+    snap = eng.telemetry_snapshot()
+    cfg = clt_grng.GRNGConfig()
+    ref = DriftReference.measure(cfg, probe_cells=32, n_samples=64)
+    st = drift_status(snap, ref)
+    reg = serving_registry(eng.metrics.summary(), telemetry=snap,
+                           drift=st.to_dict(), arch="sar_cnn")
+    text = reg.to_prometheus()
+    assert "repro_telemetry_decisions_total" in text
+    assert "repro_grng_drift_z_mean" in text
+    assert 'verdict="accept"' in text
+    json.dumps(reg.to_json())
+
+    # add_telemetry tolerates an empty snapshot (disabled engines)
+    add_telemetry(MetricsRegistry(), {})
+
+
+def test_request_record_clock_fallback():
+    from repro.serving.metrics import RequestRecord
+    # old-style record (wall clocks only): latency math still works
+    r = RequestRecord(rid=0, verdict=0, n_samples=4, n_decisions=1,
+                      arrival_s=10.0, admit_s=11.0, done_s=12.0)
+    assert r.queue_latency_s == 1.0 and r.latency_s == 2.0
+    # perf_counter arrival wins when present
+    r2 = RequestRecord(rid=0, verdict=0, n_samples=4, n_decisions=1,
+                       arrival_s=99.0, admit_s=11.0, done_s=12.0,
+                       arrival_pc=10.5)
+    assert r2.queue_latency_s == 0.5 and r2.latency_s == 1.5

@@ -1,0 +1,117 @@
+"""Append-only benchmark history: every bench run leaves a record.
+
+BENCH_*.json are overwritten each run, which makes them snapshots, not
+a trajectory.  This module gives every bench run a durable line in
+repo-root ``BENCH_history.jsonl``: one schema-versioned JSON record per
+(bench module, run) carrying the git SHA, a backend fingerprint (the
+honesty bit: CPU interpret-mode numbers must never be compared against
+compiled-backend numbers), and the run's key metrics.  ``regress.py``
+reads the same flat metric namespace to gate regressions;
+``benchmarks/run.py`` appends a record per module automatically.
+
+Record schema (v1):
+    {"schema": 1, "bench": "<module>", "ts": "<iso8601 utc>",
+     "git_sha": "<sha or null>",
+     "fingerprint": {"backend", "device_kind", "jax", "python",
+                     "interpret_mode"},
+     "metrics": {...}}
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+from typing import Any
+
+SCHEMA_VERSION = 1
+HISTORY_PATH = Path("BENCH_history.jsonl")
+
+
+def git_sha() -> str | None:
+    """Current commit SHA, or None outside a git checkout."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True,
+            text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)))
+        return out.stdout.strip() if out.returncode == 0 else None
+    except Exception:  # noqa: BLE001 — no git binary
+        return None
+
+
+def backend_fingerprint() -> dict[str, Any]:
+    """What hardware/software produced these numbers.
+
+    ``interpret_mode`` is the load-bearing flag: Pallas kernels run
+    interpreted on CPU (kernels/backend.py), so wall-clock numbers from
+    different fingerprints are not comparable and regress.py refuses to
+    hard-gate across them."""
+    import jax
+    from repro.kernels.backend import interpret_default
+    devs = jax.devices()
+    return {
+        "backend": jax.default_backend(),
+        "device_kind": devs[0].device_kind if devs else "none",
+        "jax": jax.__version__,
+        "python": "%d.%d" % sys.version_info[:2],
+        "interpret_mode": bool(interpret_default()),
+    }
+
+
+def record(bench: str, metrics: dict[str, Any], *,
+           path: Path | str | None = None,
+           extra: dict[str, Any] | None = None) -> dict[str, Any]:
+    """Append one history record; returns the record written."""
+    rec = {
+        "schema": SCHEMA_VERSION,
+        "bench": bench,
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "git_sha": git_sha(),
+        "fingerprint": backend_fingerprint(),
+        "metrics": metrics,
+    }
+    if extra:
+        rec.update(extra)
+    p = Path(path) if path is not None else HISTORY_PATH
+    with open(p, "a") as f:
+        f.write(json.dumps(rec, sort_keys=True) + "\n")
+    return rec
+
+
+def record_rows(bench: str, rows, *,
+                path: Path | str | None = None) -> dict[str, Any]:
+    """Record a bench module's ``(name, us_per_call, derived)`` rows.
+
+    The runner's CSV rows become ``{name: {"us_per_call": float,
+    "derived": str}}`` — coarse but uniform, so EVERY module gets a
+    history line without bespoke extraction; regress.py gates on the
+    richer BENCH_*.json metrics instead."""
+    metrics = {name: {"us_per_call": float(us), "derived": str(derived)}
+               for name, us, derived in rows}
+    return record(bench, metrics, path=path)
+
+
+def load(path: Path | str | None = None) -> list[dict[str, Any]]:
+    """All history records, oldest first (empty list if no file)."""
+    p = Path(path) if path is not None else HISTORY_PATH
+    if not p.exists():
+        return []
+    out = []
+    for line in p.read_text().splitlines():
+        line = line.strip()
+        if line:
+            out.append(json.loads(line))
+    return out
+
+
+def latest(bench: str,
+           path: Path | str | None = None) -> dict[str, Any] | None:
+    """Most recent record for one bench module, or None."""
+    for rec in reversed(load(path)):
+        if rec.get("bench") == bench:
+            return rec
+    return None

@@ -1,0 +1,218 @@
+"""Performance regression gate: diff the current bench outputs against
+a committed baseline with per-metric tolerance bands, exit nonzero on
+regression.
+
+ROADMAP item 5 asks for "a regression gate on compiled us/call so 'fast
+as the hardware allows' becomes a measured claim" — this is that gate.
+Two metric classes, because CPU interpret-mode timings are noisy while
+structural metrics are exact:
+
+  * deterministic metrics (compiled-program peak-live bytes, host syncs
+    per decision, mean samples per decision, flag fraction, the §V-A
+    model throughput, the fused kernel's peak-vs-R growth) get TIGHT
+    machine-independent bands — these regress only when the code
+    changes behaviour;
+  * wall-clock metrics (warm us/call, warm decisions/s) are gated by a
+    single ``--wall-ratio`` knob: the default 1.5 catches a 2×
+    slowdown on a quiet machine, CI passes a generous interpret-mode
+    ratio (shared runners jitter) — an honest wide band beats a tight
+    band that cries wolf.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.regress                 # gate
+  PYTHONPATH=src python -m benchmarks.regress --write-baseline
+  PYTHONPATH=src python -m benchmarks.regress --wall-ratio 5  # CI
+
+The baseline (benchmarks/baseline.json) is committed; refresh it with
+``--write-baseline`` whenever a PR intentionally moves a metric, so the
+diff is reviewed like any other code change.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+from typing import Any
+
+BASELINE_PATH = Path(__file__).resolve().parent / "baseline.json"
+SERVING_JSON = Path("BENCH_serving.json")
+KERNELS_JSON = Path("BENCH_kernels.json")
+
+# metric-name suffix -> (direction, band).  "lower": regression when
+# current > baseline * band; "higher": regression when
+# current < baseline / band; "abs": regression when
+# |current - baseline| > band.  Deterministic bands are deliberately
+# tight — these numbers are properties of the compiled programs and the
+# sequential test, not of the machine.
+DETERMINISTIC_BANDS: dict[str, tuple[str, float]] = {
+    "peak_live_bytes_per_decision": ("lower", 1.01),
+    "host_syncs_per_decision": ("lower", 1.25),
+    "mean_samples_per_decision": ("lower", 1.05),
+    "model_decisions_per_s": ("higher", 1.10),
+    "peak_vs_r_growth": ("lower", 1.01),
+}
+ABS_BANDS: dict[str, float] = {
+    "flag_fraction": 0.05,
+}
+# wall-clock metrics: band comes from --wall-ratio
+WALL_LOWER_SUFFIXES = ("us_per_call_warm",)
+WALL_HIGHER_SUFFIXES = ("decisions_per_s_warm",)
+
+SERVING_METRIC_KEYS = (
+    "host_syncs_per_decision", "peak_live_bytes_per_decision",
+    "mean_samples_per_decision", "flag_fraction",
+    "model_decisions_per_s", "decisions_per_s_warm",
+)
+
+
+def _kernel_rows(doc: dict) -> dict[str, dict]:
+    return {row["name"]: row for row in doc.get("rows", [])}
+
+
+def current_metrics(serving_path: Path | str = SERVING_JSON,
+                    kernels_path: Path | str = KERNELS_JSON,
+                    ) -> dict[str, float]:
+    """Flat {metric_name: value} from the BENCH_*.json snapshots.
+
+    Missing snapshot files contribute nothing (regress then fails on
+    the baseline's uncovered metrics — a silently absent bench must not
+    read as a pass)."""
+    out: dict[str, float] = {}
+    serving_path, kernels_path = Path(serving_path), Path(kernels_path)
+    if serving_path.exists():
+        doc = json.loads(serving_path.read_text())
+        for cfg, rec in doc.get("configs", {}).items():
+            for key in SERVING_METRIC_KEYS:
+                v = rec.get(key)
+                if isinstance(v, (int, float)) and v == v:
+                    out[f"serving.{cfg}.{key}"] = float(v)
+    if kernels_path.exists():
+        rows = _kernel_rows(json.loads(kernels_path.read_text()))
+        for name in ("kernel_decision_fused",
+                     "kernel_decision_materializing"):
+            row = rows.get(name)
+            if row and "us_per_call_warm" in row:
+                out[f"kernels.{name}.us_per_call_warm"] = float(
+                    row["us_per_call_warm"])
+        row = rows.get("kernel_decision_peak_vs_R_fused")
+        if row:
+            m = re.search(r"growth=([0-9.]+)x", row.get("derived", ""))
+            if m:
+                out["kernels.fused.peak_vs_r_growth"] = float(m.group(1))
+    return out
+
+
+def _band_for(metric: str, wall_ratio: float):
+    """(direction, band) for one metric name, by suffix."""
+    tail = metric.rsplit(".", 1)[-1]
+    if tail in ABS_BANDS:
+        return "abs", ABS_BANDS[tail]
+    if tail in DETERMINISTIC_BANDS:
+        return DETERMINISTIC_BANDS[tail]
+    if tail in WALL_LOWER_SUFFIXES:
+        return "lower", wall_ratio
+    if tail in WALL_HIGHER_SUFFIXES:
+        return "higher", wall_ratio
+    # unclassified: treat as wall-clock lower-is-better (conservative)
+    return "lower", wall_ratio
+
+
+def compare(current: dict[str, float], baseline: dict[str, float],
+            wall_ratio: float = 1.5) -> list[dict[str, Any]]:
+    """Regressions of ``current`` vs ``baseline``; empty list = pass.
+
+    Every baseline metric must be present in ``current`` (a vanished
+    metric is a regression in coverage, not a pass); metrics only in
+    ``current`` are new and ignored until the baseline is refreshed."""
+    failures = []
+    for metric in sorted(baseline):
+        base = float(baseline[metric])
+        kind, band = _band_for(metric, wall_ratio)
+        if metric not in current:
+            failures.append({"metric": metric, "kind": "missing",
+                             "baseline": base, "current": None,
+                             "limit": None})
+            continue
+        cur = float(current[metric])
+        if kind == "abs":
+            limit = band
+            ok = abs(cur - base) <= band
+        elif kind == "lower":
+            limit = base * band
+            ok = cur <= limit
+        else:  # higher
+            limit = base / band
+            ok = cur >= limit
+        if not ok:
+            failures.append({"metric": metric, "kind": kind,
+                             "baseline": base, "current": cur,
+                             "limit": limit})
+    return failures
+
+
+def load_baseline(path: Path | str = BASELINE_PATH) -> dict[str, float]:
+    doc = json.loads(Path(path).read_text())
+    return doc["metrics"]
+
+
+def write_baseline(metrics: dict[str, float],
+                   path: Path | str = BASELINE_PATH) -> None:
+    from benchmarks import history
+    doc = {"schema": 1, "fingerprint": history.backend_fingerprint(),
+           "git_sha": history.git_sha(), "metrics": metrics}
+    Path(path).write_text(json.dumps(doc, indent=2, sort_keys=True)
+                          + "\n")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=str(BASELINE_PATH))
+    ap.add_argument("--serving", default=str(SERVING_JSON))
+    ap.add_argument("--kernels", default=str(KERNELS_JSON))
+    ap.add_argument("--wall-ratio", type=float, default=1.5,
+                    help="tolerance ratio for wall-clock metrics "
+                         "(CI interpret-mode runs pass a generous "
+                         "value; deterministic metrics keep their "
+                         "tight bands regardless)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="overwrite the baseline with the current "
+                         "metrics instead of gating")
+    args = ap.parse_args(argv)
+
+    current = current_metrics(args.serving, args.kernels)
+    if not current:
+        print("regress: no BENCH_*.json snapshots found — run "
+              "benchmarks first", file=sys.stderr)
+        return 2
+    if args.write_baseline:
+        write_baseline(current, args.baseline)
+        print(f"baseline written: {args.baseline} "
+              f"({len(current)} metrics)")
+        return 0
+
+    baseline = load_baseline(args.baseline)
+    failures = compare(current, baseline, args.wall_ratio)
+    n_checked = len(baseline)
+    if not failures:
+        print(f"regress: PASS — {n_checked} metrics within bands "
+              f"(wall_ratio={args.wall_ratio})")
+        return 0
+    print(f"regress: FAIL — {len(failures)}/{n_checked} metrics out of "
+          f"band (wall_ratio={args.wall_ratio})", file=sys.stderr)
+    for f in failures:
+        if f["kind"] == "missing":
+            print(f"  {f['metric']}: MISSING (baseline "
+                  f"{f['baseline']:.6g})", file=sys.stderr)
+        else:
+            print(f"  {f['metric']}: current {f['current']:.6g} vs "
+                  f"baseline {f['baseline']:.6g} "
+                  f"(limit {f['limit']:.6g}, {f['kind']})",
+                  file=sys.stderr)
+    return 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,6 +1,8 @@
-"""Roofline analysis over the dry-run artifacts (deliverable g).
+"""Roofline analysis: train path (dry-run artifacts) + DECISION path
+(the serving hot kernels, compiled fresh — runs everywhere).
 
-For every compiled (arch × shape × mesh) cell in artifacts/dryrun/:
+Train side — for every compiled (arch × shape × mesh) cell in
+artifacts/dryrun/:
 
     compute term    = loop-aware HLO FLOPs / (197 TFLOP/s bf16)
     memory term     = loop-aware HBM bytes / (819 GB/s)
@@ -15,7 +17,21 @@ Also reported per cell:
     ratio MODEL_FLOPS / HLO_FLOPS (remat/redundancy waste),
   * roofline fraction = useful-FLOP time ÷ bottleneck time (the score).
 
-Outputs artifacts/roofline.csv + artifacts/roofline.md.
+Serving side (ROADMAP item 5's closure) — the fused decision kernel
+(kernels.ops.decision_update) across (B, N, R) points and the engine's
+cached SAR round fn (serving/engine._sar_round_fn) at its deployed
+shape, each charted as
+
+    bound_us    = max(flops / PEAK_FLOPS, hbm_bytes / HBM_BW) · 1e6
+    measured_us = warm wall time per call
+    fraction    = bound_us / measured_us
+
+with ``interpret_mode`` flagged honestly: on the CPU backend Pallas
+runs interpreted, so measured/fraction quantify the gap that the
+compiled-backend lane must close, not a hardware claim.
+
+Outputs artifacts/roofline.csv + .md (train, needs dryrun artifacts)
+and artifacts/roofline_serving.csv + .md (always).
 """
 
 from __future__ import annotations
@@ -29,6 +45,8 @@ HBM_BW = 819e9           # bytes/s per chip
 ICI_BW = 50e9            # bytes/s per link (conservative single-link)
 
 DRYRUN_DIR = Path("artifacts/dryrun")
+SERVING_CSV = Path("artifacts/roofline_serving.csv")
+SERVING_MD = Path("artifacts/roofline_serving.md")
 
 
 def cell_terms(rec: dict) -> dict:
@@ -107,15 +125,161 @@ def write_tables() -> Path:
     return Path("artifacts/roofline.md")
 
 
+# ----------------------------------------------------------------------
+# serving-side roofline: the decision path
+# ----------------------------------------------------------------------
+# (B, N, R) points for the fused decision kernel: the kernel-bench
+# shape at both R extremes, a wider batch, and the serving engine's
+# deployed SAR shape (32 slots × 2 classes).
+DECISION_POINTS = ((8, 512, 4), (8, 512, 20), (32, 512, 20), (32, 2, 4))
+
+
+def _measured_us(jitted, make_args, reps: int = 10) -> float:
+    """Warm wall time per call; ``make_args`` returns fresh positional
+    args each call (donation-safe — donated buffers are single-use)."""
+    import jax
+    arg_sets = [make_args() for _ in range(reps + 1)]
+    jax.block_until_ready(arg_sets)
+    jax.block_until_ready(jitted(*arg_sets[0]))            # warm
+    t0 = time.time()
+    r = None
+    for args in arg_sets[1:]:
+        r = jitted(*args)
+    jax.block_until_ready(r)
+    return (time.time() - t0) * 1e6 / reps
+
+
+def _cell_from_compiled(name: str, txt: str, measured_us: float,
+                        interpret: bool) -> dict:
+    from repro.launch.hlo_analysis import analyze, \
+        largest_intermediate_bytes
+    walk = analyze(txt, 1)
+    flops = walk["flops_per_device"]
+    hbm = walk["hbm_bytes_per_device"]
+    bound_us = max(flops / PEAK_FLOPS, hbm / HBM_BW) * 1e6
+    return {
+        "name": name, "flops": flops, "hbm_bytes": hbm,
+        "peak_live_bytes": largest_intermediate_bytes(txt),
+        "bound": "compute" if flops / PEAK_FLOPS >= hbm / HBM_BW
+        else "memory",
+        "bound_us": bound_us, "measured_us": measured_us,
+        "fraction": bound_us / measured_us if measured_us else 0.0,
+        "interpret_mode": bool(interpret),
+    }
+
+
+def serving_cells(points=DECISION_POINTS,
+                  measure_reps: int = 10) -> list[dict]:
+    """Roofline cells for the decision path; compiles fresh, no
+    artifacts needed."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.clt_grng import GRNGConfig
+    from repro.core.sampling import BayesHeadConfig
+    from repro.kernels.backend import interpret_default
+    from repro.kernels.ops import decision_update
+    from repro.serving import TriagePolicy, adaptive
+
+    interp = interpret_default()
+    cfg0 = GRNGConfig()
+    cells = []
+
+    def point_args(b, n, r):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(11))
+        ab = {"y_mu": jax.random.normal(k1, (b, n)) * 0.05,
+              "x_sigma": jnp.abs(jax.random.normal(k2, (b, n))) * 0.1,
+              "m": jax.random.normal(k2, (b, n, 16)) * 0.05}
+        zeros_u = jnp.zeros((b,), jnp.uint32)
+        zeros_i = jnp.zeros((b,), jnp.int32)
+        sel = jnp.asarray(adaptive.stream_selections(cfg0, zeros_u,
+                                                     zeros_i, r))
+        idx = adaptive.stream_indices(zeros_u, zeros_i, r)
+        return ab, sel, idx
+
+    for b, n, r in points:
+        ab, sel, idx = point_args(b, n, r)
+        stats0 = adaptive.init_stats(b, n)
+
+        def fn(stats, ab, sel, idx):
+            return decision_update(stats, ab, sel, cfg0,
+                                   sample_idx=idx)
+
+        jitted = jax.jit(fn)
+        txt = jitted.lower(stats0, ab, sel, idx).compile().as_text()
+        us = _measured_us(jitted, lambda: (stats0, ab, sel, idx),
+                          reps=measure_reps)
+        cells.append(_cell_from_compiled(
+            f"decision_update_B{b}_N{n}_R{r}_f32", txt, us, interp))
+
+    # the engine's cached SAR round fn at its deployed shape.  Stats
+    # start at n = r_max - r_step so the device-resident while_loop
+    # force-decides after EXACTLY one round — a deterministic
+    # measurement that matches the HLO walk's trip estimate.
+    from repro.serving.engine import _sar_round_fn
+    policy = TriagePolicy(conf_threshold=0.7, mi_threshold=0.05,
+                          r_min=4, r_max=20)
+    b, n = 32, 2
+    hcfg = BayesHeadConfig(num_samples=policy.r_max, mode="rank16",
+                           grng=cfg0, compute_dtype=jnp.float32,
+                           hoist_basis=True)
+    fn = _sar_round_fn(hcfg, policy, True, policy.r_min, True, None)
+    ab, _, _ = point_args(b, n, policy.r_min)
+
+    def make_args():
+        stats = adaptive.init_stats(b, n)
+        stats["n"] = jnp.full((b,), policy.r_max - policy.r_min,
+                              jnp.int32)
+        return (ab, stats, jnp.zeros((b,), jnp.uint32),
+                jnp.ones((b,), bool))
+
+    txt = fn.lower(*make_args()).compile().as_text()
+    us = _measured_us(fn, make_args, reps=measure_reps)
+    cells.append(_cell_from_compiled(
+        f"sar_round_B{b}_N{n}_R{policy.r_min}_f32", txt, us, interp))
+    return cells
+
+
+def write_serving_tables(cells: list[dict]) -> Path:
+    SERVING_CSV.parent.mkdir(parents=True, exist_ok=True)
+    keys = ("name", "flops", "hbm_bytes", "peak_live_bytes", "bound",
+            "bound_us", "measured_us", "fraction", "interpret_mode")
+    csv = [",".join(keys)]
+    md = ["| cell | flops | hbm B | peak live B | bound | bound us | "
+          "measured us | fraction | interp |",
+          "|---|---|---|---|---|---|---|---|---|"]
+    for c in cells:
+        csv.append(",".join(str(c[k]) for k in keys))
+        md.append(
+            f"| {c['name']} | {c['flops']:.3g} | {c['hbm_bytes']:.3g} "
+            f"| {c['peak_live_bytes']:.0f} | {c['bound']} | "
+            f"{c['bound_us']:.3g} | {c['measured_us']:.1f} | "
+            f"{c['fraction']:.2e} | {c['interpret_mode']} |")
+    SERVING_CSV.write_text("\n".join(csv) + "\n")
+    SERVING_MD.write_text("\n".join(md) + "\n")
+    return SERVING_MD
+
+
 def bench() -> list[tuple[str, float, str]]:
+    out = []
+    # serving side first: compiles its own cells, runs everywhere
+    cells = serving_cells()
+    write_serving_tables(cells)
+    for c in cells:
+        out.append((
+            f"roofline_serving_{c['name']}", c["measured_us"],
+            f"bound={c['bound']};bound_us={c['bound_us']:.3g};"
+            f"fraction={c['fraction']:.2e};"
+            f"peak_live_B={c['peak_live_bytes']:.0f};"
+            f"interpret_mode={c['interpret_mode']}"))
+
     t0 = time.time()
     if not DRYRUN_DIR.exists() or not list(DRYRUN_DIR.glob("*.json")):
-        return [("roofline", 0.0, "no_dryrun_artifacts_yet")]
+        out.append(("roofline", 0.0, "no_dryrun_artifacts_yet"))
+        return out
     write_tables()
     cells = load_cells(mesh="pod16x16", tag_filter="opt") or load_cells(
         mesh="pod16x16")
     dt_us = (time.time() - t0) * 1e6
-    out = []
     for c in cells:
         out.append((
             f"roofline_{c['arch']}_{c['shape']}", dt_us / max(len(cells), 1),

@@ -11,13 +11,18 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
   serving_bench      --        adaptive-R vs fixed-R serving engine
   hw_variation       --        chip-instance MC sweep, cal vs uncal
   mission_bench      --        closed-loop SAR mission (BENCH_mission)
-  roofline           --        3-term roofline over dry-run artifacts
+  roofline           --        decision-path roofline (always) +
+                               3-term roofline over dry-run artifacts
 
 Run:   PYTHONPATH=src python -m benchmarks.run [--only <m>] [--fast|--all]
 (or:   PYTHONPATH=src python benchmarks/run.py ... — both entry forms
 register the whole suite).  The default run skips nothing but honours
 historical behaviour; ``--fast`` skips the model-training benches,
 ``--all`` forces every registered module even under ``--fast``.
+
+Every module's rows are also appended as one schema-versioned record
+(git SHA + backend fingerprint) to repo-root ``BENCH_history.jsonl``
+(benchmarks/history.py); ``--no-history`` suppresses that.
 """
 
 from __future__ import annotations
@@ -56,6 +61,9 @@ def main() -> None:
                     help="skip benchmarks that train models")
     ap.add_argument("--all", action="store_true",
                     help="run every registered module (overrides --fast)")
+    ap.add_argument("--no-history", action="store_true",
+                    help="skip appending run records to "
+                         "BENCH_history.jsonl")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -67,9 +75,13 @@ def main() -> None:
             continue
         try:
             mod = __import__(f"benchmarks.{mod_name}", fromlist=["bench"])
-            for name, us, derived in mod.bench():
+            rows = list(mod.bench())
+            for name, us, derived in rows:
                 print(f"{name},{us:.1f},{derived}")
             sys.stdout.flush()
+            if not args.no_history:
+                from benchmarks import history
+                history.record_rows(mod_name, rows)
         except Exception:  # noqa: BLE001
             failures.append(mod_name)
             traceback.print_exc()

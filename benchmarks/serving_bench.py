@@ -222,6 +222,13 @@ def bench() -> list[tuple[str, float, str]]:
         },
     }
     BENCH_JSON.write_text(json.dumps(report, indent=2, sort_keys=True))
+    # history rider: the regress.py-gated per-config metrics, one
+    # schema-versioned line per run (BENCH_serving.json is a snapshot;
+    # BENCH_history.jsonl is the trajectory).
+    from benchmarks import history
+    history.record("serving_bench",
+                   {"configs": report["configs"],
+                    "speedups": report["speedups"]})
 
     # Prometheus/JSON metrics snapshot for the fast-path config,
     # uploaded next to BENCH_serving.json as a CI artifact.

@@ -74,6 +74,9 @@ def main() -> None:
                     metavar="PREFIX",
                     help="write PREFIX.prom / PREFIX.json with the "
                          "mission summary + per-die telemetry")
+    ap.add_argument("--profile", type=str, default=None, metavar="DIR",
+                    help="capture a jax.profiler (XLA) trace of the "
+                         "mission into DIR (TensorBoard-loadable)")
     args = ap.parse_args()
 
     from repro.mission import (MissionPolicy, UavConfig, WorldConfig,
@@ -106,13 +109,16 @@ def main() -> None:
 
     det_kw = {} if args.train_steps is None else \
         {"steps": args.train_steps}
-    params, cfg = trained_detector(corruption=args.corruption,
-                                   severity_hi=args.severity_hi,
-                                   **det_kw)
-    res = fly_mission(wcfg, ucfg, pol, params=params, cfg=cfg,
-                      chips=chips, calibrated=not args.uncalibrated,
-                      n_steps=args.steps, n_episodes=args.episodes,
-                      fused=args.fused, telemetry=args.telemetry)
+    from repro.obs.prof import trace_capture
+    with trace_capture(args.profile):
+        params, cfg = trained_detector(corruption=args.corruption,
+                                       severity_hi=args.severity_hi,
+                                       **det_kw)
+        res = fly_mission(wcfg, ucfg, pol, params=params, cfg=cfg,
+                          chips=chips,
+                          calibrated=not args.uncalibrated,
+                          n_steps=args.steps, n_episodes=args.episodes,
+                          fused=args.fused, telemetry=args.telemetry)
     s = res.summary
     log.info(
         f"[{args.policy}/{args.planner}] "

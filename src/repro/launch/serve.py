@@ -72,7 +72,8 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
           adaptive: bool = True, policy: TriagePolicy | None = None,
           seed: int = 0, cache_margin: int = 4, fused: bool = True,
           telemetry: bool | TelemetryConfig = True,
-          tracer=None) -> dict:
+          tracer=None, profiler=True,
+          cost_records: bool = False) -> dict:
     """LM serving through the engine. ``batch`` is the slot count.
 
     ``fused``: run escalation rounds through the fused Pallas decision
@@ -109,7 +110,8 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
         jax_params_init(cfg, seed), cfg, n_slots=batch,
         prompt_len=prompt_len, cache_len=cache_len, policy=policy,
         adaptive_mode=adaptive, metrics=metrics, extras=extras,
-        fused=fused, telemetry=telemetry, tracer=tracer)
+        fused=fused, telemetry=telemetry, tracer=tracer,
+        profiler=profiler)
 
     rid = 0
     t0 = time.perf_counter()
@@ -124,6 +126,8 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
     out["wall_s"] = time.perf_counter() - t0
     out["tokens_per_s"] = out["decisions"] / out["wall_s"]
     out["host_syncs"] = engine.host_syncs
+    if cost_records:
+        out["compiled_costs"] = engine.compiled_cost_records()
     out["flagged_fraction"] = out.get("flag_fraction", float("nan"))
     out["verdicts"] = [
         {"rid": r.rid, "verdict": r.verdict, "confidence": r.confidence,
@@ -175,7 +179,8 @@ def serve_sar(*, n_requests: int = 128, n_slots: int = 32,
               chip_instance=None, calibrated: bool = True,
               slot_axis: str | None = None, fused: bool = True,
               telemetry: bool | TelemetryConfig = True,
-              tracer=None) -> dict:
+              tracer=None, profiler=True,
+              cost_records: bool = False) -> dict:
     """SAR image-stream serving. Untrained params unless provided.
 
     ``chip_instance``: a hw.ChipInstance (or an int seed — one chip is
@@ -224,7 +229,8 @@ def serve_sar(*, n_requests: int = 128, n_slots: int = 32,
                               adaptive_mode=adaptive, metrics=metrics,
                               head=head, hcfg=hcfg, chip=chip_instance,
                               slot_axis=slot_axis, fused=fused,
-                              telemetry=telemetry, tracer=tracer)
+                              telemetry=telemetry, tracer=tracer,
+                              profiler=profiler)
     for r in make_sar_stream(n_requests, corrupt_frac=corrupt_frac,
                              corruption=corruption,
                              image_size=cfg.image_size):
@@ -235,6 +241,10 @@ def serve_sar(*, n_requests: int = 128, n_slots: int = 32,
     out["host_syncs"] = engine.host_syncs
     out["host_syncs_per_decision"] = (engine.host_syncs
                                       / max(out["decisions"], 1))
+    if cost_records:
+        # AOT compiled-cost capture of the live hot functions —
+        # profiling path only (compiles fresh executables).
+        out["compiled_costs"] = engine.compiled_cost_records()
     out["flagged_fraction"] = out.get("flag_fraction", float("nan"))
     if engine.tcfg is not None and out.get("telemetry"):
         # Online drift check against the deployment's calibration-time
@@ -296,6 +306,11 @@ def main() -> None:
                     help="write PREFIX.prom (Prometheus text) and "
                          "PREFIX.json with the run's metrics + "
                          "telemetry snapshot")
+    ap.add_argument("--profile", type=str, default=None, metavar="DIR",
+                    help="capture a jax.profiler (XLA) trace of the "
+                         "whole run into DIR (TensorBoard-loadable) "
+                         "and record compiled-cost analyses of the "
+                         "engine's hot functions")
     args = ap.parse_args()
     policy = TriagePolicy(conf_threshold=args.conf_threshold,
                           mi_threshold=args.mi_threshold,
@@ -306,6 +321,7 @@ def main() -> None:
         from repro.obs.trace import Tracer
         tracer = Tracer("repro-serving")
 
+    from repro.obs.prof import trace_capture
     if args.arch == "sar_cnn":
         chip = None
         if args.chip_instance is not None:
@@ -313,15 +329,17 @@ def main() -> None:
             chip = sample_instances(
                 args.chip_instance, 1,
                 VariationSpec().scaled(args.chip_severity))[0]
-        out = serve_sar(n_requests=args.requests or 128,
-                        n_slots=args.slots or 32,
-                        adaptive=not args.fixed, policy=policy,
-                        corrupt_frac=args.corrupt_frac,
-                        corruption=args.corruption,
-                        chip_instance=chip,
-                        calibrated=not args.uncalibrated,
-                        fused=args.fused, telemetry=args.telemetry,
-                        tracer=tracer)
+        with trace_capture(args.profile):
+            out = serve_sar(n_requests=args.requests or 128,
+                            n_slots=args.slots or 32,
+                            adaptive=not args.fixed, policy=policy,
+                            corrupt_frac=args.corrupt_frac,
+                            corruption=args.corruption,
+                            chip_instance=chip,
+                            calibrated=not args.uncalibrated,
+                            fused=args.fused, telemetry=args.telemetry,
+                            tracer=tracer,
+                            cost_records=bool(args.profile))
         chip_note = ""
         if chip is not None:
             chip_note = (f" [chip seed={args.chip_instance} "
@@ -341,11 +359,15 @@ def main() -> None:
                      z_mean=round(out["drift"]["z_mean"], 2),
                      z_std=round(out["drift"]["z_std"], 2))
     else:
-        out = serve(args.arch, smoke=args.smoke, batch=args.slots or 4,
-                    prompt_len=args.prompt_len, gen_len=args.gen,
-                    n_requests=args.requests, adaptive=not args.fixed,
-                    policy=policy, fused=args.fused,
-                    telemetry=args.telemetry, tracer=tracer)
+        with trace_capture(args.profile):
+            out = serve(args.arch, smoke=args.smoke,
+                        batch=args.slots or 4,
+                        prompt_len=args.prompt_len, gen_len=args.gen,
+                        n_requests=args.requests,
+                        adaptive=not args.fixed,
+                        policy=policy, fused=args.fused,
+                        telemetry=args.telemetry, tracer=tracer,
+                        cost_records=bool(args.profile))
         log.info(
             f"{out['requests']} requests / {out['decisions']} "
             f"tokens in {out['wall_s']:.2f}s "
@@ -367,6 +389,9 @@ def main() -> None:
             {k: v for k, v in out.items()
              if isinstance(v, (int, float)) and not isinstance(v, bool)},
             telemetry=out.get("telemetry"), drift=out.get("drift"),
+            profile=out.get("stage_profile"),
+            compile_counters=out.get("compile_counters"),
+            compiled_costs=out.get("compiled_costs"),
             arch=args.arch)
         prom, js = reg.write(args.metrics_out)
         log.info("metrics written", prom=prom, json=js)

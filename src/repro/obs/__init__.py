@@ -14,6 +14,12 @@ touching the device-resident fast path:
              verdict changes — asserted in tests/test_obs.py)
   trace      per-request span tracing on time.perf_counter clocks,
              exported as Chrome-trace JSON (loadable in Perfetto)
+  prof       performance observability: per-stage latency histograms
+             over the serving loop, compile-event counters (per-builder
+             executable constructions + process-wide XLA backend
+             compiles), compiled-cost records (cost_analysis flops /
+             bytes / peak-live per cached builder), and the
+             programmatic jax.profiler capture behind ``--profile``
   drift      streaming conformance monitor: per-die z-scores of the
              served GRNG probe moments against the calibration-time
              Fig. 9 reference; emits recalibration advisories
@@ -24,6 +30,10 @@ touching the device-resident fast path:
 from repro.obs.drift import (DriftGate, DriftMonitor, DriftReference,
                              DriftStatus, drift_status)
 from repro.obs.log import get_logger
+from repro.obs.prof import (NULL_PROFILER, CostRegistry, StageProfiler,
+                            builder_builds, compile_counters,
+                            compiled_cost, trace_capture,
+                            xla_compile_events)
 from repro.obs.registry import (MetricsRegistry, mission_registry,
                                 serving_registry)
 from repro.obs.telemetry import (TelemetryConfig, count_dispatch,
@@ -33,9 +43,12 @@ from repro.obs.telemetry import (TelemetryConfig, count_dispatch,
 from repro.obs.trace import NULL_TRACER, Tracer, mission_trace
 
 __all__ = [
-    "DriftGate", "DriftMonitor", "DriftReference", "DriftStatus",
-    "MetricsRegistry", "NULL_TRACER", "TelemetryConfig", "Tracer",
-    "count_dispatch", "drift_status", "get_logger", "init_telemetry",
-    "merge_snapshots", "mission_registry", "mission_trace",
-    "record_decisions", "record_round", "serving_registry", "snapshot",
+    "CostRegistry", "DriftGate", "DriftMonitor", "DriftReference",
+    "DriftStatus", "MetricsRegistry", "NULL_PROFILER", "NULL_TRACER",
+    "StageProfiler", "TelemetryConfig", "Tracer", "builder_builds",
+    "compile_counters", "compiled_cost", "count_dispatch",
+    "drift_status", "get_logger", "init_telemetry", "merge_snapshots",
+    "mission_registry", "mission_trace", "record_decisions",
+    "record_round", "serving_registry", "snapshot", "trace_capture",
+    "xla_compile_events",
 ]

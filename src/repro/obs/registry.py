@@ -22,10 +22,18 @@ def _name(n: str) -> str:
     return n.translate(_BAD)
 
 
+def _escape(v: Any) -> str:
+    """Escape a label VALUE per the exposition spec: backslash, double
+    quote, and newline must be backslash-escaped inside the quotes."""
+    return (str(v).replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
 def _labels(labels: dict[str, Any]) -> str:
     if not labels:
         return ""
-    inner = ",".join(f'{_name(str(k))}="{v}"' for k, v in labels.items())
+    inner = ",".join(f'{_name(str(k))}="{_escape(v)}"'
+                     for k, v in labels.items())
     return "{" + inner + "}"
 
 
@@ -59,11 +67,24 @@ class MetricsRegistry:
         self._add("gauge", name, float(value), help, labels)
 
     def histogram(self, name: str, counts: list, edges: list,
-                  help: str = "", **labels) -> None:
-        """``counts`` has len(edges)-1 bins; edges are ascending."""
+                  help: str = "", overflow: int = 0, sum: float | None = None,
+                  **labels) -> None:
+        """``counts`` has len(edges)-1 bins; edges are ascending.
+
+        ``overflow`` counts observations above the last edge (they land
+        only in the ``+Inf`` bucket); ``sum`` overrides the midpoint
+        approximation of ``_sum`` when the true total is known (e.g.
+        StageProfiler tracks total_s exactly).  Non-finite bin counts
+        (NaN propagated through a device histogram) sanitize to 0 so
+        the exposition stays parseable."""
+        clean = [int(c) if c == c and abs(c) != float("inf") else 0
+                 for c in counts]
         self._add("histogram", name,
-                  {"counts": [int(c) for c in counts],
-                   "edges": [float(e) for e in edges]}, help, labels)
+                  {"counts": clean,
+                   "edges": [float(e) for e in edges],
+                   "overflow": int(overflow),
+                   "sum": None if sum is None else float(sum)},
+                  help, labels)
 
     def to_json(self) -> dict[str, Any]:
         return {"namespace": self.namespace, "metrics": self._metrics}
@@ -83,17 +104,23 @@ class MetricsRegistry:
                              f"{_fmt(m['value'])}")
                 continue
             counts, edges = m["value"]["counts"], m["value"]["edges"]
-            cum, total, approx_sum = 0, 0, 0.0
+            over = m["value"].get("overflow", 0)
+            cum, approx_sum = 0, 0.0
             for i, c in enumerate(counts):
                 cum += c
-                total += c
-                approx_sum += c * 0.5 * (edges[i] + edges[i + 1])
+                mid = 0.5 * (edges[i] + edges[i + 1])
+                if math.isfinite(mid):
+                    approx_sum += c * mid
                 lb = dict(m["labels"]);  lb["le"] = _fmt(float(edges[i + 1]))
                 lines.append(f"{name}_bucket{_labels(lb)} {cum}")
+            total = cum + over
+            if over and edges and math.isfinite(edges[-1]):
+                approx_sum += over * edges[-1]
             lb = dict(m["labels"]);  lb["le"] = "+Inf"
-            lines.append(f"{name}_bucket{_labels(lb)} {cum}")
+            lines.append(f"{name}_bucket{_labels(lb)} {total}")
+            true_sum = m["value"].get("sum")
             lines.append(f"{name}_sum{_labels(m['labels'])} "
-                         f"{_fmt(approx_sum)}")
+                         f"{_fmt(approx_sum if true_sum is None else true_sum)}")
             lines.append(f"{name}_count{_labels(m['labels'])} {total}")
         return "\n".join(lines) + "\n"
 
@@ -158,17 +185,80 @@ def add_drift(reg: MetricsRegistry, status: dict[str, Any],
               help="1 when recalibration is advised", **labels)
 
 
+def add_stage_profile(reg: MetricsRegistry, snap: dict[str, Any],
+                      **labels) -> None:
+    """Map an obs.prof.StageProfiler snapshot into the registry: one
+    ``stage_latency_seconds`` histogram per stage plus an exact-count
+    counter (the histogram's +Inf bucket carries overflow)."""
+    for stage, rec in (snap or {}).items():
+        reg.counter("stage_total", rec["count"],
+                    help="loop-stage executions", stage=stage, **labels)
+        reg.histogram("stage_latency_seconds", rec["counts"],
+                      rec["edges"], overflow=rec.get("overflow", 0),
+                      sum=rec.get("total_s"),
+                      help="host-side latency of one serving-loop stage",
+                      stage=stage, **labels)
+
+
+def add_compile_counters(reg: MetricsRegistry, counters: dict[str, Any],
+                         **labels) -> None:
+    """Map an obs.prof.compile_counters() snapshot into the registry."""
+    if not counters:
+        return
+    for builder, n in sorted(counters.get("builder_builds", {}).items()):
+        reg.counter("engine_builder_builds_total", n,
+                    help="executable constructions per cached engine "
+                         "builder (lru_cache misses)",
+                    builder=builder, **labels)
+    reg.counter("xla_compile_events_total",
+                counters.get("xla_compile_events", 0),
+                help="XLA backend compiles observed in this process",
+                **labels)
+    reg.counter("xla_compile_seconds_total",
+                counters.get("xla_compile_seconds", 0.0), **labels)
+
+
+def add_compiled_costs(reg: MetricsRegistry, records: list,
+                       **labels) -> None:
+    """Map obs.prof.CostRegistry records into per-function gauges."""
+    for rec in records or []:
+        lb = dict(labels, fn=rec["name"])
+        for k in ("flops", "hbm_bytes", "peak_live_bytes", "compile_s",
+                  "xla_flops", "xla_bytes_accessed"):
+            if k in rec:
+                reg.gauge(f"compiled_{k}", rec[k], **lb)
+
+
 def serving_registry(summary: dict[str, Any], *,
                      telemetry: dict[str, Any] | None = None,
                      drift: dict[str, Any] | None = None,
+                     profile: dict[str, Any] | None = None,
+                     compile_counters: dict[str, Any] | None = None,
+                     compiled_costs: list | None = None,
                      **labels) -> MetricsRegistry:
-    """One-call registry for a serving run's summary + telemetry."""
+    """One-call registry for a serving run's summary + telemetry.
+
+    ``profile`` / ``compile_counters`` default to what the engine
+    attached to the summary (``stage_profile`` / ``compile_counters``
+    keys), so callers that just forward the run dict get the perf
+    exposition for free."""
     reg = MetricsRegistry()
     add_summary(reg, summary, job="serving", **labels)
     if telemetry:
         add_telemetry(reg, telemetry, job="serving", **labels)
     if drift:
         add_drift(reg, drift, job="serving", **labels)
+    profile = profile if profile is not None else \
+        summary.get("stage_profile")
+    if profile:
+        add_stage_profile(reg, profile, job="serving", **labels)
+    compile_counters = compile_counters if compile_counters is not None \
+        else summary.get("compile_counters")
+    if compile_counters:
+        add_compile_counters(reg, compile_counters, job="serving",
+                             **labels)
+    if compiled_costs:
+        add_compiled_costs(reg, compiled_costs, job="serving", **labels)
     return reg
 
 

@@ -86,6 +86,8 @@ from jax import lax
 
 from repro.core.sampling import (BayesHeadConfig, activation_basis,
                                  mix_samples)
+from repro.obs import prof
+from repro.obs.prof import NULL_PROFILER, StageProfiler
 from repro.obs.telemetry import (TelemetryConfig, count_dispatch,
                                  init_telemetry, record_decisions,
                                  record_round)
@@ -139,6 +141,7 @@ def _constrainer(slot_axis: str | None):
 
 @functools.lru_cache(maxsize=None)
 def _scatter_fn(slot_axis: str | None):
+    prof.count_build("scatter")
     constrain = _constrainer(slot_axis)
 
     def scatter(pool, rows, idx):
@@ -150,6 +153,8 @@ def _scatter_fn(slot_axis: str | None):
 
 @functools.lru_cache(maxsize=None)
 def _stats_reset_fn():
+    prof.count_build("stats_reset")
+
     def stats_reset(stats, idx):
         return jax.tree.map(
             lambda s: s.at[idx].set(0, mode="drop"), stats)
@@ -168,6 +173,7 @@ def _sar_featurize_fn(cfg, hcfg: BayesHeadConfig, chip,
     bound to that die).  Bounded: a fleet sweep over many chips evicts
     least-recently-used entries instead of pinning every die's
     executable (live engines keep their own reference)."""
+    prof.count_build("sar_featurize")
     from repro.models.sar_cnn import features
     constrain = _constrainer(slot_axis)
 
@@ -232,6 +238,7 @@ def _sar_round_fn(hcfg: BayesHeadConfig, policy: TriagePolicy,
     Decisions are recorded once, after the loop: the loop only exits
     when a verdict leaves ESCALATE (or the pool idles), so every
     intermediate round is all-escalate by construction."""
+    prof.count_build("sar_round")
     constrain = _constrainer(slot_axis)
     kw = dict(hcfg=hcfg, policy=policy, adaptive_mode=adaptive_mode,
               r_step=r_step, fused=fused, constrain=constrain)
@@ -301,6 +308,7 @@ def _lm_token_fn(hcfg: BayesHeadConfig, policy: TriagePolicy,
     rides the ``lax.cond`` state (it skips with the round), and every
     active slot's token verdict is final at schedule end (triage forces
     a decision at r_max), so decisions are recorded once on ``active``."""
+    prof.count_build("lm_token")
     grng = hcfg.grng
     identity = lambda st: st                                 # noqa: E731
 
@@ -364,7 +372,8 @@ class _EngineBase:
     def __init__(self, n_slots: int, policy: TriagePolicy,
                  metrics: ServingMetrics | None,
                  telemetry: bool | TelemetryConfig = True,
-                 tracer=None):
+                 tracer=None,
+                 profiler: bool | StageProfiler = True):
         self.n_slots = n_slots
         self.policy = policy
         self.queue: deque[Request] = deque()
@@ -385,6 +394,11 @@ class _EngineBase:
         self._telem = (init_telemetry(self.tcfg, policy.r_max)
                        if self.tcfg else None)
         self.tracer = tracer if tracer is not None else NULL_TRACER
+        # Host-side stage latency histograms (obs/prof).  perf_counter
+        # spans around the loop phases — never touches device state.
+        if profiler is True:
+            profiler = StageProfiler()
+        self.profiler: StageProfiler = profiler or NULL_PROFILER
         for i in range(n_slots):
             self.tracer.name_thread(i + 1, f"slot {i}")
 
@@ -440,6 +454,13 @@ class _EngineBase:
             return None
         return telemetry_snapshot(self._telem, self.tcfg)
 
+    def _attach_perf(self) -> None:
+        """Attach the stage-profile snapshot + process compile counters
+        to the run summary (surfaced as ``stage_profile`` /
+        ``compile_counters`` keys; obs.registry picks both up)."""
+        snap = self.profiler.snapshot()
+        self.metrics.attach_profile(snap or None, prof.compile_counters())
+
 
 # ----------------------------------------------------------------------
 # SAR image-stream engine
@@ -468,11 +489,18 @@ class SarServingEngine(_EngineBase):
                  chip=None, slot_axis: str | None = None,
                  fused: bool = True,
                  telemetry: bool | TelemetryConfig = True,
-                 tracer=None):
+                 tracer=None,
+                 profiler: bool | StageProfiler = True):
         """``head``/``hcfg``: pre-deployed serving head + its config —
         the repro/hw chip-instance path (hw.calib.prepare_instance_head
         returns both; the rank-16 fast path below runs unchanged on the
         degraded instance).  Default: golden-chip head from ``params``.
+
+        ``profiler``: host-side per-stage latency histograms
+        (obs/prof.StageProfiler) over admission / featurize / dispatch /
+        triage_loop / retirement — True for a fresh profiler, an
+        existing StageProfiler to share one across engines, False to
+        disable.  Pure host clock arithmetic: no syncs, no graph change.
 
         ``chip`` (a hw.ChipInstance): run the deterministic conv trunk
         on that die's nonideal CIM arrays too (models/sar_cnn.features
@@ -497,7 +525,8 @@ class SarServingEngine(_EngineBase):
         obs.trace.Tracer collecting per-request/per-dispatch spans.
         Neither adds host syncs or changes verdicts (tests/test_obs.py).
         """
-        super().__init__(n_slots, policy, metrics, telemetry, tracer)
+        super().__init__(n_slots, policy, metrics, telemetry, tracer,
+                         profiler)
         from repro.core.bayes_layer import to_serving
         self.cfg = cfg
         self.adaptive_mode = adaptive_mode
@@ -512,6 +541,7 @@ class SarServingEngine(_EngineBase):
         self._head = head
 
         feat = _sar_featurize_fn(cfg, self.hcfg, chip, slot_axis)
+        self._featurize_jit = feat
         self._featurize = lambda imgs: feat(self._params, self._head,
                                             imgs)
         self._scatter = _scatter_fn(slot_axis)
@@ -528,30 +558,32 @@ class SarServingEngine(_EngineBase):
         take = min(len(self.free), len(self.queue))
         if take == 0:
             return
-        reqs = [self.queue.popleft() for _ in range(take)]
-        imgs = np.stack([np.asarray(r.payload) for r in reqs])
-        if take < self.n_slots:                       # fixed-shape batch
-            pad = np.repeat(imgs[-1:], self.n_slots - take, axis=0)
-            imgs = np.concatenate([imgs, pad], axis=0)
-        with self.tracer.span("featurize", n_admitted=take):
-            rows = self._featurize(jnp.asarray(imgs))
-        idx = np.full((self.n_slots,), self.n_slots, np.int32)  # drop
-        now = time.perf_counter()
-        bases = self._next_bases(take)
-        for j, req in enumerate(reqs):
-            s = self.free.pop()
-            idx[j] = s
-            self.slots[s].req = req
-            self.slots[s].admit_s = now
-            self.base[s] = bases[j]
-        idxj = jnp.asarray(idx)
-        if self.pool is None:
-            n_classes = rows["y_mu"].shape[-1]
-            self.pool = jax.tree.map(jnp.zeros_like, rows)
-            self.stats = adaptive.init_stats(self.n_slots, n_classes)
-        self.pool = self._scatter(self.pool, rows, idxj)
-        self.stats = self._stats_reset(self.stats, idxj)
-        self.metrics.mark(now)
+        with self.profiler.span("admission"):
+            reqs = [self.queue.popleft() for _ in range(take)]
+            imgs = np.stack([np.asarray(r.payload) for r in reqs])
+            if take < self.n_slots:                   # fixed-shape batch
+                pad = np.repeat(imgs[-1:], self.n_slots - take, axis=0)
+                imgs = np.concatenate([imgs, pad], axis=0)
+            with self.tracer.span("featurize", n_admitted=take), \
+                    self.profiler.span("featurize"):
+                rows = self._featurize(jnp.asarray(imgs))
+            idx = np.full((self.n_slots,), self.n_slots, np.int32)  # drop
+            now = time.perf_counter()
+            bases = self._next_bases(take)
+            for j, req in enumerate(reqs):
+                s = self.free.pop()
+                idx[j] = s
+                self.slots[s].req = req
+                self.slots[s].admit_s = now
+                self.base[s] = bases[j]
+            idxj = jnp.asarray(idx)
+            if self.pool is None:
+                n_classes = rows["y_mu"].shape[-1]
+                self.pool = jax.tree.map(jnp.zeros_like, rows)
+                self.stats = adaptive.init_stats(self.n_slots, n_classes)
+            self.pool = self._scatter(self.pool, rows, idxj)
+            self.stats = self._stats_reset(self.stats, idxj)
+            self.metrics.mark(now)
 
     # -- main loop ------------------------------------------------------
     def run(self, max_ticks: int = 100_000) -> dict:
@@ -566,35 +598,68 @@ class SarServingEngine(_EngineBase):
             for i, s in enumerate(self.slots):
                 active[i] = s.req is not None
             t_disp = self.tracer.now()
-            if self.tcfg is None:
-                self.stats, verdict, fin, rounds = self._round(
-                    self.pool, self.stats, jnp.asarray(self.base),
-                    jnp.asarray(active))
-            else:
-                (self.stats, verdict, fin, rounds,
-                 self._telem) = self._round(
-                    self.pool, self.stats, jnp.asarray(self.base),
-                    jnp.asarray(active), self._telem)
+            with self.profiler.span("dispatch"):
+                if self.tcfg is None:
+                    self.stats, verdict, fin, rounds = self._round(
+                        self.pool, self.stats, jnp.asarray(self.base),
+                        jnp.asarray(active))
+                else:
+                    (self.stats, verdict, fin, rounds,
+                     self._telem) = self._round(
+                        self.pool, self.stats, jnp.asarray(self.base),
+                        jnp.asarray(active), self._telem)
             # ONE blocking host↔device round trip per dispatch — the
             # while_loop above already ran every all-escalate round.
-            verdict = np.asarray(verdict)
-            fin = {k: np.asarray(v) for k, v in fin.items()}
-            spent = self.r_step * int(rounds)
+            # The triage_loop span measures exactly that pull: the host
+            # waiting on the device-resident escalation.
+            with self.profiler.span("triage_loop"):
+                verdict = np.asarray(verdict)
+                fin = {k: np.asarray(v) for k, v in fin.items()}
+                spent = self.r_step * int(rounds)
             self.host_syncs += 1
             if self.tracer.enabled:
                 self.tracer.complete(
                     "sar_rounds", t_disp, self.tracer.now() - t_disp,
                     rounds=int(rounds), n_active=int(active.sum()),
                     samples_per_slot=spent)
-            for i in np.nonzero(active)[0]:
-                self.slots[i].n_samples += spent
-                if verdict[i] != ESCALATE:
-                    self.slots[i].n_decisions = 1
-                    # n_samples already accumulated; fin["n"] agrees
-                    self._retire(i, verdict[i], fin, extra_samples=0)
+            with self.profiler.span("retirement"):
+                for i in np.nonzero(active)[0]:
+                    self.slots[i].n_samples += spent
+                    if verdict[i] != ESCALATE:
+                        self.slots[i].n_decisions = 1
+                        # n_samples already accumulated; fin["n"] agrees
+                        self._retire(i, verdict[i], fin, extra_samples=0)
         if self.tcfg is not None:
             self.metrics.attach_telemetry(self.telemetry_snapshot())
+        self._attach_perf()
         return self.metrics.summary()
+
+    # -- compiled-cost capture (profiling path only) --------------------
+    def compiled_cost_records(self) -> list[dict]:
+        """obs/prof.compiled_cost records for this engine's hot jitted
+        functions at the LIVE deployed shapes: the device-resident
+        round fn and the featurize fn.  AOT-compiles fresh executables
+        (AOT does not share the jit call cache) — call after ``run()``
+        from a profiling/bench path, never inside the serving loop."""
+        if self.pool is None:
+            raise RuntimeError(
+                "compiled_cost_records needs live pool shapes: run the "
+                "engine (or admit once) first")
+        sds = lambda t: jax.tree.map(                        # noqa: E731
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+        args = [sds(self.pool), sds(self.stats),
+                jax.ShapeDtypeStruct((self.n_slots,), jnp.uint32),
+                jax.ShapeDtypeStruct((self.n_slots,), jnp.bool_)]
+        if self.tcfg is not None:
+            args.append(sds(self._telem))
+        recs = [prof.compiled_cost("sar_round", self._round, *args)]
+        img = jax.ShapeDtypeStruct(
+            (self.n_slots, self.cfg.image_size, self.cfg.image_size, 1),
+            jnp.float32)
+        recs.append(prof.compiled_cost(
+            "sar_featurize", self._featurize_jit, sds(self._params),
+            sds(self._head), img))
+        return recs
 
 
 # ----------------------------------------------------------------------
@@ -627,8 +692,10 @@ class LMServingEngine(_EngineBase):
                  metrics: ServingMetrics = None, extras: dict | None = None,
                  fused: bool = True,
                  telemetry: bool | TelemetryConfig = True,
-                 tracer=None):
-        super().__init__(n_slots, policy, metrics, telemetry, tracer)
+                 tracer=None,
+                 profiler: bool | StageProfiler = True):
+        super().__init__(n_slots, policy, metrics, telemetry, tracer,
+                         profiler)
         from repro.models.registry import get_api
         from repro.models.transformer import _head_serving
         assert cfg.bayesian_head, "adaptive serving needs the Bayesian head"
@@ -743,33 +810,37 @@ class LMServingEngine(_EngineBase):
         take = len(reqs)
         if take == 0:
             return
-        toks = np.zeros((self.n_slots, self.prompt_len), np.int32)
-        lens = np.full((self.n_slots,), self.prompt_len, np.int32)
-        for j, r in enumerate(reqs):
-            toks[j], lens[j] = self._pad_prompt(r.payload)
-        with self.tracer.span("prefill", n_admitted=take):
-            new_cache, last_h = self._prefill(jnp.asarray(toks),
-                                              jnp.asarray(lens))
-        now = time.perf_counter()
-        idx = np.full((self.n_slots,), self.n_slots, np.int32)
-        for j, req in enumerate(reqs):
-            s = self.free.pop()
-            idx[j] = s
-            self.slots[s].req = req
-            self.slots[s].admit_s = now
-        idxj = jnp.asarray(idx)
-        if self.cache is None:
-            self.cache = new_cache
-            self.hidden = jnp.zeros((self.n_slots, last_h.shape[-1]),
-                                    last_h.dtype)
-        else:
-            delta = pos - self.prompt_len
-            self.cache = self._align_scatter(self.cache, new_cache, idxj,
-                                             jnp.int32(delta))
-        # the prefill hidden decides each admitted slot's FIRST token —
-        # no re-feed of the last prompt token into decode.
-        self.hidden = self._scatter_hidden(self.hidden, last_h, idxj)
-        self.metrics.mark(now)
+        with self.profiler.span("admission"):
+            toks = np.zeros((self.n_slots, self.prompt_len), np.int32)
+            lens = np.full((self.n_slots,), self.prompt_len, np.int32)
+            for j, r in enumerate(reqs):
+                toks[j], lens[j] = self._pad_prompt(r.payload)
+            # prefill is the LM engine's featurize: payload -> per-slot
+            # device state.
+            with self.tracer.span("prefill", n_admitted=take), \
+                    self.profiler.span("featurize"):
+                new_cache, last_h = self._prefill(jnp.asarray(toks),
+                                                  jnp.asarray(lens))
+            now = time.perf_counter()
+            idx = np.full((self.n_slots,), self.n_slots, np.int32)
+            for j, req in enumerate(reqs):
+                s = self.free.pop()
+                idx[j] = s
+                self.slots[s].req = req
+                self.slots[s].admit_s = now
+            idxj = jnp.asarray(idx)
+            if self.cache is None:
+                self.cache = new_cache
+                self.hidden = jnp.zeros((self.n_slots, last_h.shape[-1]),
+                                        last_h.dtype)
+            else:
+                delta = pos - self.prompt_len
+                self.cache = self._align_scatter(self.cache, new_cache,
+                                                 idxj, jnp.int32(delta))
+            # the prefill hidden decides each admitted slot's FIRST token
+            # — no re-feed of the last prompt token into decode.
+            self.hidden = self._scatter_hidden(self.hidden, last_h, idxj)
+            self.metrics.mark(now)
 
     # -- main loop ------------------------------------------------------
     def run(self, max_ticks: int = 10_000) -> dict:
@@ -791,18 +862,24 @@ class LMServingEngine(_EngineBase):
             # one token decision for every active slot, ONE dispatch:
             # the whole escalation schedule runs device-resident.
             t_disp = self.tracer.now()
-            abasis = self._basis(self.hidden)
-            self.base = self._next_bases(self.n_slots)
-            if self.tcfg is None:
-                verdict, fin, spent = self._token_decision(
-                    abasis, jnp.asarray(self.base), jnp.asarray(active))
-            else:
-                verdict, fin, spent, self._telem = self._token_decision(
-                    abasis, jnp.asarray(self.base), jnp.asarray(active),
-                    self._telem)
-            verdict = np.asarray(verdict)
-            spent = np.asarray(spent)
-            fin = {k: np.asarray(v) for k, v in fin.items()}
+            with self.profiler.span("dispatch"):
+                abasis = self._basis(self.hidden)
+                self.base = self._next_bases(self.n_slots)
+                if self.tcfg is None:
+                    verdict, fin, spent = self._token_decision(
+                        abasis, jnp.asarray(self.base),
+                        jnp.asarray(active))
+                else:
+                    verdict, fin, spent, self._telem = \
+                        self._token_decision(
+                            abasis, jnp.asarray(self.base),
+                            jnp.asarray(active), self._telem)
+            # blocking pull of the token's escalation outcome — the
+            # whole on-device schedule shows up as this host wait.
+            with self.profiler.span("triage_loop"):
+                verdict = np.asarray(verdict)
+                spent = np.asarray(spent)
+                fin = {k: np.asarray(v) for k, v in fin.items()}
             self.host_syncs += 1
             if self.tracer.enabled:
                 self.tracer.complete(
@@ -811,18 +888,41 @@ class LMServingEngine(_EngineBase):
                     samples=int(spent[active].sum()))
             self.token = jnp.asarray(
                 fin["prediction"].astype(np.int32)[:, None])
-            for i in np.nonzero(active)[0]:
-                slot = self.slots[i]
-                slot.n_samples += int(spent[i])
-                slot.n_decisions += 1
-                done = slot.n_decisions >= slot.req.max_new_tokens
-                if verdict[i] == FLAG or (verdict[i] == ACCEPT and done):
-                    self._retire(i, verdict[i], fin, extra_samples=0)
+            with self.profiler.span("retirement"):
+                for i in np.nonzero(active)[0]:
+                    slot = self.slots[i]
+                    slot.n_samples += int(spent[i])
+                    slot.n_decisions += 1
+                    done = slot.n_decisions >= slot.req.max_new_tokens
+                    if verdict[i] == FLAG or (verdict[i] == ACCEPT
+                                              and done):
+                        self._retire(i, verdict[i], fin, extra_samples=0)
             if self.n_active == 0 and not self.queue:
                 break                       # nothing left to decode for
             # advance the pool clock: committed tokens -> next hidden
-            self.hidden, self.cache = self._decode_hidden(self.cache,
-                                                          self.token)
+            with self.profiler.span("dispatch"):
+                self.hidden, self.cache = self._decode_hidden(self.cache,
+                                                              self.token)
         if self.tcfg is not None:
             self.metrics.attach_telemetry(self.telemetry_snapshot())
+        self._attach_perf()
         return self.metrics.summary()
+
+    # -- compiled-cost capture (profiling path only) --------------------
+    def compiled_cost_records(self) -> list[dict]:
+        """obs/prof.compiled_cost record for the per-token decision fn
+        at the live hidden/basis shapes (AOT; profiling path only)."""
+        if self.hidden is None:
+            raise RuntimeError(
+                "compiled_cost_records needs live shapes: run the "
+                "engine (or admit once) first")
+        sds = lambda t: jax.tree.map(                        # noqa: E731
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+        abasis = jax.eval_shape(self._basis, sds(self.hidden))
+        args = [abasis,
+                jax.ShapeDtypeStruct((self.n_slots,), jnp.uint32),
+                jax.ShapeDtypeStruct((self.n_slots,), jnp.bool_)]
+        if self.tcfg is not None:
+            args.append(sds(self._telem))
+        return [prof.compiled_cost("lm_token", self._token_decision,
+                                   *args)]

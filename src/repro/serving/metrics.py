@@ -278,12 +278,23 @@ class ServingMetrics:
         # obs/telemetry snapshot attached by the engine at drain time;
         # surfaced under summary()["telemetry"].
         self.telemetry: dict | None = None
+        # obs/prof stage-profile snapshot + compile counters, attached
+        # at drain time; surfaced under summary()["stage_profile"] /
+        # ["compile_counters"] (obs.registry.serving_registry exports
+        # both automatically).
+        self.stage_profile: dict | None = None
+        self.compile_counters: dict | None = None
 
     def record(self, rec: RequestRecord) -> None:
         self.records.append(rec)
 
     def attach_telemetry(self, snapshot: dict | None) -> None:
         self.telemetry = snapshot
+
+    def attach_profile(self, stage_profile: dict | None,
+                       compile_counters: dict | None = None) -> None:
+        self.stage_profile = stage_profile
+        self.compile_counters = compile_counters
 
     def mark(self, t: float) -> None:
         if self.wall_start is None:
@@ -313,6 +324,7 @@ class ServingMetrics:
             out.update(self._tile_summary())
             if self.telemetry is not None:
                 out["telemetry"] = self.telemetry
+            out.update(self._perf_summary())
             out.update(self.extra)
             return out
         n_dec = sum(r.n_decisions for r in self.records)
@@ -369,7 +381,16 @@ class ServingMetrics:
         out.update(self._tile_summary())
         if self.telemetry is not None:
             out["telemetry"] = self.telemetry
+        out.update(self._perf_summary())
         out.update(self.extra)
+        return out
+
+    def _perf_summary(self) -> dict:
+        out = {}
+        if self.stage_profile is not None:
+            out["stage_profile"] = self.stage_profile
+        if self.compile_counters is not None:
+            out["compile_counters"] = self.compile_counters
         return out
 
     def _tile_summary(self) -> dict:

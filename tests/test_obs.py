@@ -50,13 +50,15 @@ def sar():
     return init_sar_cnn(jax.random.PRNGKey(3), cfg), cfg
 
 
-def _run_sar(sar, n_requests, *, telemetry, tracer=None, n_slots=8):
+def _run_sar(sar, n_requests, *, telemetry, tracer=None, n_slots=8,
+             profiler=True):
     from repro.launch.serve import make_sar_stream
     from repro.serving import SarServingEngine
     params, cfg = sar
     eng = SarServingEngine(params, cfg, n_slots=n_slots, policy=POLICY,
                           adaptive_mode=True, fused=True,
-                          telemetry=telemetry, tracer=tracer)
+                          telemetry=telemetry, tracer=tracer,
+                          profiler=profiler)
     for r in make_sar_stream(n_requests, corrupt_frac=0.25,
                              corruption="fog"):
         eng.submit(r)
@@ -344,3 +346,50 @@ def test_request_record_clock_fallback():
                        arrival_s=99.0, admit_s=11.0, done_s=12.0,
                        arrival_pc=10.5)
     assert r2.queue_latency_s == 0.5 and r2.latency_s == 1.5
+
+
+# ----------------------------------------------------------------------
+# stage profiler: zero-overhead identity + exposition
+# ----------------------------------------------------------------------
+def test_stage_profiler_verdict_identity_and_exposition(sar):
+    """Profiler on vs off: bit-identical verdicts, equal host syncs
+    (the profiler is host-side bookkeeping around the existing blocking
+    pulls — it must never add device round-trips), stage histograms in
+    the summary, and stage/compile metrics in the .prom exposition."""
+    n = 16
+    eng_on = _run_sar(sar, n, telemetry=False, profiler=True)
+    eng_off = _run_sar(sar, n, telemetry=False, profiler=False)
+    _records_match(eng_on, eng_off, n)
+    assert eng_on.host_syncs == eng_off.host_syncs
+
+    s_on = eng_on.metrics.summary()
+    assert "stage_profile" not in eng_off.metrics.summary()
+    snap = s_on["stage_profile"]
+    for stage in ("admission", "featurize", "dispatch", "triage_loop",
+                  "retirement"):
+        assert snap[stage]["count"] > 0, stage
+        assert snap[stage]["total_s"] >= 0.0
+        assert sum(snap[stage]["counts"]) + snap[stage]["overflow"] \
+            == snap[stage]["count"]
+    cc = s_on["compile_counters"]
+    assert cc["builder_builds"].get("sar_round", 0) >= 1
+
+    text = serving_registry(s_on).to_prometheus()
+    assert "repro_stage_latency_seconds_bucket" in text
+    assert 'stage="triage_loop"' in text
+    assert "repro_engine_builder_builds_total" in text
+    assert "repro_xla_compile_events_total" in text
+
+
+def test_compiled_cost_records_from_engine(sar):
+    """AOT cost capture off the live engine: the fused round + the
+    featurize fn, each with nonzero FLOPs/bytes and a peak-live figure
+    (the profiling path never perturbs the serving jit cache)."""
+    eng = _run_sar(sar, 8, telemetry=False)
+    recs = eng.compiled_cost_records()
+    names = {r["name"] for r in recs}
+    assert names == {"sar_round", "sar_featurize"}
+    for r in recs:
+        assert r["flops"] > 0 and r["hbm_bytes"] > 0
+        assert r["peak_live_bytes"] > 0
+        assert r["compile_s"] >= 0.0

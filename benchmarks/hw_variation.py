@@ -37,7 +37,13 @@ Outputs:
 
 Env knobs (CI smoke): HW_VARIATION_INSTANCES (default 16),
 HW_VARIATION_SEVERITIES (comma floats, default "1.0,2.5"),
-HW_VARIATION_TRUNK ("nonideal" | "ideal").
+HW_VARIATION_TRUNK ("nonideal" | "ideal"),
+HW_VARIATION_AGE_S (simulated field-seconds for the aged arms,
+default 30 days; 0 skips them).  The aged arms measure the die
+LIFETIME story (hw/aging + hw/redeploy): ``aged_stale`` serves the
+birth-calibrated head on the aged physics (what an unmonitored fleet
+degrades to), ``aged_healed`` re-runs §III-B1 calibration against the
+aged die (what the self-healing loop restores).
 
 Run: PYTHONPATH=src python -m benchmarks.hw_variation [--instances N]
 """
@@ -85,6 +91,10 @@ def _severities() -> tuple[float, ...]:
 
 def _nonideal_trunk() -> bool:
     return os.environ.get("HW_VARIATION_TRUNK", "nonideal") != "ideal"
+
+
+def _age_s() -> float:
+    return float(os.environ.get("HW_VARIATION_AGE_S", str(30 * 86400)))
 
 
 def _eval_head(head, scfg, feats, labels) -> dict:
@@ -182,6 +192,7 @@ def run_sweep(n_instances: int | None = None,
 
     _assert_golden_instance_bitexact(gold, base_hcfg, mu, sg, golden_sets)
 
+    age_s = _age_s()
     for sev in severities:
         chips = sample_instances(SEED, n_instances,
                                  VariationSpec().scaled(sev))
@@ -190,10 +201,13 @@ def run_sweep(n_instances: int | None = None,
                                       n_samples=calib_samples)
             eval_sets = (_chip_features(params, cfg, images_sets, chip)
                          if nonideal_trunk else golden_sets)
+            cal_head = cal_cfg = None
             for calibrated in (False, True):
                 head, scfg = prepare_instance_head(
                     mu, sg, base_hcfg, chip, calibrated=calibrated,
                     n_offset_samples=calib_samples)
+                if calibrated:
+                    cal_head, cal_cfg = head, scfg
                 for name, feats, labels in eval_sets:
                     m = _eval_head(head, scfg, feats, labels)
                     rows.append(dict(
@@ -210,6 +224,37 @@ def run_sweep(n_instances: int | None = None,
                         flagged_dev=abs(m["flagged_fraction"]
                                         - golden[name]["flagged_fraction"]),
                         **m))
+            if age_s > 0.0:
+                # Lifetime arms: the same die after ``age_s`` in the
+                # field (hw/aging).  The trunk is age-invariant (aging
+                # scopes to the GRNG subarrays), so eval features are
+                # reused; ``calibrated=None`` keeps these rows out of
+                # the birth-time aggregates above.
+                from repro.hw import at_age
+                from repro.hw.redeploy import aged_belief_view, \
+                    recalibrate
+                aged = at_age(chip, age_s)
+                arms = {
+                    "aged_stale": aged_belief_view(
+                        cal_head, cal_cfg, aged, base_hcfg.grng),
+                    "aged_healed": recalibrate(
+                        mu, sg, base_hcfg, aged, epoch=1,
+                        n_offset_samples=calib_samples),
+                }
+                for arm, (head, scfg) in arms.items():
+                    for name, feats, labels in eval_sets:
+                        m = _eval_head(head, scfg, feats, labels)
+                        rows.append(dict(
+                            severity=sev, chip_id=chip.chip_id,
+                            calibrated=None, arm=arm, data=name,
+                            age_s=age_s, chip_imprint=aged.imprint,
+                            acc_dev=abs(m["accuracy"]
+                                        - golden[name]["accuracy"]),
+                            aece_dev=abs(m["aece"] - golden[name]["aece"]),
+                            flagged_dev=abs(
+                                m["flagged_fraction"]
+                                - golden[name]["flagged_fraction"]),
+                            **m))
 
     # Aggregates: mean over instances per (severity, calibrated, data).
     agg = {}
@@ -229,6 +274,24 @@ def run_sweep(n_instances: int | None = None,
                               "flagged_dev")}
                 agg[key]["accuracy_std"] = float(
                     np.std([r["accuracy"] for r in sel]))
+        if age_s > 0.0:
+            for arm in ("aged_stale", "aged_healed"):
+                for name, _, _ in images_sets:
+                    sel = [r for r in rows
+                           if r["severity"] == sev
+                           and r.get("arm") == arm and r["data"] == name]
+                    key = f"sev{sev}_{arm}_{name}"
+                    agg[key] = {
+                        m: float(np.mean([r[m] for r in sel]))
+                        for m in ("accuracy", "aece", "aurc",
+                                  "mean_mutual_information",
+                                  "flagged_fraction", "acc_dev",
+                                  "aece_dev", "flagged_dev")}
+                    agg[key]["accuracy_std"] = float(
+                        np.std([r["accuracy"] for r in sel]))
+                    # bench()'s CSV loop reads this on every aggregate;
+                    # calibration residual is meaningless for aged arms.
+                    agg[key]["residual_eps"] = float("nan")
 
     # Deployed-area + tilemap-true per-request energy from the compiler:
     # placed blocks (padding, column splits) next to the logical-tile
@@ -245,6 +308,7 @@ def run_sweep(n_instances: int | None = None,
         "eval_batch": EVAL_BATCH,
         "r_samples": R_SAMPLES,
         "trunk": "nonideal" if nonideal_trunk else "ideal",
+        "age_s": age_s,
         "golden_instance_bitexact": True,
         "golden": golden,
         "tilemap": {k: v for k, v in tile_report.items()
@@ -289,6 +353,19 @@ def bench() -> list[tuple[str, float, str]]:
                 f"flagged_dev={u['flagged_dev']:.3f}->"
                 f"{c['flagged_dev']:.3f};"
                 f"json={ART / 'report.json'}"))
+    # Lifetime: what the self-healing loop buys back on a die aged
+    # report["age_s"] in the field (stale birth calibration vs a
+    # recalibrate-and-redeploy against the aged physics).
+    if report["age_s"] > 0.0:
+        st = report["aggregates"][f"sev{sev}_aged_stale_clean"]
+        he = report["aggregates"][f"sev{sev}_aged_healed_clean"]
+        out.append(("hw_variation_aged_recovery", 0.0,
+                    f"sev={sev};age_s={report['age_s']:.0f};"
+                    f"acc_dev={st['acc_dev']:.3f}->{he['acc_dev']:.3f};"
+                    f"aece_dev={st['aece_dev']:.3f}->"
+                    f"{he['aece_dev']:.3f};"
+                    f"flagged_dev={st['flagged_dev']:.3f}->"
+                    f"{he['flagged_dev']:.3f}"))
     e = report["energy_per_request"]
     out.append(("hw_variation_energy", 0.0,
                 f"trunk={report['trunk']};"

@@ -24,8 +24,18 @@ lower false-verification rate and no worse rescue delay than the
 deterministic baseline, while every rollout runs device-resident (one
 host sync per die group).
 
+Lifetime arms (hw/aging + hw/redeploy): each non-ideal die is also
+flown AGED — the FeFET physics drifts mid-mission at
+MISSION_BENCH_AGE_DAYS of simulated field time spread over the steps —
+once with the stale birth calibration (``aged_stale``) and once with
+the self-healing loop recalibrating on drift advisories
+(``aged_healed``).  Aged rollouts dispatch in ``epochs`` segments, so
+their device-residency contract is host_syncs == epochs; the un-aged
+arms keep the strict one-sync gate.
+
 Env knobs (CI smoke): MISSION_BENCH_GRID, _VICTIMS, _DRONES, _STEPS,
-_EPISODES, _BATTERY_UJ, _CHIPS ("ideal,2.5"), _TRAIN_STEPS.
+_EPISODES, _BATTERY_UJ, _CHIPS ("ideal,2.5"), _TRAIN_STEPS,
+_AGE_DAYS (0 skips the aged arms).
 
 Run: PYTHONPATH=src python -m benchmarks.run --only mission_bench
 Writes repo-root BENCH_mission.json (uploaded as a CI artifact).
@@ -44,6 +54,7 @@ ART = Path("artifacts/mission")
 DEFAULTS = {
     "GRID": 14, "VICTIMS": 10, "DRONES": 4, "STEPS": 70, "EPISODES": 2,
     "BATTERY_UJ": 320.0, "CHIPS": "ideal,2.5", "TRAIN_STEPS": 1600,
+    "AGE_DAYS": 90.0,
 }
 CHIP_SEED = 11
 WORLD_SEED = 0
@@ -152,6 +163,57 @@ def bench() -> list[tuple[str, float, str]]:
                     f"sample_saving="
                     f"{claims[chip_tag]['samples_saving_vs_fixed']:.2f}x"))
     report["claims"] = claims
+
+    # Lifetime arms (hw/aging + hw/redeploy): each non-ideal die flies
+    # the full system AGED — AGE_DAYS of simulated field time spread
+    # over the mission — once serving the stale birth calibration and
+    # once with the self-healing loop recalibrating on advisories.
+    # Aged rollouts dispatch in lifetime.epochs segments, so the
+    # device-residency contract there is host_syncs == epochs.
+    lifetime_arms = {}
+    if knobs["AGE_DAYS"] > 0:
+        from repro.hw.redeploy import LifetimeConfig
+        age_rate = knobs["AGE_DAYS"] * 86400.0 / max(knobs["STEPS"], 1)
+        pol = MissionPolicy(mode="bayes_adaptive")
+        for chip_tag, chip in chips.items():
+            if chip is None:
+                continue
+            for arm, heal in (("aged_stale", False), ("aged_healed", True)):
+                lt = LifetimeConfig(age_rate=age_rate,
+                                    auto_recalibrate=heal)
+                t0 = time.time()
+                res = fly_mission(wcfg, ucfg, pol, params=params, cfg=cfg,
+                                  chips=chip, n_steps=knobs["STEPS"],
+                                  n_episodes=knobs["EPISODES"],
+                                  lifetime=lt)
+                wall = time.time() - t0
+                if res.host_syncs != lt.epochs:
+                    raise RuntimeError(
+                        f"aged mission not segment-resident: "
+                        f"{res.host_syncs} host syncs for "
+                        f"{lt.epochs} lifetime epochs")
+                s = dict(res.summary)
+                s["wall_s"] = wall
+                s["host_syncs"] = res.host_syncs
+                ltd = next(iter((res.lifetime or {}).values()), {})
+                s["lifetime"] = ltd
+                name = f"{chip_tag}/{arm}"
+                results[name] = s
+                report["configs"][name] = s
+                lifetime_arms[name] = ltd
+                out.append((
+                    f"mission_{chip_tag}_{arm}",
+                    wall * 1e6 / max(s["decisions"], 1),
+                    f"rescued={s['rescued']}/{s['victims']};"
+                    f"fvr={s['false_verification_rate']:.3f};"
+                    f"samples={s['mean_samples_per_decision']:.1f};"
+                    f"advisories={ltd.get('advisories', 0)};"
+                    f"heals={ltd.get('heals', 0)};"
+                    f"epoch={ltd.get('calib_epoch', 0)}"))
+        report["lifetime"] = {"age_days": knobs["AGE_DAYS"],
+                              "age_rate_s_per_step": age_rate,
+                              "arms": lifetime_arms}
+
     report["scale_overridden"] = overridden
 
     ART.mkdir(parents=True, exist_ok=True)
@@ -178,6 +240,17 @@ def bench() -> list[tuple[str, float, str]]:
             if not (c["fvr_strictly_lower"] and c["rescue_delay_no_worse"]):
                 raise RuntimeError(
                     f"mission acceptance regressed on {chip_tag}: {c}")
+        for name, ltd in lifetime_arms.items():
+            heals = ltd.get("heals", 0)
+            advisories = ltd.get("advisories", 0)
+            if name.endswith("aged_healed"):
+                if advisories < 1 or heals < 1:
+                    raise RuntimeError(
+                        f"self-healing loop never closed on {name}: "
+                        f"advisories={advisories} heals={heals}")
+            elif heals != 0:
+                raise RuntimeError(
+                    f"no-heal arm healed on {name}: heals={heals}")
     return out
 
 

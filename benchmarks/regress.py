@@ -40,6 +40,7 @@ from typing import Any
 BASELINE_PATH = Path(__file__).resolve().parent / "baseline.json"
 SERVING_JSON = Path("BENCH_serving.json")
 KERNELS_JSON = Path("BENCH_kernels.json")
+LIFETIME_JSON = Path("BENCH_lifetime.json")
 
 # metric-name suffix -> (direction, band).  "lower": regression when
 # current > baseline * band; "higher": regression when
@@ -53,9 +54,19 @@ DETERMINISTIC_BANDS: dict[str, tuple[str, float]] = {
     "mean_samples_per_decision": ("lower", 1.05),
     "model_decisions_per_s": ("higher", 1.10),
     "peak_vs_r_growth": ("lower", 1.01),
+    # lifetime loop (BENCH_lifetime.json): the healed serve arm must
+    # keep raising advisories and healing them — a half-strength band
+    # tolerates count jitter but fails on zero.
+    "advisories": ("higher", 2.0),
+    "heals": ("higher", 2.0),
 }
 ABS_BANDS: dict[str, float] = {
     "flag_fraction": 0.05,
+    # lifetime loop: structural booleans (1.0 = pass) and the healed
+    # die's clean acc-dev, which must stay inside the PR 2 band.
+    "gates_all_pass": 0.0,
+    "false_advisories": 0.0,
+    "healed_clean_acc_dev": 0.01,
 }
 # wall-clock metrics: band comes from --wall-ratio
 WALL_LOWER_SUFFIXES = ("us_per_call_warm",)
@@ -74,6 +85,7 @@ def _kernel_rows(doc: dict) -> dict[str, dict]:
 
 def current_metrics(serving_path: Path | str = SERVING_JSON,
                     kernels_path: Path | str = KERNELS_JSON,
+                    lifetime_path: Path | str = LIFETIME_JSON,
                     ) -> dict[str, float]:
     """Flat {metric_name: value} from the BENCH_*.json snapshots.
 
@@ -82,6 +94,7 @@ def current_metrics(serving_path: Path | str = SERVING_JSON,
     read as a pass)."""
     out: dict[str, float] = {}
     serving_path, kernels_path = Path(serving_path), Path(kernels_path)
+    lifetime_path = Path(lifetime_path)
     if serving_path.exists():
         doc = json.loads(serving_path.read_text())
         for cfg, rec in doc.get("configs", {}).items():
@@ -102,6 +115,25 @@ def current_metrics(serving_path: Path | str = SERVING_JSON,
             m = re.search(r"growth=([0-9.]+)x", row.get("derived", ""))
             if m:
                 out["kernels.fused.peak_vs_r_growth"] = float(m.group(1))
+    if lifetime_path.exists():
+        doc = json.loads(lifetime_path.read_text())
+        healed = doc.get("serve", {}).get("healed", {}).get("lifetime", {})
+        fresh = doc.get("serve", {}).get("fresh", {}).get("lifetime", {})
+        for key in ("advisories", "heals"):
+            v = healed.get(key)
+            if isinstance(v, (int, float)):
+                out[f"lifetime.serve_healed.{key}"] = float(v)
+        v = fresh.get("advisories")
+        if isinstance(v, (int, float)):
+            out["lifetime.serve_fresh.false_advisories"] = float(v)
+        dev = (doc.get("static", {}).get("arms", {}).get("healed", {})
+               .get("clean", {}).get("acc_dev"))
+        if isinstance(dev, (int, float)):
+            out["lifetime.static.healed_clean_acc_dev"] = float(dev)
+        gates = doc.get("gates", {})
+        if gates:
+            out["lifetime.gates_all_pass"] = float(
+                all(bool(v) for v in gates.values()))
     return out
 
 
@@ -172,6 +204,7 @@ def main(argv=None) -> int:
     ap.add_argument("--baseline", default=str(BASELINE_PATH))
     ap.add_argument("--serving", default=str(SERVING_JSON))
     ap.add_argument("--kernels", default=str(KERNELS_JSON))
+    ap.add_argument("--lifetime", default=str(LIFETIME_JSON))
     ap.add_argument("--wall-ratio", type=float, default=1.5,
                     help="tolerance ratio for wall-clock metrics "
                          "(CI interpret-mode runs pass a generous "
@@ -182,7 +215,7 @@ def main(argv=None) -> int:
                          "metrics instead of gating")
     args = ap.parse_args(argv)
 
-    current = current_metrics(args.serving, args.kernels)
+    current = current_metrics(args.serving, args.kernels, args.lifetime)
     if not current:
         print("regress: no BENCH_*.json snapshots found — run "
               "benchmarks first", file=sys.stderr)

@@ -11,6 +11,8 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
   serving_bench      --        adaptive-R vs fixed-R serving engine
   hw_variation       --        chip-instance MC sweep, cal vs uncal
   mission_bench      --        closed-loop SAR mission (BENCH_mission)
+  lifetime_bench     --        FeFET aging + self-healing redeploy
+                               (BENCH_lifetime)
   roofline           --        decision-path roofline (always) +
                                3-term roofline over dry-run artifacts
 
@@ -48,10 +50,12 @@ MODULES = [
     "fig16_uq",
     "table2_corr",
     "mission_bench",
+    "lifetime_bench",
     "roofline",
 ]
 FAST_SKIP = {"fig16_uq", "table2_corr", "serving_bench",
-             "hw_variation", "mission_bench"}  # SAR training
+             "hw_variation", "mission_bench",
+             "lifetime_bench"}  # SAR training
 
 
 def main() -> None:

@@ -73,12 +73,23 @@ class GRNGConfig:
     # ------------------------------------------------------------------
     read_sigma: float = 0.0
     noise_seed: int = 0x51CE
+    # Aging imprint (hw/aging.py): the accumulated per-DEVICE Vth walk
+    # of a field-aged die — an additive hash-frozen Gaussian per device
+    # keyed by ``imprint_seed``, magnitude ``imprint`` µA RMS.  Unlike
+    # the uniform drift axis this cannot fold into (i_lo, delta_i,
+    # gamma): it decorrelates every cell's mean offset from its
+    # calibration-time value, which is exactly why aged dies need
+    # recalibration (hw/redeploy.py).  Zero = fresh die; the term is
+    # compiled out and every existing path is bit-identical.
+    imprint: float = 0.0
+    imprint_seed: int = 0x1A9E
 
     def analytic_sum_stats(self) -> tuple[float, float]:
         """Closed-form mean/SD of the 8-device sum under the device model
         (including cycle-to-cycle read noise)."""
         mean = self.k_select * (self.i_lo + 0.5 * self.delta_i)
-        var = (self.k_select * (self.delta_i**2 / 4.0 + self.gamma**2)
+        var = (self.k_select * (self.delta_i**2 / 4.0 + self.gamma**2
+                                + self.imprint**2)
                + self.read_sigma**2)
         return mean, float(np.sqrt(var))
 
@@ -94,7 +105,11 @@ def device_currents(cfg: GRNGConfig, rows: jnp.ndarray, cols: jnp.ndarray) -> jn
     h = hash3(rows[..., None], cols[..., None], j, cfg.seed)
     b = uniform_bit(h)
     v = gaussianish(h)
-    return cfg.i_lo + cfg.delta_i * b + cfg.gamma * v
+    out = cfg.i_lo + cfg.delta_i * b + cfg.gamma * v
+    if cfg.imprint:
+        hi = hash3(rows[..., None], cols[..., None], j, cfg.imprint_seed)
+        out = out + cfg.imprint * gaussianish(hi)
+    return out
 
 
 def device_current_j(cfg: GRNGConfig, rows: jnp.ndarray, cols: jnp.ndarray,
@@ -105,7 +120,11 @@ def device_current_j(cfg: GRNGConfig, rows: jnp.ndarray, cols: jnp.ndarray,
     basis construction in core/sampling.py, which visits devices one at
     a time to bound peak memory)."""
     h = hash3(rows, cols, jnp.asarray(j, jnp.uint32), cfg.seed)
-    return cfg.i_lo + cfg.delta_i * uniform_bit(h) + cfg.gamma * gaussianish(h)
+    out = cfg.i_lo + cfg.delta_i * uniform_bit(h) + cfg.gamma * gaussianish(h)
+    if cfg.imprint:
+        hi = hash3(rows, cols, jnp.asarray(j, jnp.uint32), cfg.imprint_seed)
+        out = out + cfg.imprint * gaussianish(hi)
+    return out
 
 
 def device_currents_grid(cfg: GRNGConfig, n_rows: int, n_cols: int,

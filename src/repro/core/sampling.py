@@ -71,6 +71,13 @@ class BayesHeadConfig:
     # memory is K·hoist_tile_n·16 instead of K·N·16, so an LM head no
     # longer pays 16× weight memory to skip per-step hash recompute.
     hoist_tile_n: int = 0
+    # Calibration epoch of the head this config serves.  Bumped by
+    # hw/redeploy.py on every recalibrate-and-hot-swap so a healed
+    # head's jitted builders can NEVER alias a stale epoch's cache
+    # entries (two calibrations of the same die may hash-equal when the
+    # drift sits below measurement resolution), while epoch-free
+    # builders (scatter, stats reset) stay cached across heals.
+    calib_epoch: int = 0
 
 
 def hoisted_sigma_basis(sigma: jnp.ndarray, grng_cfg: g.GRNGConfig,

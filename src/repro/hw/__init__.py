@@ -12,6 +12,10 @@ models the population a deployment actually ships:
                placement, utilization/area for the energy model
   calib.py     per-instance recalibration (measured sum stats + offset
                re-compensation) and the calibration report
+  aging.py     time-evolving retention loss: ``chip.at_age(t)`` — drift
+               arrives in the field instead of frozen at creation
+  redeploy.py  act on obs/drift advisories: recalibrate the aged die,
+               bump the calibration epoch, hot-swap a running engine
 
 Entry points: ``sample_instances`` → ``prepare_instance_head`` →
 serve/evaluate with the returned head + config (the serving engines'
@@ -19,20 +23,28 @@ rank-16 fast path runs unchanged);  ``compile_network`` →
 ``TileProgram.report()`` for deployed area/utilization/energy.
 """
 
+from repro.hw.aging import AgingSpec, age_factors, at_age, die_rates
 from repro.hw.calib import (CalibrationReport, calibration_report,
                             measured_grng, prepare_instance_head)
-from repro.hw.device import VariationSpec, degraded_grng, drift_factor
+from repro.hw.device import (VariationSpec, degraded_grng, drift_factor,
+                             retention_decades)
 from repro.hw.instance import (ChipInstance, golden_instance,
                                load_instances, sample_instances,
                                save_instances)
+from repro.hw.redeploy import (HealEvent, LifetimeConfig,
+                               SelfHealingController, aged_belief_view,
+                               recalibrate)
 from repro.hw.tilemap import (Placement, TileGrid, TileProgram,
                               compile_layer, compile_network,
                               shard_column_partition)
 
 __all__ = [
-    "CalibrationReport", "ChipInstance", "Placement", "TileGrid",
-    "TileProgram", "VariationSpec", "calibration_report", "compile_layer",
-    "compile_network", "degraded_grng", "drift_factor", "golden_instance",
+    "AgingSpec", "CalibrationReport", "ChipInstance", "HealEvent",
+    "LifetimeConfig", "Placement", "SelfHealingController", "TileGrid",
+    "TileProgram", "VariationSpec", "age_factors", "aged_belief_view",
+    "at_age", "calibration_report", "compile_layer", "compile_network",
+    "degraded_grng", "die_rates", "drift_factor", "golden_instance",
     "load_instances", "measured_grng", "prepare_instance_head",
-    "sample_instances", "save_instances", "shard_column_partition",
+    "recalibrate", "retention_decades", "sample_instances",
+    "save_instances", "shard_column_partition",
 ]

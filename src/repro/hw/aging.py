@@ -1,0 +1,145 @@
+"""Time-evolving FeFET aging: retention-loss drift that ARRIVES in the
+field instead of being frozen at die creation.
+
+The paper's GRNG arrays are programmed once and read forever, so the
+nonideality budget is not static: polarization retention loss slowly
+discharges the programmed Vth states (mean current droop), imprint
+spreads the device-to-device distribution (γ growth), and read-disturb
+accumulation raises the cycle-to-cycle noise floor — the exact aging
+terms Bayes2IMC and FeBiM flag as the threat to in-memory Bayesian
+inference.  ``hw/instance.py`` samples a die's *birth* corner;
+this module evolves it:
+
+    aged = chip.at_age(t_s)          # ChipInstance at field age t_s
+
+All four laws are log-linear in time (``device.retention_decades``:
+``dec = ln(1 + t/t0)``), the standard FeFET retention signature — fast
+early drift, never saturating.  Per-die aging *rates* are drawn from a
+NumPy PRNG keyed purely by the die's serialized seeds, so:
+
+  * aging is deterministic in (die, t): same seed + same age →
+    bit-identical instance, on any host, any process;
+  * ``at_age(0)`` IS the birth instance (dec = exactly 0.0);
+  * aging commutes with ``to_tree``/``from_tree`` round-trips — the
+    rates are a pure function of fields that serialize exactly.
+
+Aging scopes to the GRNG subarrays only (current params + read σ +
+imprint): the trunk's ADC front-ends and written conductances are
+standard FeFET weight cells whose retention the paper's §III
+write-verify margins cover, while the GRNG cells are *biased into* the
+stochastic regime and live with tiny margins — they age first.
+Mechanically the uniform laws fold through ``device.degraded_grng``'s
+(f_i_lo, f_delta_i, f_gamma, read_sigma) channel, and the per-device
+Vth walk rides the core model's ``imprint`` term — so every downstream
+consumer (offset closed form, rank-16 basis, fused kernels, telemetry
+probe) sees the aged physics with zero new plumbing, and recalibration
+(hw/calib + hw/redeploy) can measure it right back out.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.hw import device as dev
+
+# Tag mixed into the aging-rate PRNG key so the rate draw never aliases
+# the die's device/noise/weight streams.
+_SEED_AGE = 0xA6ED
+
+
+@dataclasses.dataclass(frozen=True)
+class AgingSpec:
+    """Population statistics of the aging laws (per ln-decade rates).
+
+    Defaults follow published FeFET retention corners: a fraction of a
+    percent of mean current lost per ln-decade after a ~1 h knee, plus
+    a per-device imprint walk.  At 30 field-days (t=2.6e6 s, ~6.6
+    decades) a severity-2.5 die has drifted ~3% in mean current and
+    ~0.4 µA RMS in imprint — far past the |z|>5 drift gate against its
+    calibration-time belief (measured |z_mean| ≈ 25) and enough to
+    visibly degrade verdicts (clean accuracy-vs-golden deviation
+    ~0.06 stale vs ~0.01 recalibrated; benchmarks/lifetime_bench.py
+    measures both).
+    """
+
+    t0_s: float = 3600.0            # retention knee [s]
+    # Mean fractional current droop per ln-decade (negative: retention
+    # LOSS), applied to i_lo and Δi — a uniform multiplicative drift,
+    # so it folds exactly (hw/device.py axis 3).
+    drift_per_decade: float = -0.005
+    # Device-to-device spread γ grows per ln-decade (fractional).
+    gamma_per_decade: float = 0.008
+    # Read-disturb accumulation: σ_read grows per ln-decade [µA].
+    read_sigma_per_decade: float = 0.004
+    # Imprint: each device's Vth walks away from its programmed state,
+    # an ADDITIVE per-device Gaussian of this RMS per ln-decade [µA]
+    # (GRNGConfig.imprint).  The only axis that decorrelates per-cell
+    # mean offsets from their calibration-time values — uniform droop
+    # cancels in the class softmax, imprint is what actually degrades
+    # verdicts and what recalibration measures back out.
+    imprint_per_decade: float = 0.06
+    # Per-die lognormal-ish spread of all four rates around the mean.
+    rate_spread: float = 0.3
+
+
+def die_rates(device_seed: int, noise_seed: int,
+              spec: AgingSpec | None = None
+              ) -> tuple[float, float, float, float]:
+    """(drift, γ-growth, σ_read-growth, imprint) per-decade rates for
+    one die.
+
+    Keyed only by the die's serialized seeds — never stored on the
+    instance — so save/load round-trips cannot desynchronize a die from
+    its own aging trajectory."""
+    spec = spec or AgingSpec()
+    rng = np.random.default_rng(
+        (int(device_seed) ^ _SEED_AGE, int(noise_seed), _SEED_AGE))
+    z = rng.standard_normal(4)
+    drift = spec.drift_per_decade * (1.0 + spec.rate_spread * z[0])
+    gamma = abs(spec.gamma_per_decade * (1.0 + spec.rate_spread * z[1]))
+    read = abs(spec.read_sigma_per_decade * (1.0 + spec.rate_spread * z[2]))
+    imprint = abs(spec.imprint_per_decade * (1.0 + spec.rate_spread * z[3]))
+    return float(drift), float(gamma), float(read), float(imprint)
+
+
+def age_factors(chip, t_s: float, spec: AgingSpec | None = None
+                ) -> tuple[float, float, float, float]:
+    """(f_drift, f_gamma, d_read_sigma, d_imprint) at age t_s —
+    multiplier, multiplier, additive µA, additive µA RMS.
+
+    Exactly (1.0, 1.0, 0.0, 0.0) at t=0 — ``at_age(0)`` is the
+    identity."""
+    spec = spec or AgingSpec()
+    dec = dev.retention_decades(float(t_s), spec.t0_s)
+    drift, gamma, read, imprint = die_rates(
+        chip.device_seed, chip.noise_seed, spec)
+    return 1.0 + drift * dec, 1.0 + gamma * dec, read * dec, imprint * dec
+
+
+def at_age(chip, t_s: float, spec: AgingSpec | None = None):
+    """``chip`` (a birth-state ChipInstance) after ``t_s`` field seconds.
+
+    Returns a new frozen instance — a new identity, so identity-keyed
+    jit caches (featurize/round builders) key the aged die separately
+    from its birth state, exactly like a different chip.  Raises on an
+    already-aged input: ages are absolute (from programming), never
+    compounded, so there is one well-defined die per (seed, t)."""
+    if getattr(chip, "age_s", 0.0) != 0.0:
+        raise ValueError(
+            f"at_age expects the birth (age-0) instance; this die is "
+            f"already at age {chip.age_s:g}s — keep the birth instance "
+            f"and call birth.at_age(t) with absolute t")
+    t_s = float(t_s)
+    if t_s == 0.0:
+        return chip
+    f_drift, f_gamma, d_read, d_imprint = age_factors(chip, t_s, spec)
+    return dataclasses.replace(
+        chip,
+        f_i_lo=chip.f_i_lo * f_drift,
+        f_delta_i=chip.f_delta_i * f_drift,
+        f_gamma=chip.f_gamma * f_gamma,
+        read_sigma=chip.read_sigma + d_read,
+        imprint=chip.imprint + d_imprint,
+        age_s=t_s)

@@ -96,14 +96,36 @@ def drift_factor(tc_current: float, temp_c: float) -> float:
     return 1.0 + tc_current * (temp_c - T_NOMINAL_C)
 
 
+def retention_decades(t_s: float, t0_s: float) -> float:
+    """Retention-loss clock: ln(1 + t/t0) elapsed "decades" at age t.
+
+    FeFET polarization retention is log-linear in time (the write-free
+    endurance story: the loss per ln-decade is small, but it never
+    stops).  ``log1p`` pins age 0 to exactly 0.0 decades so an un-aged
+    die is bit-identical to its birth state; ``t0_s`` is the knee below
+    which the die is effectively fresh.  Pure math — hw/aging.py turns
+    decades into per-die parameter drift."""
+    if t_s < 0.0:
+        raise ValueError(f"age must be >= 0, got {t_s}")
+    import math
+    return math.log1p(t_s / t0_s)
+
+
 def degraded_grng(base: GRNGConfig, *, device_seed: int, noise_seed: int,
                   f_i_lo: float = 1.0, f_delta_i: float = 1.0,
                   f_gamma: float = 1.0, drift: float = 1.0,
-                  read_sigma: float = 0.0) -> GRNGConfig:
+                  read_sigma: float = 0.0, imprint: float = 0.0,
+                  imprint_seed: int | None = None) -> GRNGConfig:
     """The chip's physical GRNG: redrawn devices, shifted corner,
     drifted currents, read noise — with the *nominal* standardization
     constants (what an uncalibrated deployment believes).  hw/calib.py
-    replaces the constants with per-chip measured values."""
+    replaces the constants with per-chip measured values.
+
+    ``imprint`` is the sixth, AGE-ONLY axis (hw/aging.py): a frozen
+    additive per-device Vth walk of magnitude ``imprint`` µA RMS keyed
+    by ``imprint_seed``.  It cannot fold into the three parameters —
+    it shifts every cell's mean offset away from the calibration-time
+    value, which is what makes an aged die need re-measurement."""
     return dataclasses.replace(
         base,
         seed=device_seed,
@@ -112,4 +134,7 @@ def degraded_grng(base: GRNGConfig, *, device_seed: int, noise_seed: int,
         gamma=base.gamma * f_gamma * drift,
         read_sigma=read_sigma,
         noise_seed=noise_seed,
+        imprint=imprint,
+        imprint_seed=(base.imprint_seed if imprint_seed is None
+                      else imprint_seed),
     )

@@ -32,6 +32,7 @@ from repro.hw import device as dev
 _SEED_DEVICE = 0xD1E0
 _SEED_NOISE = 0x0A15
 _SEED_WEIGHT = 0x3E17
+_SEED_IMPRINT = 0x16B1   # per-die aging-imprint walk (hw/aging.py)
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -50,6 +51,8 @@ class ChipInstance:
     tc_current: float = 0.0
     read_sigma: float = 0.0
     program_sigma: float = 0.0
+    age_s: float = 0.0          # simulated seconds since programming
+    imprint: float = 0.0        # accumulated Vth-walk RMS [µA] at age_s
     adc_gain: np.ndarray = dataclasses.field(
         default_factory=lambda: np.ones((64,), np.float32))
     adc_offset: np.ndarray = dataclasses.field(
@@ -66,7 +69,13 @@ class ChipInstance:
             f_i_lo=self.f_i_lo, f_delta_i=self.f_delta_i,
             f_gamma=self.f_gamma,
             drift=dev.drift_factor(self.tc_current, t),
-            read_sigma=self.read_sigma)
+            read_sigma=self.read_sigma,
+            imprint=self.imprint,
+            # an un-aged die keeps the base seed: at imprint == 0 the
+            # term is compiled out, and a dead per-die seed would break
+            # GRNGConfig equality (jit cache keys, golden bit-identity)
+            imprint_seed=(self.device_seed ^ _SEED_IMPRINT
+                          if self.imprint else None))
 
     def program_weights(self, w: jnp.ndarray, tag: int = 0) -> jnp.ndarray:
         """Conductance programming error: w·(1 + σ_p·ν(k,n)).
@@ -81,6 +90,16 @@ class ChipInstance:
         cols = jnp.arange(w.shape[1], dtype=jnp.uint32)[None, :]
         h = hash3(rows, cols, jnp.uint32(tag), self.weight_seed)
         return w * (1.0 + self.program_sigma * gaussianish(h)).astype(w.dtype)
+
+    def at_age(self, t_s: float, spec=None) -> "ChipInstance":
+        """This die after ``t_s`` simulated seconds in the field.
+
+        Delegates to hw/aging.py: retention loss drifts the GRNG current
+        params and read noise grows slowly, deterministically in
+        (device_seed, t_s).  Only valid from the birth (age-0) instance
+        so an age is always absolute, never compounded."""
+        from repro.hw import aging
+        return aging.at_age(self, t_s, spec)
 
     def adc_columns(self, n_cols: int) -> tuple[np.ndarray, np.ndarray]:
         """(gain [n_cols], offset [n_cols]): the 64 physical column
@@ -102,6 +121,8 @@ class ChipInstance:
     def from_tree(cls, tree: dict) -> "ChipInstance":
         kw = {}
         for f in dataclasses.fields(cls):
+            if f.name not in tree:
+                continue  # field added after the ckpt: dataclass default
             v = np.asarray(tree[f.name])
             if v.ndim == 0:
                 v = v.item()

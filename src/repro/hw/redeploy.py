@@ -1,0 +1,221 @@
+"""Recalibrate-and-redeploy: act on drift advisories without stopping.
+
+obs/drift.py raises a recalibration advisory when the telemetry probe's
+streamed GRNG moments z-fail against the deployment's belief.  This
+module is the actuator: it re-runs the paper's §III-B1 calibration
+(``calib.measured_grng`` + ``calib.prepare_instance_head``) against the
+*aged* die and hands back a head + config that a running engine can
+hot-swap (``SarServingEngine.swap_head``) between dispatches.
+
+Three layers:
+
+  * :func:`aged_belief_view` — the STALE deployment on an aged die:
+    physics follows ``hw/aging`` but the head still carries the
+    calibration-time standardization constants and µ' compensation.
+    This is what serving "feels" as drift arrives mid-stream.
+  * :func:`recalibrate` — fresh measurement + compensation on the aged
+    instance, with the ``BayesHeadConfig.calib_epoch`` bumped so the
+    healed head's jitted builders never alias a stale epoch's cache
+    entries while epoch-free builders (scatter, stats reset) survive.
+  * :class:`SelfHealingController` — owns one die's lifetime: birth
+    instance, deployed belief, streaming :class:`DriftMonitor`;
+    advances simulated age, folds telemetry deltas, heals on advisory.
+    launch/serve.py and mission/rollout.py both drive their loops
+    through it.
+
+The controller never mutates the birth instance — an age is always
+absolute (``birth.at_age(t)``), so the same (die, t) is bit-identical
+whether it was reached in one jump or across twenty serve segments.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.core.sampling import BayesHeadConfig, hoisted_sigma_basis
+from repro.hw.aging import AgingSpec, at_age
+from repro.hw.calib import prepare_instance_head
+from repro.hw.instance import ChipInstance
+from repro.obs.drift import (DriftGate, DriftMonitor, DriftStatus,
+                             reference_for)
+
+
+@dataclasses.dataclass(frozen=True)
+class LifetimeConfig:
+    """How a serve stream / mission ages its dies.
+
+    ``age_rate`` is simulated field-seconds per decision (serve) or per
+    mission step (rollout): benches compress a month of field time into
+    one run by passing large rates.  ``epochs`` is how many age/heal
+    checkpoints the stream is cut into; 0 age_rate disables aging and
+    the callers take their exact pre-lifetime path (bit-identical
+    results, unchanged host-sync counts)."""
+
+    age_rate: float = 0.0
+    epochs: int = 4
+    auto_recalibrate: bool = False
+    spec: AgingSpec = dataclasses.field(default_factory=AgingSpec)
+    gate: DriftGate = dataclasses.field(default_factory=DriftGate)
+
+    @property
+    def active(self) -> bool:
+        return self.age_rate > 0.0 and self.epochs > 0
+
+
+@dataclasses.dataclass(frozen=True)
+class HealEvent:
+    """One recalibrate-and-redeploy, for reports and bench JSONs."""
+
+    age_s: float
+    calib_epoch: int
+    z_mean: float
+    z_std: float
+    n: float
+    advisory: str | None
+
+    def to_dict(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def aged_belief_view(head: dict, hcfg: BayesHeadConfig,
+                     aged: ChipInstance,
+                     base_grng) -> tuple[dict, BayesHeadConfig]:
+    """The deployed head served on aged physics with a stale belief.
+
+    Physics moves, belief does not: the returned config's GRNG carries
+    the aged instance's physical params (currents, read σ) but the
+    *deployment-time* standardization constants, and the head's µ'/σ
+    arrays are untouched — write-free hardware cannot rewrite them.
+    The one head leaf that does change is the hoisted σ⊙I_j basis: it
+    is a cache of physically-read device currents, and an aged die
+    reads aged currents.  ``base_grng`` is the factory golden config
+    the instance's physical view folds over (``cfg.grng``)."""
+    phys = aged.grng(base_grng)
+    view_grng = dataclasses.replace(
+        phys, sum_mean=hcfg.grng.sum_mean, sum_std=hcfg.grng.sum_std)
+    hcfg_view = dataclasses.replace(hcfg, grng=view_grng)
+    head_view = dict(head)
+    if "sigma_basis" in head or "sigma_basis_host" in head:
+        head_view.pop("sigma_basis", None)
+        head_view.pop("sigma_basis_host", None)
+        head_view.update(hoisted_sigma_basis(
+            head["sigma"], view_grng, hcfg.compute_dtype,
+            hcfg.hoist_tile_n))
+    return head_view, hcfg_view
+
+
+def recalibrate(mu, sigma, base_hcfg: BayesHeadConfig,
+                aged: ChipInstance, *, epoch: int,
+                n_offset_samples: int = 64
+                ) -> tuple[dict, BayesHeadConfig]:
+    """§III-B1 calibration against the aged die, at ``calib_epoch``.
+
+    Re-measures the drifted sum statistics, re-compensates µ' against
+    the aged offsets, and rebuilds the hoisted basis — the full
+    ``prepare_instance_head`` path, so a healed head is bit-identical
+    to a cold deployment onto the same aged instance."""
+    base = dataclasses.replace(base_hcfg, calib_epoch=int(epoch))
+    return prepare_instance_head(mu, sigma, base, aged, calibrated=True,
+                                 n_offset_samples=n_offset_samples)
+
+
+class SelfHealingController:
+    """One die's lifetime: age advance, drift watch, heal on advisory.
+
+    Holds the birth instance plus the (µ, σ) the trunk wants deployed;
+    ``advance(t)`` returns the stale-belief (head, hcfg) view at age t,
+    ``observe_snapshot`` folds a cumulative telemetry snapshot's delta
+    into the streaming monitor, and ``heal()`` recalibrates at the
+    current age, bumps ``calib_epoch``, and re-references the monitor.
+    """
+
+    def __init__(self, chip: ChipInstance, mu, sigma,
+                 base_hcfg: BayesHeadConfig, *, calibrated: bool = True,
+                 spec: AgingSpec | None = None,
+                 gate: DriftGate | None = None,
+                 probe_cells: int = 32, n_offset_samples: int = 64):
+        if chip.age_s != 0.0:
+            raise ValueError("SelfHealingController owns a die from "
+                             "birth; pass the age-0 instance")
+        self.chip = chip
+        self.mu, self.sigma = mu, sigma
+        self.base_hcfg = base_hcfg
+        self.calibrated = bool(calibrated)
+        self.spec = spec or AgingSpec()
+        self.gate = gate or DriftGate()
+        self.probe_cells = int(probe_cells)
+        self.n_offset_samples = int(n_offset_samples)
+        self.epoch = 0
+        self.age_s = 0.0
+        self._belief_age_s = 0.0   # die age the deployed head was
+        self._last = (0.0, 0.0, 0.0)  # measured at (0 = birth calib)
+        self.events: list[HealEvent] = []
+        self.head, self.hcfg = prepare_instance_head(
+            mu, sigma, base_hcfg, chip, calibrated=calibrated,
+            n_offset_samples=n_offset_samples)
+        self.monitor = DriftMonitor(self._belief_reference(), self.gate)
+
+    def _belief_reference(self):
+        return reference_for(self.base_hcfg, self.hcfg,
+                             calibrated=self.calibrated,
+                             probe_cells=self.probe_cells)
+
+    # -- age ------------------------------------------------------------
+    def view(self) -> tuple[dict, BayesHeadConfig]:
+        """(head, hcfg) the engine should serve at the current age."""
+        if self.age_s == self._belief_age_s:
+            return self.head, self.hcfg
+        aged = at_age(self.chip, self.age_s, self.spec)
+        return aged_belief_view(self.head, self.hcfg, aged,
+                                self.base_hcfg.grng)
+
+    def advance(self, t_s: float) -> tuple[dict, BayesHeadConfig]:
+        """Move the die to absolute field age ``t_s`` (monotone)."""
+        t_s = float(t_s)
+        if t_s < self.age_s:
+            raise ValueError(f"age runs forward: {t_s} < {self.age_s}")
+        self.age_s = t_s
+        return self.view()
+
+    # -- watch ----------------------------------------------------------
+    def observe_snapshot(self, snapshot: dict[str, Any]) -> DriftStatus:
+        """Fold a CUMULATIVE telemetry snapshot; returns fresh status."""
+        g = snapshot.get("grng", snapshot)
+        n, s, ssq = float(g["n"]), float(g["sum"]), float(g["sumsq"])
+        ln, ls, lssq = self._last
+        self._last = (n, s, ssq)
+        if n > ln:
+            self.monitor.observe(n - ln, s - ls, ssq - lssq)
+        return self.monitor.status()
+
+    # -- heal -----------------------------------------------------------
+    def heal(self, status: DriftStatus | None = None) -> HealEvent:
+        """Recalibrate at the current age and redeploy the belief."""
+        status = status or self.monitor.status()
+        aged = at_age(self.chip, self.age_s, self.spec)
+        self.epoch += 1
+        self.head, self.hcfg = recalibrate(
+            self.mu, self.sigma, self.base_hcfg, aged, epoch=self.epoch,
+            n_offset_samples=self.n_offset_samples)
+        self.calibrated = True
+        self._belief_age_s = self.age_s
+        self.monitor = DriftMonitor(self._belief_reference(), self.gate)
+        ev = HealEvent(age_s=self.age_s, calib_epoch=self.epoch,
+                       z_mean=status.z_mean, z_std=status.z_std,
+                       n=status.n, advisory=status.advisory)
+        self.events.append(ev)
+        return ev
+
+    def maybe_heal(self, status: DriftStatus) -> HealEvent | None:
+        """Heal iff the status carries an advisory."""
+        return self.heal(status) if status.drifted else None
+
+    def report(self) -> dict[str, Any]:
+        return {
+            "age_s": self.age_s,
+            "calib_epoch": self.epoch,
+            "heals": len(self.events),
+            "events": [e.to_dict() for e in self.events],
+            "status": self.monitor.status().to_dict(),
+        }

@@ -63,7 +63,11 @@ def _device_current(rows, cols, j: int, cfg: GRNGConfig):
     """Virtual device current I(k, n, j) for a coordinate block."""
     h = _hash3(rows, cols, j, cfg.seed)
     bit = ((h >> jnp.uint32(31)) & jnp.uint32(1)).astype(jnp.float32)
-    return cfg.i_lo + cfg.delta_i * bit + cfg.gamma * _gauss_of(h)
+    out = cfg.i_lo + cfg.delta_i * bit + cfg.gamma * _gauss_of(h)
+    if cfg.imprint:                          # aged-die twin (hw/aging)
+        out = out + cfg.imprint * _gauss_of(
+            _hash3(rows, cols, j, cfg.imprint_seed))
+    return out
 
 
 def _read_noise(rows, cols, r_abs: int, cfg: GRNGConfig):

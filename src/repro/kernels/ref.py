@@ -28,7 +28,12 @@ def grng_eps_ref(cfg: g.GRNGConfig, n_rows: int, n_cols: int,
 
 def _currents_j(cfg: g.GRNGConfig, rows, cols, j) -> jnp.ndarray:
     h = hash3(rows, cols, jnp.uint32(j), cfg.seed)
-    return cfg.i_lo + cfg.delta_i * uniform_bit(h) + cfg.gamma * gaussianish(h)
+    out = (cfg.i_lo + cfg.delta_i * uniform_bit(h)
+           + cfg.gamma * gaussianish(h))
+    if cfg.imprint:
+        hi = hash3(rows, cols, jnp.uint32(j), cfg.imprint_seed)
+        out = out + cfg.imprint * gaussianish(hi)
+    return out
 
 
 def bayes_mvm_ref(x: jnp.ndarray, mu: jnp.ndarray, sigma: jnp.ndarray,

@@ -56,6 +56,16 @@ def main() -> None:
     ap.add_argument("--uncalibrated", action="store_true",
                     help="skip per-die head recalibration AND the "
                          "mission operating-point transfer")
+    ap.add_argument("--age-rate", type=float, default=0.0,
+                    help="simulated field-seconds of FeFET aging per "
+                         "mission step (hw/aging.py); 0 disables the "
+                         "lifetime loop")
+    ap.add_argument("--age-epochs", type=int, default=4,
+                    help="age/heal segments the mission is cut into")
+    ap.add_argument("--auto-recalibrate", action="store_true",
+                    help="heal drift advisories in flight: recalibrate "
+                         "the aged die between segments and redeploy "
+                         "(hw/redeploy.py)")
     ap.add_argument("--no-fused", dest="fused", action="store_false",
                     default=True)
     ap.add_argument("--train-steps", type=int, default=None,
@@ -114,11 +124,18 @@ def main() -> None:
         params, cfg = trained_detector(corruption=args.corruption,
                                        severity_hi=args.severity_hi,
                                        **det_kw)
+        lifetime = None
+        if args.age_rate > 0.0 or args.auto_recalibrate:
+            from repro.hw.redeploy import LifetimeConfig
+            lifetime = LifetimeConfig(
+                age_rate=args.age_rate, epochs=args.age_epochs,
+                auto_recalibrate=args.auto_recalibrate)
         res = fly_mission(wcfg, ucfg, pol, params=params, cfg=cfg,
                           chips=chips,
                           calibrated=not args.uncalibrated,
                           n_steps=args.steps, n_episodes=args.episodes,
-                          fused=args.fused, telemetry=args.telemetry)
+                          fused=args.fused, telemetry=args.telemetry,
+                          lifetime=lifetime)
     s = res.summary
     log.info(
         f"[{args.policy}/{args.planner}] "
@@ -139,6 +156,10 @@ def main() -> None:
         f"{1e6*s['energy_verify_J']:.0f}, flight "
         f"{1e6*s['energy_flight_J']:.0f}); "
         f"host syncs {res.host_syncs}")
+    for group, lt in (res.lifetime or {}).items():
+        log.info("die lifetime", die_group=group,
+                 age_s=lt["age_s"], advisories=lt["advisories"],
+                 heals=lt["heals"], calib_epoch=lt["calib_epoch"])
     for group, t in (res.telemetry or {}).items():
         drift = t["drift"]
         if drift.get("advisory"):

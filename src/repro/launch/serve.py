@@ -246,6 +246,10 @@ def serve_sar(*, n_requests: int = 128, n_slots: int = 32,
         # profiling path only (compiles fresh executables).
         out["compiled_costs"] = engine.compiled_cost_records()
     out["flagged_fraction"] = out.get("flag_fraction", float("nan"))
+    out["verdicts"] = [
+        {"rid": r.rid, "verdict": r.verdict, "confidence": r.confidence,
+         "mutual_information": r.mutual_information,
+         "n_samples": r.n_samples} for r in metrics.records]
     if engine.tcfg is not None and out.get("telemetry"):
         # Online drift check against the deployment's calibration-time
         # belief: the measured instance config when calibrated, the
@@ -258,6 +262,125 @@ def serve_sar(*, n_requests: int = 128, n_slots: int = 32,
         out["drift"] = drift_status(out["telemetry"], ref).to_dict()
         if out["drift"]["advisory"]:
             log.warning(out["drift"]["advisory"])
+    return out
+
+
+def serve_sar_lifetime(*, lifetime, chip_instance,
+                       n_requests: int = 128, n_slots: int = 32,
+                       adaptive: bool = True,
+                       policy: TriagePolicy | None = None,
+                       corrupt_frac: float = 0.0, corruption: str = "fog",
+                       params=None, cfg=None, seed: int = 0,
+                       calibrated: bool = True, fused: bool = True,
+                       telemetry: bool | TelemetryConfig = True,
+                       tracer=None, profiler=True) -> dict:
+    """SAR serving across a die's LIFETIME: the stream is cut into
+    ``lifetime.epochs`` segments, the die ages ``lifetime.age_rate``
+    simulated field-seconds per decision, and (with
+    ``auto_recalibrate``) drift advisories from the streamed telemetry
+    trigger an in-place recalibrate-and-hot-swap between segments
+    (hw/redeploy.SelfHealingController + SarServingEngine.swap_head).
+
+    With ``lifetime.active`` False this IS ``serve_sar`` — one segment,
+    no controller, bit-identical verdicts and host-sync counts — so
+    callers can pass a lifetime config unconditionally.
+
+    Returns the usual serve summary plus ``out["lifetime"]``: age, heal
+    events, advisory count, and the final drift status.
+    """
+    from repro.core.bayes_layer import sigma_of
+    from repro.core.sampling import BayesHeadConfig
+    from repro.hw import compile_network, sample_instances
+    from repro.hw.redeploy import SelfHealingController
+    from repro.models.sar_cnn import SarCnnConfig, init_sar_cnn
+    if not lifetime.active:
+        out = serve_sar(n_requests=n_requests, n_slots=n_slots,
+                        adaptive=adaptive, policy=policy,
+                        corrupt_frac=corrupt_frac, corruption=corruption,
+                        params=params, cfg=cfg, seed=seed,
+                        chip_instance=chip_instance, calibrated=calibrated,
+                        fused=fused, telemetry=telemetry, tracer=tracer,
+                        profiler=profiler)
+        out["lifetime"] = {"active": False, "age_s": 0.0, "heals": 0,
+                           "advisories": 0, "epochs": 1}
+        return out
+    if chip_instance is None:
+        raise ValueError("lifetime serving ages a specific die — pass "
+                         "chip_instance (a ChipInstance or an int seed)")
+    if telemetry is False:
+        raise ValueError("lifetime serving watches drift through the "
+                         "device-resident telemetry probe — telemetry "
+                         "must stay enabled")
+    if not hasattr(chip_instance, "grng"):
+        chip_instance = sample_instances(int(chip_instance), 1)[0]
+    cfg = cfg or SarCnnConfig()
+    if params is None:
+        params = init_sar_cnn(jax.random.PRNGKey(3 + seed), cfg)
+    policy = policy or TriagePolicy(conf_threshold=0.7, mi_threshold=0.05)
+    base_hcfg = BayesHeadConfig(
+        num_samples=policy.r_max, mode="rank16", grng=cfg.grng,
+        compute_dtype=jnp.float32, hoist_basis=True)
+    tcfg = telemetry if isinstance(telemetry, TelemetryConfig) \
+        else TelemetryConfig()
+    ctl = SelfHealingController(
+        chip_instance, params["head"]["mu"], sigma_of(params["head"]),
+        base_hcfg, calibrated=calibrated, spec=lifetime.spec,
+        gate=lifetime.gate, probe_cells=tcfg.probe_cells)
+    layers = sar_layer_shapes(cfg)
+    metrics = ServingMetrics(
+        layers=layers, tile_program=compile_network(layers),
+        extra={"chip_id": chip_instance.chip_id,
+               "chip_device_seed": chip_instance.device_seed,
+               "calibrated": bool(calibrated)})
+    engine = SarServingEngine(params, cfg, n_slots=n_slots, policy=policy,
+                              adaptive_mode=adaptive, metrics=metrics,
+                              head=ctl.head, hcfg=ctl.hcfg,
+                              chip=chip_instance, fused=fused,
+                              telemetry=tcfg, tracer=tracer,
+                              profiler=profiler)
+    reqs = make_sar_stream(n_requests, corrupt_frac=corrupt_frac,
+                           corruption=corruption,
+                           image_size=cfg.image_size)
+    epochs = max(1, int(lifetime.epochs))
+    seg = -(-len(reqs) // epochs)
+    served, advisories = 0, 0
+    t0 = time.perf_counter()
+    for k in range(epochs):
+        chunk = reqs[k * seg:(k + 1) * seg]
+        if not chunk:
+            break
+        if k:
+            # Drift ARRIVES mid-stream: the die moves to the age its
+            # decision count implies and the engine serves the stale
+            # belief on the aged physics (telemetry probe included).
+            head, hcfg = ctl.advance(lifetime.age_rate * served)
+            engine.swap_head(head, hcfg)
+        for r in chunk:
+            engine.submit(r)
+        out = engine.run()
+        served += len(chunk)
+        status = ctl.observe_snapshot(engine.telemetry_snapshot())
+        if status.drifted:
+            advisories += 1
+            log.warning(status.advisory)
+        if lifetime.auto_recalibrate and status.drifted:
+            ev = ctl.heal(status)
+            engine.swap_head(*ctl.view())
+            log.info("healed", age_s=ev.age_s, calib_epoch=ev.calib_epoch,
+                     z_mean=round(ev.z_mean, 2), z_std=round(ev.z_std, 2))
+    out["wall_s"] = time.perf_counter() - t0
+    out["host_syncs"] = engine.host_syncs
+    out["host_syncs_per_decision"] = (engine.host_syncs
+                                      / max(out["decisions"], 1))
+    out["flagged_fraction"] = out.get("flag_fraction", float("nan"))
+    out["verdicts"] = [
+        {"rid": r.rid, "verdict": r.verdict, "confidence": r.confidence,
+         "mutual_information": r.mutual_information,
+         "n_samples": r.n_samples} for r in metrics.records]
+    out["lifetime"] = dict(ctl.report(), active=True, epochs=epochs,
+                           advisories=advisories,
+                           age_rate=lifetime.age_rate,
+                           auto_recalibrate=lifetime.auto_recalibrate)
     return out
 
 
@@ -294,6 +417,16 @@ def main() -> None:
     ap.add_argument("--uncalibrated", action="store_true",
                     help="skip per-instance recalibration (golden "
                          "factory transform on the degraded chip)")
+    ap.add_argument("--age-rate", type=float, default=0.0,
+                    help="simulated field-seconds of FeFET aging per "
+                         "decision (hw/aging.py); 0 disables the "
+                         "lifetime loop (exact pre-lifetime path)")
+    ap.add_argument("--age-epochs", type=int, default=4,
+                    help="age/heal checkpoints the stream is cut into")
+    ap.add_argument("--auto-recalibrate", action="store_true",
+                    help="act on drift advisories: recalibrate the aged "
+                         "die and hot-swap the healed head mid-stream "
+                         "(hw/redeploy.py)")
     ap.add_argument("--no-telemetry", dest="telemetry",
                     action="store_false", default=True,
                     help="disable the device-resident obs/ telemetry "
@@ -330,16 +463,35 @@ def main() -> None:
                 args.chip_instance, 1,
                 VariationSpec().scaled(args.chip_severity))[0]
         with trace_capture(args.profile):
-            out = serve_sar(n_requests=args.requests or 128,
-                            n_slots=args.slots or 32,
-                            adaptive=not args.fixed, policy=policy,
-                            corrupt_frac=args.corrupt_frac,
-                            corruption=args.corruption,
-                            chip_instance=chip,
-                            calibrated=not args.uncalibrated,
-                            fused=args.fused, telemetry=args.telemetry,
-                            tracer=tracer,
-                            cost_records=bool(args.profile))
+            if args.age_rate > 0.0 or args.auto_recalibrate:
+                from repro.hw.redeploy import LifetimeConfig
+                out = serve_sar_lifetime(
+                    lifetime=LifetimeConfig(
+                        age_rate=args.age_rate, epochs=args.age_epochs,
+                        auto_recalibrate=args.auto_recalibrate),
+                    chip_instance=chip, n_requests=args.requests or 128,
+                    n_slots=args.slots or 32, adaptive=not args.fixed,
+                    policy=policy, corrupt_frac=args.corrupt_frac,
+                    corruption=args.corruption,
+                    calibrated=not args.uncalibrated, fused=args.fused,
+                    telemetry=args.telemetry, tracer=tracer)
+                lt = out["lifetime"]
+                log.info("lifetime", age_s=lt.get("age_s", 0.0),
+                         advisories=lt.get("advisories", 0),
+                         heals=lt.get("heals", 0),
+                         calib_epoch=lt.get("calib_epoch", 0))
+            else:
+                out = serve_sar(n_requests=args.requests or 128,
+                                n_slots=args.slots or 32,
+                                adaptive=not args.fixed, policy=policy,
+                                corrupt_frac=args.corrupt_frac,
+                                corruption=args.corruption,
+                                chip_instance=chip,
+                                calibrated=not args.uncalibrated,
+                                fused=args.fused,
+                                telemetry=args.telemetry,
+                                tracer=tracer,
+                                cost_records=bool(args.profile))
         chip_note = ""
         if chip is not None:
             chip_note = (f" [chip seed={args.chip_instance} "

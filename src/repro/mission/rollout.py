@@ -70,17 +70,25 @@ def sar_mission_cost(cfg) -> DecisionCost:
 # ----------------------------------------------------------------------
 # compiled episode builder (process-wide cache, one entry per die group)
 # ----------------------------------------------------------------------
-@functools.lru_cache(maxsize=16)
+@functools.lru_cache(maxsize=32)
 def _episode_fn(wcfg: WorldConfig, ucfg: UavConfig, pol: MissionPolicy,
                 snn_cfg, hcfg, chip, cost: DecisionCost, fused: bool,
                 n_steps: int, n_batch: int, n_classes: int,
-                tcfg: TelemetryConfig | None = None):
+                tcfg: TelemetryConfig | None = None, step0: int = 0):
     """jit (params, head, logit_bias, worlds, fleet0, maps0, bind)
            -> (fleet, maps, logs [n_steps, n_batch] pytree).
 
     ``n_batch`` is the flattened episodes×group-drones batch — the
     decision kernel's B.  Cached on the frozen configs + the chip's
     identity, like every other pool builder in serving/engine.py.
+
+    ``step0``: absolute mission step of the scan's first iteration.
+    The lifetime loop (``fly_mission(..., lifetime=...)``) cuts one
+    mission into age-epoch segments; scanning over ABSOLUTE step
+    indices keeps every decision's s2 stream base globally unique, so
+    a segmented mission draws the same GRNG sample streams a
+    single-dispatch mission would.  ``step0=0`` with ``n_steps`` equal
+    to the mission length is exactly the pre-lifetime episode.
 
     With ``tcfg`` set (obs/telemetry), the episode takes a telemetry
     pytree as an eighth argument and returns it as a fourth output: it
@@ -272,7 +280,8 @@ def _episode_fn(wcfg: WorldConfig, ucfg: UavConfig, pol: MissionPolicy,
         (fleet, maps, telem), logs = lax.scan(
             functools.partial(step, worlds, bind, params, head,
                               logit_bias),
-            (fleet0, maps0, telem0), jnp.arange(n_steps, dtype=jnp.int32))
+            (fleet0, maps0, telem0),
+            jnp.arange(step0, step0 + n_steps, dtype=jnp.int32))
         if telem0 is None:
             return fleet, maps, logs
         return fleet, maps, logs, telem
@@ -289,23 +298,31 @@ class MissionResult:
     logs: dict           # numpy [n_steps, E·D] arrays, fleet order
     maps: dict           # merged {rescued_t, cleared, visited, entropy}
     worlds: dict         # numpy world pytree [E, ...]
-    host_syncs: int      # blocking device→host pulls (one per die group)
+    host_syncs: int      # blocking device→host pulls (one per die group,
+    #                      or one per age-epoch segment of an aged group)
     # per die group: {"telemetry": obs snapshot, "drift": obs.drift
     # status dict} — None when telemetry was disabled
     telemetry: dict | None = None
+    # per AGED die group: hw/redeploy.SelfHealingController.report()
+    # plus advisory/epoch counts — None when no lifetime loop ran
+    lifetime: dict | None = None
+
+
+def _group_base_hcfg(cfg, tri):
+    from repro.core.sampling import BayesHeadConfig
+    return BayesHeadConfig(num_samples=tri.r_max, mode="rank16",
+                           grng=cfg.grng, compute_dtype=jnp.float32,
+                           hoist_basis=True)
 
 
 def _prepare_group_head(params, cfg, tri, chip, calibrated: bool):
     """(head, serving hcfg) for one die group — golden transform when
     ``chip`` is None, else hw/calib's per-instance deployment."""
     from repro.core.bayes_layer import sigma_of
-    from repro.core.sampling import BayesHeadConfig
     from repro.hw import prepare_instance_head
-    base = BayesHeadConfig(num_samples=tri.r_max, mode="rank16",
-                           grng=cfg.grng, compute_dtype=jnp.float32,
-                           hoist_basis=True)
     return prepare_instance_head(params["head"]["mu"],
-                                 sigma_of(params["head"]), base,
+                                 sigma_of(params["head"]),
+                                 _group_base_hcfg(cfg, tri),
                                  chip, calibrated=calibrated)
 
 
@@ -353,12 +370,91 @@ def operating_point_bias(params, cfg, head, chip,
     return np.asarray([0.0, tau], np.float32)
 
 
+def _fly_group_lifetime(wcfg, ucfg, pol, cfg, chip, cost, fused,
+                        n_steps, n_episodes, tcfg, params, calibrated,
+                        worlds, fleet0_g, maps0, bind_g, rows, lifetime):
+    """One AGED die group's mission: segmented rollout with in-flight
+    drift watch and (optionally) recalibrate-and-redeploy.
+
+    The mission is cut into ``lifetime.epochs`` step segments.  Each
+    segment scans ABSOLUTE step indices (``step0``) so the decision
+    stream bases match the unsegmented mission; between segments the
+    die advances to the age its step count implies, the cumulative
+    telemetry snapshot's delta folds into the group's streaming drift
+    monitor, and — with ``auto_recalibrate`` — an advisory triggers a
+    heal: fresh §III-B1 calibration at the current age, calib_epoch
+    bump, and a re-derived operating-point bias for the healed head.
+    One host sync per segment; carry (fleet, maps, telemetry) threads
+    through unchanged, so logs concatenate into the exact mission
+    shape.
+
+    Returns (fleet, maps, logs, telemetry, controller, host_syncs,
+    advisories).
+    """
+    from repro.core.bayes_layer import sigma_of
+    from repro.hw.redeploy import SelfHealingController
+    ctl = SelfHealingController(
+        chip, params["head"]["mu"], sigma_of(params["head"]),
+        _group_base_hcfg(cfg, pol.triage), calibrated=calibrated,
+        spec=lifetime.spec, gate=lifetime.gate,
+        probe_cells=tcfg.probe_cells)
+    head, hcfg = ctl.head, ctl.hcfg
+    bias = operating_point_bias(params, cfg, head, chip) \
+        if calibrated else np.zeros((cfg.n_classes,), np.float32)
+    epochs = max(1, int(lifetime.epochs))
+    seg = -(-n_steps // epochs)
+    fleet_c, maps_c = fleet0_g, maps0
+    telem_c = init_telemetry(tcfg, pol.triage.r_max)
+    logs_parts: list[dict] = []
+    step0, n_syncs, advisories = 0, 0, 0
+    while step0 < n_steps:
+        ns = min(seg, n_steps - step0)
+        if step0:
+            # drift ARRIVES mid-mission: physics moves to the age the
+            # elapsed steps imply; the bias is a µ'-only quantity, so
+            # the stale view keeps it and only a heal re-derives it.
+            head, hcfg = ctl.advance(lifetime.age_rate * step0)
+        fn = _episode_fn(wcfg, ucfg, pol, cfg, hcfg, chip, cost, fused,
+                         ns, len(rows), cfg.n_classes, tcfg, step0)
+        fleet_c, maps_c, logs_c, telem_c = fn(
+            params, head, jnp.asarray(bias), worlds, fleet_c, maps_c,
+            bind_g, telem_c)
+        # the single blocking pull of this segment
+        fleet_c, maps_c, logs_c, telem_c = jax.device_get(
+            (fleet_c, maps_c, logs_c, telem_c))
+        n_syncs += 1
+        logs_parts.append(logs_c)
+        status = ctl.observe_snapshot(telemetry_snapshot(telem_c, tcfg))
+        if status.drifted:
+            advisories += 1
+        if lifetime.auto_recalibrate and status.drifted:
+            ctl.heal(status)
+            head, hcfg = ctl.view()
+            bias = operating_point_bias(params, cfg, ctl.head, chip) \
+                if calibrated else bias
+        step0 += ns
+    logs_g = {k: np.concatenate([p[k] for p in logs_parts], axis=0)
+              for k in logs_parts[0]}
+    return fleet_c, maps_c, logs_g, telem_c, ctl, n_syncs, advisories
+
+
 def fly_mission(wcfg: WorldConfig, ucfg: UavConfig, pol: MissionPolicy,
                 *, params=None, cfg=None, chips=None,
                 calibrated: bool = True, n_steps: int = 96,
                 n_episodes: int = 1, fused: bool = True,
-                telemetry: bool | TelemetryConfig = True) -> MissionResult:
+                telemetry: bool | TelemetryConfig = True,
+                lifetime=None) -> MissionResult:
     """Run ``n_episodes`` independent missions for the whole fleet.
+
+    ``lifetime`` (hw/redeploy.LifetimeConfig): age each CHIP-BOUND die
+    group ``lifetime.age_rate`` field-seconds per mission step, cutting
+    its rollout into ``lifetime.epochs`` segments — drift arrives
+    MID-MISSION through the telemetry probe, and with
+    ``auto_recalibrate`` a drift advisory between segments triggers an
+    in-flight recalibrate-and-redeploy (one host sync per segment for
+    aged groups; ideal groups and inactive lifetimes keep the exact
+    single-dispatch path).  Segments scan ABSOLUTE step indices, so
+    decision sample streams match the unsegmented mission.
 
     ``chips``: None (ideal fleet), one hw.ChipInstance (whole fleet on
     that die), or a sequence of per-drone instances/None — drones are
@@ -404,21 +500,65 @@ def fly_mission(wcfg: WorldConfig, ucfg: UavConfig, pol: MissionPolicy,
         telemetry = TelemetryConfig()
     tcfg = telemetry or None
 
+    lt_active = lifetime is not None and lifetime.active
+    if lt_active and tcfg is None:
+        raise ValueError("lifetime missions watch drift through the "
+                         "device-resident telemetry probe — telemetry "
+                         "must stay enabled")
+
     logs_full: dict[str, np.ndarray] = {}
     maps_merged = {k: np.asarray(v) for k, v in maps0.items()}
     fleet_final = {k: np.zeros_like(np.asarray(v))
                    for k, v in fleet0.items()}
     host_syncs = 0
     telemetry_out: dict[str, dict] | None = {} if tcfg else None
+    lifetime_out: dict[str, dict] | None = {} if lt_active else None
     for drone_ids in groups.values():
         chip = chips[drone_ids[0]]
+        rows = np.asarray([ep * d + di for ep in range(e)
+                           for di in drone_ids])
+        sub = lambda t: jax.tree.map(lambda x: x[rows], t)  # noqa: E731
+        if lt_active and chip is not None:
+            (fleet_g, maps_g, logs_g, telem_g, ctl, n_syncs,
+             advisories) = _fly_group_lifetime(
+                wcfg, ucfg, pol, cfg, chip, cost, fused, n_steps,
+                n_episodes, tcfg, params, calibrated, worlds,
+                sub(fleet0), maps0, sub(bind), rows, lifetime)
+            host_syncs += n_syncs
+            snap = telemetry_snapshot(telem_g, tcfg)
+            gname = f"chip{chip.chip_id}_seed{chip.device_seed}"
+            telemetry_out[gname] = {
+                "drones": [int(di) for di in drone_ids],
+                "telemetry": snap,
+                # drift judged by the controller's streaming monitor —
+                # delta-folded per belief epoch, so a healed group
+                # reports its POST-heal status, not the stale history
+                "drift": ctl.monitor.status().to_dict(),
+            }
+            lifetime_out[gname] = dict(
+                ctl.report(), advisories=advisories,
+                epochs=int(lifetime.epochs),
+                age_rate=float(lifetime.age_rate),
+                auto_recalibrate=bool(lifetime.auto_recalibrate))
+            for k, v in logs_g.items():
+                logs_full.setdefault(k,
+                                     np.zeros((n_steps, e * d), v.dtype))
+                logs_full[k][:, rows] = v
+            for k in fleet_final:
+                fleet_final[k][rows] = fleet_g[k]
+            maps_merged["rescued_t"] = np.minimum(
+                maps_merged["rescued_t"], maps_g["rescued_t"])
+            maps_merged["cleared"] = np.maximum(maps_merged["cleared"],
+                                                maps_g["cleared"])
+            maps_merged["visited"] = np.maximum(maps_merged["visited"],
+                                                maps_g["visited"])
+            maps_merged["entropy"] = np.minimum(maps_merged["entropy"],
+                                                maps_g["entropy"])
+            continue
         head, hcfg = _prepare_group_head(params, cfg, pol.triage, chip,
                                          calibrated)
         bias = operating_point_bias(params, cfg, head, chip) \
             if calibrated else np.zeros((cfg.n_classes,), np.float32)
-        rows = np.asarray([ep * d + di for ep in range(e)
-                           for di in drone_ids])
-        sub = lambda t: jax.tree.map(lambda x: x[rows], t)  # noqa: E731
         fn = _episode_fn(wcfg, ucfg, pol, cfg, hcfg, chip, cost, fused,
                          n_steps, len(rows), cfg.n_classes, tcfg)
         if tcfg is None:
@@ -472,7 +612,8 @@ def fly_mission(wcfg: WorldConfig, ucfg: UavConfig, pol: MissionPolicy,
                          worlds={k: np.asarray(v)
                                  for k, v in worlds.items()},
                          host_syncs=host_syncs,
-                         telemetry=telemetry_out)
+                         telemetry=telemetry_out,
+                         lifetime=lifetime_out)
 
 
 def mission_horizon_s(ucfg: UavConfig, cost: DecisionCost,

@@ -549,9 +549,45 @@ class SarServingEngine(_EngineBase):
         self._round = _sar_round_fn(self.hcfg, policy, adaptive_mode,
                                     self.r_step, fused, slot_axis,
                                     self.tcfg)
+        self._chip = chip
+        self._slot_axis = slot_axis
         self.pool = None
         self.stats = None
         self.base = None
+
+    # -- lifetime -------------------------------------------------------
+    def swap_head(self, head: dict, hcfg: BayesHeadConfig) -> None:
+        """Hot-swap a (re)deployed head into the RUNNING engine.
+
+        hw/redeploy.py's self-healing loop calls this between run
+        segments: after a recalibration (or an age advance of the
+        served view) the new head + config replace the old ones and
+        only the head-dependent builders (featurize, round) are
+        re-resolved.  Those builders are module-level lru caches, so a
+        previously-seen (hcfg, chip) pair is a cache HIT, and the
+        epoch-free executables (scatter, stats reset, other engines')
+        are untouched — ``BayesHeadConfig.calib_epoch`` keys fresh
+        calibrations apart without invalidating anything else.
+
+        Requires a quiescent pool: in-flight slots hold activations
+        featurized under the old head, so swap between segments after
+        ``run()`` drains the queue.  Queue contents, metrics, telemetry
+        and the decision-stream counter all survive the swap.
+        """
+        if self.n_active:
+            raise RuntimeError(
+                f"swap_head with {self.n_active} in-flight slots — "
+                f"drain the pool (run()) and swap between segments")
+        self.hcfg = hcfg
+        self._head = head
+        feat = _sar_featurize_fn(self.cfg, hcfg, self._chip,
+                                 self._slot_axis)
+        self._featurize_jit = feat
+        self._featurize = lambda imgs: feat(self._params, self._head,
+                                            imgs)
+        self._round = _sar_round_fn(hcfg, self.policy, self.adaptive_mode,
+                                    self.r_step, self.fused,
+                                    self._slot_axis, self.tcfg)
 
     # -- admission ------------------------------------------------------
     def _admit(self) -> None:

@@ -68,6 +68,39 @@ def test_device_currents_positive_and_bounded(seed):
     assert (cur < cfg.i_lo + cfg.delta_i + 4 * cfg.gamma).all()
 
 
+@settings(**SETTINGS)
+@given(st.integers(min_value=0, max_value=2**20),
+       st.integers(min_value=1, max_value=48),
+       st.integers(min_value=1, max_value=48))
+def test_stream_extension_exact_on_aged_dies(seed, n1, n2):
+    """sample0 stream extension stays EXACT with the aging imprint
+    term live: drawing (n1 + n2) samples in one call equals drawing n1
+    then extending by n2 — the telemetry probe and the engine's
+    escalation rounds rely on this on aged physics too."""
+    cfg = g.GRNGConfig(seed=seed, imprint=0.37, imprint_seed=seed ^ 0xA6)
+    whole = np.asarray(g.raw_sums(cfg, 4, 2, n1 + n2))
+    parts = np.concatenate(
+        [np.asarray(g.raw_sums(cfg, 4, 2, n1)),
+         np.asarray(g.raw_sums(cfg, 4, 2, n2, sample0=n1))], axis=0)
+    np.testing.assert_array_equal(whole, parts)
+
+
+@settings(**SETTINGS)
+@given(st.integers(min_value=0, max_value=2**20))
+def test_imprint_zero_is_bit_identical(seed):
+    """imprint=0.0 must compile to the PRE-AGING program: the aged-die
+    term cannot perturb a single bit of any existing stream."""
+    base = g.GRNGConfig(seed=seed)
+    with_field = g.GRNGConfig(seed=seed, imprint=0.0,
+                              imprint_seed=seed ^ 0x1234)
+    np.testing.assert_array_equal(np.asarray(g.raw_sums(base, 4, 4, 16)),
+                                  np.asarray(g.raw_sums(with_field,
+                                                        4, 4, 16)))
+    nonzero = g.GRNGConfig(seed=seed, imprint=0.25)
+    assert not np.array_equal(np.asarray(g.raw_sums(base, 4, 4, 16)),
+                              np.asarray(g.raw_sums(nonzero, 4, 4, 16)))
+
+
 def test_raw_sum_subset_bounds():
     """Any 8-of-16 sum lies between the 8 smallest and 8 largest currents."""
     cfg = g.GRNGConfig()

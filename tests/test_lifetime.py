@@ -1,0 +1,452 @@
+"""Lifetime conformance suite: aging determinism, drift advisories,
+and the self-healing recalibrate-and-redeploy loop (hw/aging.py +
+hw/redeploy.py + obs/drift.py + SarServingEngine.swap_head).
+
+Locked down here, at increasing strictness:
+
+  * **aging is a pure function of (die, t)** — same seeds + same age
+    → bit-identical instance; ``at_age(0)`` IS the birth instance;
+    ages are absolute (re-aging an aged die raises);
+  * **drift grows monotonically and trips the gate** — the probe-block
+    z statistic against the calibration-time belief rises with field
+    age and crosses the |z| > 5 advisory gate;
+  * **no false positives** — a golden die streaming forever never
+    draws an advisory, while an uncalibrated severity-2.5 die is
+    flagged from the same probe (the obs/drift CLI separation check,
+    promoted to pytest with explicit thresholds);
+  * **hot-swap is invisible** — a healed head swapped into a running
+    engine serves bit-identical verdicts to a cold-built engine on the
+    same recalibrated aged instance, and rebuilds NO slot-plumbing
+    executables (scatter / stats_reset compile counters are flat);
+  * **the closed loop actually closes** (slow tier) — a served aged
+    die raises an advisory before its accuracy deviation exceeds the
+    PR 2 uncalibrated bound, and healing returns it to the calibrated
+    band while the no-heal arm stays degraded.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import clt_grng as g
+from repro.core.bayes_layer import sigma_of
+from repro.core.sampling import BayesHeadConfig
+from repro.hw import (VariationSpec, prepare_instance_head,
+                      sample_instances)
+from repro.hw.aging import AgingSpec, age_factors, at_age
+from repro.hw.redeploy import (LifetimeConfig, SelfHealingController,
+                               aged_belief_view, recalibrate)
+from repro.models.sar_cnn import SarCnnConfig, init_sar_cnn
+from repro.obs.drift import DriftGate, DriftMonitor, reference_for
+from repro.serving import ServingMetrics, TriagePolicy
+
+DAY = 86400.0
+SEV = VariationSpec().scaled(2.5)
+UNCAL_BOUND = 0.183      # PR 2 uncalibrated acc-dev at severity 2.5
+HEALED_BOUND = 0.014     # 2x the PR 2 calibrated acc-dev bound
+
+
+def _chip(seed: int = 11):
+    return sample_instances(seed, 1, SEV)[0]
+
+
+@pytest.fixture(scope="module")
+def sar():
+    cfg = SarCnnConfig()
+    return init_sar_cnn(jax.random.PRNGKey(3), cfg), cfg
+
+
+def _base_hcfg(cfg, hoist: bool = False) -> BayesHeadConfig:
+    return BayesHeadConfig(num_samples=20, mode="rank16", grng=cfg.grng,
+                           compute_dtype=jnp.float32, hoist_basis=hoist)
+
+
+# ----------------------------------------------------------------------
+# aging determinism
+# ----------------------------------------------------------------------
+def test_aging_deterministic_bit_identity():
+    """Same die + same age → bit-identical instance, across separately
+    sampled copies (rates are keyed by serialized seeds, never stored)."""
+    a = _chip().at_age(30 * DAY)
+    b = _chip().at_age(30 * DAY)
+    ta, tb = a.to_tree(), b.to_tree()
+    assert (jax.tree_util.tree_structure(ta)
+            == jax.tree_util.tree_structure(tb))
+    for la, lb in zip(jax.tree_util.tree_leaves(ta),
+                      jax.tree_util.tree_leaves(tb)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    # a different die ages differently (per-die rate draw)
+    c = _chip(12).at_age(30 * DAY)
+    assert (c.imprint, c.read_sigma) != (a.imprint, a.read_sigma)
+
+
+def test_at_age_zero_is_the_birth_instance():
+    chip = _chip()
+    assert chip.at_age(0.0) is chip
+    assert age_factors(chip, 0.0) == (1.0, 1.0, 0.0, 0.0)
+
+
+def test_ages_are_absolute_never_compounded():
+    chip = _chip()
+    aged = chip.at_age(7 * DAY)
+    assert aged.age_s == 7 * DAY
+    with pytest.raises(ValueError):
+        aged.at_age(30 * DAY)
+    with pytest.raises(ValueError):
+        chip.at_age(-1.0)
+
+
+def test_aging_monotone_physics():
+    """Imprint, read noise, and spread growth never run backwards."""
+    chip = _chip()
+    ages = [0.0, 3600.0, DAY, 7 * DAY, 30 * DAY, 90 * DAY]
+    dies = [chip.at_age(t) for t in ages]
+    imprints = [d.imprint for d in dies]
+    sigmas = [d.read_sigma for d in dies]
+    gammas = [d.f_gamma for d in dies]
+    assert imprints == sorted(imprints) and imprints[-1] > imprints[0]
+    assert sigmas == sorted(sigmas) and sigmas[-1] > sigmas[0]
+    assert gammas == sorted(gammas)
+
+
+# ----------------------------------------------------------------------
+# drift monotonicity + advisory gate
+# ----------------------------------------------------------------------
+def _probe_zmax(ref, phys, gate=None) -> tuple[float, bool]:
+    mon = DriftMonitor(ref, gate or DriftGate())
+    raw = np.asarray(g.raw_sums(phys, 32, 1, 256), dtype=np.float64)
+    mon.observe(float(raw.size), float(raw.sum()),
+                float((raw ** 2).sum()))
+    st = mon.status()
+    return max(abs(st.z_mean), abs(st.z_std)), st.drifted
+
+
+def test_drift_z_grows_with_age_and_crosses_gate(sar):
+    _, cfg = sar
+    chip = _chip()
+    base = _base_hcfg(cfg)
+    _, hcfg0 = prepare_instance_head(
+        jnp.zeros((16, 2)), jnp.full((16, 2), 0.1), base, chip,
+        calibrated=True)
+    ref = reference_for(base, hcfg0, calibrated=True)
+    zs = []
+    for t in (0.0, DAY, 7 * DAY, 30 * DAY, 90 * DAY):
+        phys = chip.at_age(t).grng(base.grng)
+        zs.append(_probe_zmax(ref, phys)[0])
+    assert zs == sorted(zs), f"drift z not monotone in age: {zs}"
+    assert zs[0] < DriftGate().z_gate           # fresh die: healthy
+    assert zs[-1] > DriftGate().z_gate          # aged die: advisory
+
+
+def test_golden_die_long_stream_never_advises(sar):
+    """False-positive control: a die whose physics matches its belief
+    can stream forever without drawing an advisory."""
+    _, cfg = sar
+    base = _base_hcfg(cfg)
+    ref = reference_for(base, None, calibrated=False)
+    mon = DriftMonitor(ref, DriftGate())
+    for k in range(16):                         # 4096-sample stream
+        raw = np.asarray(g.raw_sums(base.grng, 32, 1, 256,
+                                    sample0=k * 256), dtype=np.float64)
+        mon.observe(float(raw.size), float(raw.sum()),
+                    float((raw ** 2).sum()))
+        st = mon.status()
+        assert not st.drifted, (
+            f"false advisory on golden die at block {k}: "
+            f"z_mean={st.z_mean:.2f} z_std={st.z_std:.2f}")
+    assert max(abs(st.z_mean), abs(st.z_std)) < DriftGate().z_gate
+
+
+def test_drift_monitor_separates_golden_from_degraded(sar):
+    """The obs/drift CLI separation check, as a pytest with explicit
+    thresholds: golden die |z| < 5 healthy, uncalibrated severity-2.5
+    die |z| > 5 advisory — same probe, same belief."""
+    _, cfg = sar
+    base = _base_hcfg(cfg)
+    ref = reference_for(base, None, calibrated=False)
+    z_gold, drifted_gold = _probe_zmax(ref, base.grng)
+    z_bad, drifted_bad = _probe_zmax(ref, _chip().grng(base.grng))
+    assert z_gold < 5.0 and not drifted_gold
+    assert z_bad > 5.0 and drifted_bad
+
+
+# ----------------------------------------------------------------------
+# self-healing controller
+# ----------------------------------------------------------------------
+def _cumulative_probe(ctl, base, state) -> dict:
+    """Fake one segment of CUMULATIVE telemetry: fold a fresh probe
+    read of the controller's current aged physics into the running
+    counters (device counters never reset)."""
+    chip = ctl.chip.at_age(ctl.age_s, ctl.spec) if ctl.age_s else ctl.chip
+    raw = np.asarray(g.raw_sums(chip.grng(base.grng), 32, 1, 256),
+                     dtype=np.float64)
+    state["n"] += raw.size
+    state["sum"] += raw.sum()
+    state["sumsq"] += (raw ** 2).sum()
+    return {"grng": dict(state)}
+
+
+def test_controller_advises_then_heals_then_quiet(sar):
+    _, cfg = sar
+    base = _base_hcfg(cfg)
+    mu = jnp.zeros((16, 2))
+    sg = jnp.full((16, 2), 0.1)
+    ctl = SelfHealingController(_chip(), mu, sg, base)
+    cum = {"n": 0.0, "sum": 0.0, "sumsq": 0.0}
+
+    st = ctl.observe_snapshot(_cumulative_probe(ctl, base, cum))
+    assert not st.drifted and ctl.maybe_heal(st) is None
+
+    ctl.advance(30 * DAY)
+    st = ctl.observe_snapshot(_cumulative_probe(ctl, base, cum))
+    assert st.drifted and st.advisory
+    ev = ctl.maybe_heal(st)
+    assert ev is not None and ev.calib_epoch == 1
+    assert ctl.hcfg.calib_epoch == 1
+
+    # healed belief matches the aged physics: monitor is quiet again
+    st = ctl.observe_snapshot(_cumulative_probe(ctl, base, cum))
+    assert not st.drifted
+    rep = ctl.report()
+    assert rep["heals"] == 1 and rep["age_s"] == 30 * DAY
+
+
+def test_healed_head_is_cold_deployment_bit_identical(sar):
+    """recalibrate() == prepare_instance_head on the aged die: the
+    heal path adds nothing beyond the calibration epoch key."""
+    _, cfg = sar
+    base = _base_hcfg(cfg, hoist=True)
+    mu = jnp.zeros((16, 2))
+    sg = jnp.full((16, 2), 0.1)
+    aged = _chip().at_age(30 * DAY)
+    healed, hcfg_h = recalibrate(mu, sg, base, aged, epoch=3)
+    import dataclasses
+    cold, hcfg_c = prepare_instance_head(
+        mu, sg, dataclasses.replace(base, calib_epoch=3), aged,
+        calibrated=True)
+    assert hcfg_h == hcfg_c and hcfg_h.calib_epoch == 3
+    assert set(healed) == set(cold)
+    for k in healed:
+        np.testing.assert_array_equal(np.asarray(healed[k]),
+                                      np.asarray(cold[k]), err_msg=k)
+
+
+# ----------------------------------------------------------------------
+# engine hot-swap
+# ----------------------------------------------------------------------
+def _drain(engine, reqs) -> list[tuple]:
+    start = len(engine.metrics.records)
+    for r in reqs:
+        engine.submit(r)
+    engine.run()
+    return [(r.rid, r.verdict, r.n_samples, r.confidence,
+             r.mutual_information)
+            for r in engine.metrics.records[start:]]
+
+
+def test_hot_swap_bit_identity_and_no_foreign_rebuilds(sar):
+    """A healed head swapped into a RUNNING engine must serve exactly
+    what a cold-built engine on the same recalibrated aged instance
+    serves — and the swap must rebuild only the head-dependent
+    executables (featurize/round), never the slot plumbing."""
+    from repro.launch.serve import make_sar_stream
+    from repro.obs.prof import builder_builds
+    from repro.serving.engine import SarServingEngine
+
+    params, cfg = sar
+    chip = _chip()
+    mu, sg = params["head"]["mu"], sigma_of(params["head"])
+    base = _base_hcfg(cfg, hoist=True)
+    pol = TriagePolicy(conf_threshold=0.7, mi_threshold=0.05, r_max=20)
+
+    ctl = SelfHealingController(chip, mu, sg, base)
+    hot = SarServingEngine(params, cfg, n_slots=8, policy=pol,
+                           metrics=ServingMetrics(),
+                           head=ctl.head, hcfg=ctl.hcfg, chip=chip)
+    stream = make_sar_stream(32, image_size=cfg.image_size)
+    seg1 = _drain(hot, stream[:16])
+    assert len(seg1) == 16
+
+    # drift arrives, the loop heals, the healed head hot-swaps in
+    ctl.advance(30 * DAY)
+    ctl.heal()
+    before = builder_builds()
+    hot.swap_head(*ctl.view())
+    seg2 = _drain(hot, stream[16:])
+    after = builder_builds()
+    for name in ("scatter", "stats_reset"):
+        assert after.get(name, 0) == before.get(name, 0), (
+            f"hot-swap rebuilt the {name} executable")
+
+    # cold engine on the recalibrated aged instance, same requests.
+    # Each decision owns a fixed region of the global selection stream
+    # (keyed by the engine's decision counter), and swap_head preserves
+    # that counter — so a faithful cold redeploy resumes at the same
+    # stream position.
+    aged = chip.at_age(30 * DAY)
+    cold = SarServingEngine(params, cfg, n_slots=8, policy=pol,
+                            metrics=ServingMetrics(),
+                            head=ctl.head, hcfg=ctl.hcfg, chip=aged)
+    cold._decision_counter = 16
+    want = _drain(cold, make_sar_stream(32, image_size=cfg.image_size)[16:])
+    assert seg2 == want, "hot-swapped engine diverged from cold build"
+
+
+def test_swap_head_refuses_while_slots_active(sar):
+    from repro.serving.engine import SarServingEngine
+    params, cfg = sar
+    eng = SarServingEngine(params, cfg, n_slots=4,
+                           policy=TriagePolicy(),
+                           metrics=ServingMetrics())
+    eng.free.pop()                  # one slot in flight
+    with pytest.raises(RuntimeError):
+        eng.swap_head({}, _base_hcfg(cfg))
+
+
+# ----------------------------------------------------------------------
+# serving: un-aged lifetime path is the plain path
+# ----------------------------------------------------------------------
+def test_inactive_lifetime_serve_bit_identical(sar):
+    from repro.launch.serve import serve_sar, serve_sar_lifetime
+    params, cfg = sar
+    chip = _chip()
+    a = serve_sar(n_requests=16, n_slots=8, chip_instance=chip,
+                  params=params, cfg=cfg)
+    b = serve_sar_lifetime(lifetime=LifetimeConfig(), chip_instance=chip,
+                           n_requests=16, n_slots=8, params=params,
+                           cfg=cfg)
+    assert not b["lifetime"]["active"]
+    assert a["verdicts"] == b["verdicts"]
+    assert a["host_syncs"] == b["host_syncs"]
+
+
+def test_inactive_lifetime_mission_bit_identical(sar):
+    from repro.mission import (MissionPolicy, UavConfig, WorldConfig,
+                               fly_mission)
+    params, cfg = sar
+    kw = dict(params=params, cfg=cfg, n_steps=10)
+    wcfg = WorldConfig(grid=6, n_victims=3, seed=2)
+    ucfg = UavConfig(n_drones=2, battery_J=120e-6)
+    a = fly_mission(wcfg, ucfg, MissionPolicy(), **kw)
+    b = fly_mission(wcfg, ucfg, MissionPolicy(),
+                    lifetime=LifetimeConfig(), **kw)
+    assert a.host_syncs == b.host_syncs
+    for k in a.logs:
+        np.testing.assert_array_equal(a.logs[k], b.logs[k], err_msg=k)
+
+
+# ----------------------------------------------------------------------
+# the closed loop, end to end (slow tier: trains the SAR detector)
+# ----------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def trained():
+    from benchmarks.serving_bench import trained_params
+    cfg = SarCnnConfig()
+    return trained_params(cfg), cfg
+
+
+@pytest.mark.slow
+def test_advisory_fires_before_accuracy_exceeds_uncal_bound(trained):
+    """The monitor must flag the die while its verdicts are still far
+    inside the PR 2 uncalibrated deviation bound — drift is caught
+    early, not after the fleet has degraded to uncalibrated levels."""
+    from benchmarks.hw_variation import (_chip_features, _eval_head,
+                                         _eval_images)
+    from repro.hw import golden_instance
+    from repro.core.sampling import prepare_serving_head
+
+    params, cfg = trained
+    chip = _chip()
+    base = _base_hcfg(cfg)
+    mu, sg = params["head"]["mu"], sigma_of(params["head"])
+    head0, hcfg0 = prepare_instance_head(mu, sg, base, chip,
+                                         calibrated=True)
+    ref = reference_for(base, hcfg0, calibrated=True)
+
+    # earliest advisory age on a geometric scan
+    t_fire = None
+    for t in (3600.0 * 2 ** k for k in range(14)):   # 1 h .. ~1 yr
+        if _probe_zmax(ref, chip.at_age(t).grng(base.grng))[1]:
+            t_fire = t
+            break
+    assert t_fire is not None, "advisory never fired within a year"
+
+    # at that age the stale head is still far inside the uncal bound
+    images = _eval_images(cfg)
+    eval_sets = _chip_features(params, cfg, images, chip)
+    gold_sets = _chip_features(params, cfg, images,
+                               golden_instance(cfg.grng))
+    gold = prepare_serving_head(mu, sg, base)
+    aged = chip.at_age(t_fire)
+    sh, shc = aged_belief_view(head0, hcfg0, aged, cfg.grng)
+    for (name, feats, labels), (_, gfeats, glabels) in zip(eval_sets,
+                                                           gold_sets):
+        dev = abs(_eval_head(sh, shc, feats, labels)["accuracy"]
+                  - _eval_head(gold, base, gfeats, glabels)["accuracy"])
+        assert dev < UNCAL_BOUND, (
+            f"advisory too late: {name} acc-dev {dev:.3f} already at "
+            f"uncalibrated levels when the gate fired (t={t_fire:.0f}s)")
+
+
+@pytest.mark.slow
+def test_heal_returns_to_calibrated_band_stale_stays_out(trained):
+    """At 30 field-days the severity-2.5 die's stale head is outside
+    the calibrated band; recalibrate-and-redeploy brings it back in."""
+    from benchmarks.hw_variation import (_chip_features, _eval_head,
+                                         _eval_images)
+    from repro.hw import golden_instance
+    from repro.core.sampling import prepare_serving_head
+
+    params, cfg = trained
+    chip = _chip()
+    base = _base_hcfg(cfg)
+    mu, sg = params["head"]["mu"], sigma_of(params["head"])
+    images = _eval_images(cfg)
+    eval_sets = _chip_features(params, cfg, images, chip)
+    gold_sets = _chip_features(params, cfg, images,
+                               golden_instance(cfg.grng))
+    gold = prepare_serving_head(mu, sg, base)
+    golden_acc = {n: _eval_head(gold, base, f, l)["accuracy"]
+                  for n, f, l in gold_sets}
+
+    head0, hcfg0 = prepare_instance_head(mu, sg, base, chip,
+                                         calibrated=True)
+    aged = chip.at_age(30 * DAY)
+    stale = aged_belief_view(head0, hcfg0, aged, cfg.grng)
+    healed = recalibrate(mu, sg, base, aged, epoch=1)
+    name, feats, labels = eval_sets[0]          # clean split
+    dev_stale = abs(_eval_head(*stale, feats, labels)["accuracy"]
+                    - golden_acc[name])
+    dev_healed = abs(_eval_head(*healed, feats, labels)["accuracy"]
+                     - golden_acc[name])
+    assert dev_stale > HEALED_BOUND, (
+        f"aged die not degraded (stale clean acc-dev {dev_stale:.4f})")
+    assert dev_healed <= HEALED_BOUND, (
+        f"heal failed: clean acc-dev {dev_healed:.4f} > {HEALED_BOUND}")
+
+
+@pytest.mark.slow
+def test_serve_lifetime_closed_loop(sar):
+    """Aged serving raises an advisory; auto_recalibrate heals it while
+    the no-heal arm ends the stream still drifted."""
+    from repro.launch.serve import serve_sar_lifetime
+    params, cfg = sar
+    chip = _chip()
+    kw = dict(chip_instance=chip, n_requests=64, n_slots=8,
+              params=params, cfg=cfg)
+    rate = 30 * DAY / 64
+    healed = serve_sar_lifetime(
+        lifetime=LifetimeConfig(age_rate=rate, epochs=4,
+                                auto_recalibrate=True), **kw)
+    lt = healed["lifetime"]
+    assert lt["advisories"] >= 1 and lt["heals"] >= 1
+    assert lt["calib_epoch"] >= 1
+    assert not lt["status"]["drifted"]
+
+    stale = serve_sar_lifetime(
+        lifetime=LifetimeConfig(age_rate=rate, epochs=4,
+                                auto_recalibrate=False), **kw)
+    lt = stale["lifetime"]
+    assert lt["advisories"] >= 1 and lt["heals"] == 0
+    assert lt["status"]["drifted"], "no-heal arm should stay degraded"

@@ -227,14 +227,25 @@ def test_regress_current_metrics_extraction(tmp_path):
          "us_per_call_warm": 8.0, "derived": ""},
         {"name": "kernel_decision_peak_vs_R_fused", "us_per_call": 0.0,
          "derived": "R8=1B;R64=1B;growth=1.00x"}]}))
-    cur = regress.current_metrics(serving, kernels)
+    lifetime = tmp_path / "lt.json"
+    lifetime.write_text(json.dumps({
+        "serve": {"healed": {"lifetime": {"advisories": 1, "heals": 1}},
+                  "fresh": {"lifetime": {"advisories": 0}}},
+        "static": {"arms": {"healed": {"clean": {"acc_dev": 0.01}}}},
+        "gates": {"healed_loop_closed": True, "stale_degraded": True}}))
+    cur = regress.current_metrics(serving, kernels, lifetime)
     assert cur["serving.adaptive.decisions_per_s_warm"] == 50.0
     assert cur["kernels.kernel_decision_fused.us_per_call_warm"] == 8.0
     assert cur["kernels.fused.peak_vs_r_growth"] == 1.0
+    assert cur["lifetime.serve_healed.heals"] == 1.0
+    assert cur["lifetime.serve_fresh.false_advisories"] == 0.0
+    assert cur["lifetime.static.healed_clean_acc_dev"] == 0.01
+    assert cur["lifetime.gates_all_pass"] == 1.0
     assert "serving.adaptive.energy_total_J" not in cur   # not gated
     # no snapshots at all -> empty (regress exits 2 in main)
     assert regress.current_metrics(tmp_path / "a.json",
-                                   tmp_path / "b.json") == {}
+                                   tmp_path / "b.json",
+                                   tmp_path / "c.json") == {}
 
 
 def test_committed_baseline_gates_clean(tmp_path):
@@ -244,10 +255,11 @@ def test_committed_baseline_gates_clean(tmp_path):
     repo = Path(__file__).resolve().parent.parent
     serving, kernels = repo / "BENCH_serving.json", \
         repo / "BENCH_kernels.json"
+    lifetime = repo / "BENCH_lifetime.json"
     if not (regress.BASELINE_PATH.exists() and serving.exists()
             and kernels.exists()):
         pytest.skip("no committed bench snapshots")
-    cur = regress.current_metrics(serving, kernels)
+    cur = regress.current_metrics(serving, kernels, lifetime)
     fails = regress.compare(cur, regress.load_baseline(),
                             wall_ratio=1.0 + 1e-9)
     assert fails == [], fails

@@ -100,3 +100,41 @@ def test_placed_latency_dominates_logical(d_in, d_out, rows, cols, tile,
     # a single-pass placement has no multiplexing penalty: models agree
     if prog.n_passes == 1:
         np.testing.assert_allclose(placed, logical, rtol=1e-12)
+
+
+# ----------------------------------------------------------------------
+# die-lifetime invariants (hw/aging.py) — hypothesis over the die space
+# ----------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16),
+       sev=st.floats(0.25, 3.0, allow_nan=False, allow_infinity=False))
+def test_at_age_zero_is_identity_for_any_die(seed, sev):
+    """at_age(0) returns the birth instance itself — no new identity,
+    so identity-keyed jit caches see the same die."""
+    from repro.hw import VariationSpec, sample_instances
+    chip = sample_instances(seed, 1, VariationSpec().scaled(sev))[0]
+    assert chip.at_age(0.0) is chip
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16),
+       sev=st.floats(0.25, 3.0, allow_nan=False, allow_infinity=False),
+       days=st.floats(1e-3, 365.0, allow_nan=False,
+                      allow_infinity=False))
+def test_aging_commutes_with_save_load(seed, sev, days):
+    """age(load(save(die))) == age(die), bit for bit: the aging-rate
+    PRNG is keyed only by fields that serialize exactly, so a restored
+    fleet stays on its own aging trajectory."""
+    import jax
+
+    from repro.hw import VariationSpec, sample_instances
+    from repro.hw.instance import ChipInstance
+    chip = sample_instances(seed, 1, VariationSpec().scaled(sev))[0]
+    t = days * 86400.0
+    direct = chip.at_age(t).to_tree()
+    roundtrip = ChipInstance.from_tree(chip.to_tree()).at_age(t).to_tree()
+    assert (jax.tree_util.tree_structure(direct)
+            == jax.tree_util.tree_structure(roundtrip))
+    for a, b in zip(jax.tree_util.tree_leaves(direct),
+                    jax.tree_util.tree_leaves(roundtrip)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,306 @@
+"""Mesh-of-pools fleet-serving scaling benchmark (serving/fleet.py).
+
+Workload: the serving_bench SARD triage stream (same trained CNN, same
+triage policy, 25% fog-corrupted), served through ``serve_sar_fleet``
+at ``P`` pools × ``SLOTS_PER_POOL`` slots for P in (1, 2, 4, 8) on a
+simulated 8-device host mesh.  8 × 64 = 512 concurrent decision slots
+— 16× the single-pool serving_bench workload.
+
+Weak scaling: the request count grows with P (``REQS_PER_POOL`` per
+pool), so every sweep point runs the same per-pool workload.
+
+Two throughput views per sweep point, for the same reason
+serving_bench reports ``model_decisions_per_s`` next to wall clock:
+
+  * WALL  (``decisions_per_s_cold`` / ``_warm``) — measured aggregate
+    wall-clock throughput of THIS host.  The CI/dev host is a single
+    physical CPU core, so the "8 simulated devices" of
+    ``--xla_force_host_platform_device_count`` time-slice one core:
+    every shard program of a gang dispatch runs serially and per-pool
+    admission (featurize) is serial host work.  Wall scaling is
+    therefore ~flat by construction — it measures the simulator, not
+    the design — and is reported honestly but NOT gated.
+  * MESH  (``decisions_per_s_mesh``) — the §V-A-style latency-model
+    throughput on a real P-device mesh, calibrated from measurement.
+    The fleet records per tick ``{"wall_s", "trips": [P]}`` where
+    ``trips[p]`` is pool p's OWN while-loop trip count (its device-side
+    work this tick).  From the P = 1 warm run we fit the per-pool tick
+    cost ``t = a + b·trips`` by least squares (a = per-pool host work:
+    admission/featurize, dispatch, retirement — all per-pool state
+    that lives with its device on a real mesh; b = cost per escalation
+    round).  On a mesh the pools run concurrently and the gang
+    dispatch is a barrier, so a tick's critical path is its slowest
+    pool: ``T_mesh(P) = Σ_ticks (a + b · max_p trips[p])``.  This
+    keeps every genuinely serial effect — straggler pools, router
+    imbalance, escalation skew — and removes only the one-core
+    time-slicing artifact.  ``speedup``/``scaling_efficiency`` are
+    computed from the mesh view (P = 1 via the same model, so the
+    comparison is model-vs-model, not model-vs-wall).
+
+Also reported per P: ``host_syncs_per_decision`` (fleet syncs — ONE
+gang pull serves all P pools per tick) and ``per_pool_syncs_per_
+decision`` (= fleet syncs/decision · P), the per-pool structural cost
+that must stay at the single-engine ~0.05 budget or better.
+
+The 4-pool point carries the ROADMAP item-1 acceptance gates (enforced
+by ``regress.py --baseline benchmarks/baseline_fleet.json``): mesh
+speedup ≥ 3× over one pool and scaling efficiency ≥ 0.7.
+
+Device bootstrap: the sweep needs 8 devices; when the process has
+fewer (the default CPU process exposes one) the bench re-runs itself
+in a subprocess with ``XLA_FLAGS=--xla_force_host_platform_device_count
+=8`` and reads the report back — so ``python -m benchmarks.run --only
+fleet_bench`` works from any process.
+
+Outputs: repo-root ``BENCH_fleet.json`` (full report), a ``fleet`` key
+merged into ``BENCH_serving.json`` (kept across serving_bench rewrites)
+and one ``fleet_bench`` record in ``BENCH_history.jsonl``.
+
+Run: PYTHONPATH=src python -m benchmarks.run --only fleet_bench
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+BENCH_JSON = ROOT / "BENCH_fleet.json"
+SERVING_JSON = ROOT / "BENCH_serving.json"
+
+POOLS = (1, 2, 4, 8)
+SLOTS_PER_POOL = 64
+REQS_PER_POOL = 384
+N_DEVICES = 8
+CORRUPT_FRAC = 0.25
+
+
+def _policy():
+    from repro.serving import TriagePolicy
+    return TriagePolicy(conf_threshold=0.7, mi_threshold=0.05,
+                        r_min=4, r_max=20, z=1.0)
+
+
+def _fit_tick_model(tick_log: list[dict]) -> tuple[float, float]:
+    """Least-squares fit of per-pool tick cost ``t = a + b·trips``
+    from a P = 1 tick log (trips is then that pool's scalar count)."""
+    pts = [(float(sum(t["trips"])), float(t["wall_s"]))
+           for t in tick_log]
+    n = len(pts)
+    if n == 0:
+        return 0.0, 0.0
+    sx = sum(x for x, _ in pts)
+    sy = sum(y for _, y in pts)
+    sxx = sum(x * x for x, _ in pts)
+    sxy = sum(x * y for x, y in pts)
+    denom = n * sxx - sx * sx
+    if abs(denom) < 1e-12:                  # every tick same trip count
+        return sy / n, 0.0
+    b = (n * sxy - sx * sy) / denom
+    a = (sy - b * sx) / n
+    if b < 0.0 or a < 0.0:
+        # noisy fit crossed an axis: fall back to the mean-tick model
+        # (pessimistic — no trip-count credit)
+        return sy / n, 0.0
+    return a, b
+
+
+def _mesh_time_s(tick_log: list[dict], a: float, b: float) -> float:
+    """Modelled wall time on a real mesh: pools run concurrently, the
+    gang dispatch is a barrier, so each tick costs its slowest pool."""
+    return sum(a + b * max(t["trips"]) for t in tick_log)
+
+
+def _measure(params, cfg, n_pools: int) -> dict:
+    from repro.launch.serve import serve_sar_fleet
+    kw = dict(n_requests=REQS_PER_POOL * n_pools, n_pools=n_pools,
+              slots_per_pool=SLOTS_PER_POOL, policy=_policy(),
+              corrupt_frac=CORRUPT_FRAC, corruption="fog",
+              params=params, cfg=cfg)
+    t0 = time.time()
+    cold = serve_sar_fleet(**kw)
+    cold_wall = time.time() - t0
+    warm = serve_sar_fleet(**kw)          # compiled gang fn reuse
+    return {
+        "n_pools": n_pools,
+        "slots_per_pool": SLOTS_PER_POOL,
+        "gang": warm["gang"],
+        "requests": warm["requests"],
+        "decisions": warm["decisions"],
+        "ticks": warm["ticks"],
+        "tick_log": warm["tick_log"],
+        "cold_wall_s": cold_wall,
+        "decisions_per_s_cold": cold["decisions_per_s"],
+        "decisions_per_s_warm": warm["decisions_per_s"],
+        "mean_samples_per_decision": warm["mean_samples_per_decision"],
+        "flag_fraction": warm.get("flag_fraction", float("nan")),
+        "host_syncs": warm["host_syncs"],
+        "host_syncs_per_decision": warm["host_syncs_per_decision"],
+        # the per-POOL structural cost: one gang sync serves P pools
+        "per_pool_syncs_per_decision":
+            warm["host_syncs_per_decision"] * n_pools,
+        "backlog_peak": warm["backlog_peak"],
+        "routed_per_pool": warm["routed_per_pool"],
+        "energy_total_J": warm.get("energy_total_J"),
+    }
+
+
+def _report() -> dict:
+    from repro.launch.serve import sar_layer_shapes  # noqa: F401
+    from repro.models.sar_cnn import SarCnnConfig
+    from benchmarks.serving_bench import trained_params
+    cfg = SarCnnConfig()
+    params = trained_params(cfg)
+    sweep = {str(p): _measure(params, cfg, p) for p in POOLS}
+
+    # calibrate the per-pool tick-cost model on the 1-pool warm run,
+    # then evaluate every sweep point's tick log under it (see module
+    # docstring — critical path per tick is the slowest pool)
+    a, b = _fit_tick_model(sweep["1"]["tick_log"])
+    base_wall = sweep["1"]["decisions_per_s_warm"]
+    base_mesh = None
+    for p in POOLS:
+        rec = sweep[str(p)]
+        t_mesh = _mesh_time_s(rec["tick_log"], a, b)
+        rec["mesh_time_s"] = t_mesh
+        rec["decisions_per_s_mesh"] = (
+            rec["decisions"] / t_mesh if t_mesh > 0 else float("nan"))
+        if base_mesh is None:               # P = 1: self-consistency
+            base_mesh = rec["decisions_per_s_mesh"]
+        rec["speedup"] = rec["decisions_per_s_mesh"] / base_mesh
+        rec["scaling_efficiency"] = rec["speedup"] / p
+        rec["speedup_wall"] = rec["decisions_per_s_warm"] / base_wall
+        rec["scaling_efficiency_wall"] = rec["speedup_wall"] / p
+        del rec["tick_log"]                 # raw log stays out of JSON
+    return {
+        "workload": {
+            "pools": list(POOLS),
+            "slots_per_pool": SLOTS_PER_POOL,
+            "requests_per_pool": REQS_PER_POOL,
+            "corrupt_frac": CORRUPT_FRAC,
+            "n_devices": N_DEVICES,
+            "scaling": "weak (requests grow with P)",
+        },
+        "latency_model": {
+            "a_s_per_pool_tick": a,
+            "b_s_per_trip": b,
+            "fit_ticks": sweep["1"]["ticks"],
+            "source": "least squares on the P=1 warm tick log; "
+                      "T_mesh(P) = sum over ticks of "
+                      "(a + b * max_p trips[p])",
+        },
+        "pools": sweep,
+        "speedup_4pools": sweep["4"]["speedup"],
+        "scaling_efficiency_4pools": sweep["4"]["scaling_efficiency"],
+        "speedup_8pools": sweep["8"]["speedup"],
+        "scaling_efficiency_8pools": sweep["8"]["scaling_efficiency"],
+    }
+
+
+def _rows(report: dict) -> list[tuple[str, float, str]]:
+    out = []
+    for p in POOLS:
+        rec = report["pools"][str(p)]
+        us = rec["cold_wall_s"] * 1e6 / max(rec["decisions"], 1)
+        out.append((f"fleet_sar_{p}pool", us,
+                    f"mesh_dps={rec['decisions_per_s_mesh']:.1f};"
+                    f"speedup={rec['speedup']:.2f}x;"
+                    f"eff={rec['scaling_efficiency']:.2f};"
+                    f"wall_dps={rec['decisions_per_s_warm']:.1f};"
+                    f"cold_dps={rec['decisions_per_s_cold']:.1f};"
+                    f"syncs_per_dec={rec['host_syncs_per_decision']:.4f};"
+                    f"pool_syncs_per_dec="
+                    f"{rec['per_pool_syncs_per_decision']:.4f};"
+                    f"samples={rec['mean_samples_per_decision']:.2f};"
+                    f"flagged={rec['flag_fraction']:.3f};"
+                    f"gang={rec['gang']}"))
+    out.append(("fleet_sar_scaling", 0.0,
+                f"speedup_4pools={report['speedup_4pools']:.2f}x;"
+                f"eff_4pools={report['scaling_efficiency_4pools']:.2f};"
+                f"speedup_8pools={report['speedup_8pools']:.2f}x;"
+                f"eff_8pools={report['scaling_efficiency_8pools']:.2f};"
+                f"model=a+b*trips,a="
+                f"{report['latency_model']['a_s_per_pool_tick']*1e3:.2f}"
+                f"ms,b="
+                f"{report['latency_model']['b_s_per_trip']*1e3:.2f}ms"))
+    return out
+
+
+def _merge_into_serving_json(report: dict) -> None:
+    """Ride the ``fleet`` key into BENCH_serving.json (serving_bench
+    preserves it across its own rewrites)."""
+    prev = {}
+    if SERVING_JSON.exists():
+        try:
+            prev = json.loads(SERVING_JSON.read_text())
+        except json.JSONDecodeError:
+            prev = {}
+    prev["fleet"] = {
+        "pools": {p: {k: report["pools"][p][k] for k in
+                      ("decisions_per_s_warm", "decisions_per_s_mesh",
+                       "speedup", "scaling_efficiency",
+                       "host_syncs_per_decision",
+                       "per_pool_syncs_per_decision")}
+                  for p in report["pools"]},
+        "latency_model": report["latency_model"],
+        "speedup_4pools": report["speedup_4pools"],
+        "scaling_efficiency_4pools": report["scaling_efficiency_4pools"],
+    }
+    SERVING_JSON.write_text(json.dumps(prev, indent=2, sort_keys=True))
+
+
+def _bench_here() -> list[tuple[str, float, str]]:
+    report = _report()
+    BENCH_JSON.write_text(json.dumps(report, indent=2, sort_keys=True))
+    _merge_into_serving_json(report)
+    from benchmarks import history
+    history.record("fleet_bench",
+                   {"pools": report["pools"],
+                    "latency_model": report["latency_model"],
+                    "speedup_4pools": report["speedup_4pools"],
+                    "scaling_efficiency_4pools":
+                        report["scaling_efficiency_4pools"]},
+                   path=ROOT / "BENCH_history.jsonl")
+    return _rows(report)
+
+
+def _bench_subprocess() -> list[tuple[str, float, str]]:
+    """Re-run the sweep in a child with 8 forced host devices."""
+    env = dict(os.environ)
+    flags = env.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        env["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count"
+            f"={N_DEVICES}").strip()
+    src = str(ROOT / "src")
+    env["PYTHONPATH"] = (src + os.pathsep + env["PYTHONPATH"]
+                         if env.get("PYTHONPATH") else src)
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.fleet_bench"],
+        cwd=ROOT, env=env, capture_output=True, text=True, timeout=3000)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"fleet_bench subprocess failed:\n{proc.stdout}\n"
+            f"{proc.stderr}")
+    return _rows(json.loads(BENCH_JSON.read_text()))
+
+
+def bench() -> list[tuple[str, float, str]]:
+    import jax
+    if len(jax.devices()) < N_DEVICES:
+        return _bench_subprocess()
+    return _bench_here()
+
+
+if __name__ == "__main__":
+    import jax
+    if len(jax.devices()) < N_DEVICES:
+        rows = _bench_subprocess()
+    else:
+        rows = _bench_here()
+    for row in rows:
+        print(",".join(str(x) for x in row))

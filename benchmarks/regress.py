@@ -18,10 +18,18 @@ structural metrics are exact:
     ratio (shared runners jitter) — an honest wide band beats a tight
     band that cries wolf.
 
+A third class, absolute FLOORS (``FLOOR_BANDS``), carries acceptance
+gates that must hold regardless of the committed baseline value — the
+fleet scaling-efficiency/speedup criteria from ROADMAP item 1.
+
 Usage:
   PYTHONPATH=src python -m benchmarks.regress                 # gate
   PYTHONPATH=src python -m benchmarks.regress --write-baseline
   PYTHONPATH=src python -m benchmarks.regress --wall-ratio 5  # CI
+  # fleet gate (multi-device smoke job; fleet metrics live in their
+  # own baseline because they only exist when fleet_bench has run):
+  PYTHONPATH=src python -m benchmarks.regress \
+      --baseline benchmarks/baseline_fleet.json
 
 The baseline (benchmarks/baseline.json) is committed; refresh it with
 ``--write-baseline`` whenever a PR intentionally moves a metric, so the
@@ -38,9 +46,12 @@ from pathlib import Path
 from typing import Any
 
 BASELINE_PATH = Path(__file__).resolve().parent / "baseline.json"
+FLEET_BASELINE_PATH = Path(__file__).resolve().parent \
+    / "baseline_fleet.json"
 SERVING_JSON = Path("BENCH_serving.json")
 KERNELS_JSON = Path("BENCH_kernels.json")
 LIFETIME_JSON = Path("BENCH_lifetime.json")
+FLEET_JSON = Path("BENCH_fleet.json")
 
 # metric-name suffix -> (direction, band).  "lower": regression when
 # current > baseline * band; "higher": regression when
@@ -59,6 +70,16 @@ DETERMINISTIC_BANDS: dict[str, tuple[str, float]] = {
     # tolerates count jitter but fails on zero.
     "advisories": ("higher", 2.0),
     "heals": ("higher", 2.0),
+    # fleet (BENCH_fleet.json): one gang sync serves P pools, so the
+    # per-POOL structural sync cost must hold the single-engine budget
+    "per_pool_syncs_per_decision": ("lower", 1.25),
+}
+# absolute floors, independent of the baseline VALUE: regression when
+# current < floor.  These are the ROADMAP item-1 fleet acceptance
+# gates — committing a weaker baseline must not weaken the gate.
+FLOOR_BANDS: dict[str, float] = {
+    "scaling_efficiency_4pools": 0.7,
+    "speedup_4pools": 3.0,
 }
 ABS_BANDS: dict[str, float] = {
     "flag_fraction": 0.05,
@@ -70,7 +91,7 @@ ABS_BANDS: dict[str, float] = {
 }
 # wall-clock metrics: band comes from --wall-ratio
 WALL_LOWER_SUFFIXES = ("us_per_call_warm",)
-WALL_HIGHER_SUFFIXES = ("decisions_per_s_warm",)
+WALL_HIGHER_SUFFIXES = ("decisions_per_s_warm", "decisions_per_s_mesh")
 
 SERVING_METRIC_KEYS = (
     "host_syncs_per_decision", "peak_live_bytes_per_decision",
@@ -86,6 +107,7 @@ def _kernel_rows(doc: dict) -> dict[str, dict]:
 def current_metrics(serving_path: Path | str = SERVING_JSON,
                     kernels_path: Path | str = KERNELS_JSON,
                     lifetime_path: Path | str = LIFETIME_JSON,
+                    fleet_path: Path | str = FLEET_JSON,
                     ) -> dict[str, float]:
     """Flat {metric_name: value} from the BENCH_*.json snapshots.
 
@@ -134,12 +156,28 @@ def current_metrics(serving_path: Path | str = SERVING_JSON,
         if gates:
             out["lifetime.gates_all_pass"] = float(
                 all(bool(v) for v in gates.values()))
+    fleet_path = Path(fleet_path)
+    if fleet_path.exists():
+        doc = json.loads(fleet_path.read_text())
+        for p, rec in doc.get("pools", {}).items():
+            for key in ("decisions_per_s_warm", "decisions_per_s_mesh",
+                        "host_syncs_per_decision",
+                        "per_pool_syncs_per_decision"):
+                v = rec.get(key)
+                if isinstance(v, (int, float)) and v == v:
+                    out[f"fleet.pools{p}.{key}"] = float(v)
+        for key in ("speedup_4pools", "scaling_efficiency_4pools"):
+            v = doc.get(key)
+            if isinstance(v, (int, float)) and v == v:
+                out[f"fleet.{key}"] = float(v)
     return out
 
 
 def _band_for(metric: str, wall_ratio: float):
     """(direction, band) for one metric name, by suffix."""
     tail = metric.rsplit(".", 1)[-1]
+    if tail in FLOOR_BANDS:
+        return "floor", FLOOR_BANDS[tail]
     if tail in ABS_BANDS:
         return "abs", ABS_BANDS[tail]
     if tail in DETERMINISTIC_BANDS:
@@ -169,7 +207,12 @@ def compare(current: dict[str, float], baseline: dict[str, float],
                              "limit": None})
             continue
         cur = float(current[metric])
-        if kind == "abs":
+        if kind == "floor":
+            # absolute acceptance floor — the baseline value is
+            # informational; the committed FLOOR_BANDS constant gates
+            limit = band
+            ok = cur >= band
+        elif kind == "abs":
             limit = band
             ok = abs(cur - base) <= band
         elif kind == "lower":
@@ -205,6 +248,7 @@ def main(argv=None) -> int:
     ap.add_argument("--serving", default=str(SERVING_JSON))
     ap.add_argument("--kernels", default=str(KERNELS_JSON))
     ap.add_argument("--lifetime", default=str(LIFETIME_JSON))
+    ap.add_argument("--fleet", default=str(FLEET_JSON))
     ap.add_argument("--wall-ratio", type=float, default=1.5,
                     help="tolerance ratio for wall-clock metrics "
                          "(CI interpret-mode runs pass a generous "
@@ -215,7 +259,8 @@ def main(argv=None) -> int:
                          "metrics instead of gating")
     args = ap.parse_args(argv)
 
-    current = current_metrics(args.serving, args.kernels, args.lifetime)
+    current = current_metrics(args.serving, args.kernels,
+                              args.lifetime, args.fleet)
     if not current:
         print("regress: no BENCH_*.json snapshots found — run "
               "benchmarks first", file=sys.stderr)

@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
   table2_corr        Fig.17/II corruption robustness
   kernel_bench       --        rank16-vs-paper FLOP scaling, kernels
   serving_bench      --        adaptive-R vs fixed-R serving engine
+  fleet_bench        --        mesh-of-pools fleet scaling sweep
+                               (BENCH_fleet, 8 simulated devices)
   hw_variation       --        chip-instance MC sweep, cal vs uncal
   mission_bench      --        closed-loop SAR mission (BENCH_mission)
   lifetime_bench     --        FeFET aging + self-healing redeploy
@@ -46,6 +48,7 @@ MODULES = [
     "sec5a_energy",
     "kernel_bench",
     "serving_bench",
+    "fleet_bench",
     "hw_variation",
     "fig16_uq",
     "table2_corr",
@@ -54,7 +57,7 @@ MODULES = [
     "roofline",
 ]
 FAST_SKIP = {"fig16_uq", "table2_corr", "serving_bench",
-             "hw_variation", "mission_bench",
+             "fleet_bench", "hw_variation", "mission_bench",
              "lifetime_bench"}  # SAR training
 
 

@@ -7,14 +7,24 @@ Pallas kernels COMPILE when the active JAX backend is a real TPU and
 fall back to interpret mode otherwise (CPU CI, local dev), so TPU runs
 stop paying the interpreter cost without any call-site changes.
 
-Override per-process with the environment variable
-``REPRO_PALLAS_INTERPRET``:
+Resolution precedence, highest first:
 
-  * ``1`` / ``true``  — force interpret mode everywhere (debugging a
-    kernel on TPU, or double-checking a miscompile),
-  * ``0`` / ``false`` — force compiled mode (e.g. Pallas-on-Mosaic-CPU
-    experiments),
-  * unset / ``auto``  — backend auto-detection (the default).
+  1. **Per-call argument** — an explicit ``interpret=True/False`` passed
+     to a kernel wrapper always wins.  The shard_map-native decision
+     kernel resolves the flag *once* at the wrapper level and passes the
+     concrete bool into every shard, so all shards of one call lower
+     identically regardless of ambient state.
+  2. **Scoped override** — ``with interpret_override(True/False): ...``
+     pins the mode for every kernel call (with ``interpret=None``) in
+     the dynamic extent.  Used to force compile/interpret per shard or
+     per benchmark arm without threading a flag through every layer.
+  3. **Environment** — ``REPRO_PALLAS_INTERPRET``:
+     ``1``/``true`` force interpret everywhere (debugging a kernel on
+     TPU, double-checking a miscompile); ``0``/``false`` force compiled
+     mode (Pallas-on-Mosaic-CPU experiments); unset/``auto`` falls
+     through.
+  4. **Backend auto-detect** — interpret unless the active JAX backend
+     is a real TPU.
 
 This module is import-cycle-free on purpose: the kernel modules
 (bayes_mvm, cim_mvm, clt_grng_kernel, decision_kernel) import it, and
@@ -24,7 +34,9 @@ helper.
 
 from __future__ import annotations
 
+import contextlib
 import os
+import threading
 
 import jax
 
@@ -32,19 +44,44 @@ _ENV = "REPRO_PALLAS_INTERPRET"
 _TRUE = ("1", "true", "yes", "on")
 _FALSE = ("0", "false", "no", "off")
 
+_local = threading.local()
+
 
 def interpret_default() -> bool:
     """Resolve the interpret-mode default for a Pallas kernel call.
 
-    Env override first (``REPRO_PALLAS_INTERPRET``), then backend
-    auto-detection: interpret unless running on real TPU hardware.
+    Scoped ``interpret_override`` first, then the env override
+    (``REPRO_PALLAS_INTERPRET``), then backend auto-detection:
+    interpret unless running on real TPU hardware.
     """
+    override = getattr(_local, "override", None)
+    if override is not None:
+        return override
     raw = os.environ.get(_ENV, "auto").strip().lower()
     if raw in _TRUE:
         return True
     if raw in _FALSE:
         return False
     return jax.default_backend() != "tpu"
+
+
+@contextlib.contextmanager
+def interpret_override(value: bool | None):
+    """Pin interpret mode for kernel calls in this dynamic extent.
+
+    ``True``/``False`` force the mode for every kernel invoked with
+    ``interpret=None``; ``None`` restores auto resolution.  Overrides
+    nest (innermost wins) and are thread-local, so concurrent benches
+    don't bleed into each other.  An explicit per-call ``interpret=``
+    argument still beats the override — see the module docstring for
+    the full precedence.
+    """
+    prev = getattr(_local, "override", None)
+    _local.override = None if value is None else bool(value)
+    try:
+        yield
+    finally:
+        _local.override = prev
 
 
 def resolve_interpret(interpret: bool | None) -> bool:

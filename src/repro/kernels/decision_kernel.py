@@ -66,7 +66,7 @@ from repro.kernels.clt_grng_kernel import _gauss_of, _hash3
 _NEG = -1.0e30            # masked-logit fill: exp underflows to exactly 0
 
 
-def _mix_logits(m_blk, sel, y_mu, x_sigma, x_sigsq, sidx, *,
+def _mix_logits(m_blk, sel, y_mu, x_sigma, x_sigsq, sidx, rows, *,
                 cfg: GRNGConfig, i, k, bb, bn, n: int):
     """[R, bb, bn] logit samples for one (batch, column) block — the
     in-VMEM replica of core.sampling.mix_samples, padded cols → -1e30."""
@@ -78,11 +78,12 @@ def _mix_logits(m_blk, sel, y_mu, x_sigma, x_sigsq, sidx, *,
     mix = jnp.transpose(mix, (1, 0, 2))                  # [R, bb, bn]
     num = mix - cfg.sum_mean * x_sigma[None]
     if cfg.read_sigma:
-        rows = (jnp.uint32(i * bb)
-                + jax.lax.broadcasted_iota(jnp.uint32, (bb, bn), 0))
         cols = (jnp.uint32(k * bn)
                 + jax.lax.broadcasted_iota(jnp.uint32, (bb, bn), 1))
-        # same stream as mix_samples: hash3(sample_idx, slot, column)
+        # same stream as mix_samples: hash3(sample_idx, slot, column).
+        # ``rows`` is the [bb, 1] block of GLOBAL slot ids — under the
+        # shard_map lowering each shard hashes with its global rows, so
+        # sharded draws match the single-device stream bit-for-bit.
         h = _hash3(sidx[:, :, None], rows[None], cols[None],
                    cfg.noise_seed)                       # [R, bb, bn]
         sigma_read = cfg.read_sigma * jnp.sqrt(
@@ -99,13 +100,14 @@ def _decision_kernel(*refs, cfg: GRNGConfig, bb: int, bn: int, n: int):
     stream; phase 1 = normalize + accumulate masked statistic deltas."""
     if cfg.read_sigma:
         (y_mu_ref, xs_ref, m_ref, sel_ref, mask_ref, xq_ref, sidx_ref,
+         rows_ref,
          out_p_ref, out_psq_ref, out_ent_ref, out_entsq_ref,
          mrun_ref, lrun_ref, ent_ref) = refs
     else:
         (y_mu_ref, xs_ref, m_ref, sel_ref, mask_ref,
          out_p_ref, out_psq_ref, out_ent_ref, out_entsq_ref,
          mrun_ref, lrun_ref, ent_ref) = refs
-        xq_ref = sidx_ref = None
+        xq_ref = sidx_ref = rows_ref = None
     i = pl.program_id(0)
     phase = pl.program_id(1)
     k = pl.program_id(2)
@@ -116,6 +118,7 @@ def _decision_kernel(*refs, cfg: GRNGConfig, bb: int, bn: int, n: int):
         xs_ref[...].astype(jnp.float32),
         xq_ref[...].astype(jnp.float32) if cfg.read_sigma else None,
         sidx_ref[...] if cfg.read_sigma else None,
+        rows_ref[...] if cfg.read_sigma else None,
         cfg=cfg, i=i, k=k, bb=bb, bn=bn, n=n)            # [R, bb, bn]
 
     @pl.when((phase == 0) & (k == 0))
@@ -161,7 +164,7 @@ def _round_up(v: int, m: int) -> int:
     "cfg", "bb", "bn", "interpret"))
 def decision_stats_pallas(y_mu, x_sigma, m, sel, cfg: GRNGConfig,
                           x_sigsq=None, sample_idx=None, mask=None,
-                          bb: int = 0, bn: int = 128,
+                          rows=None, bb: int = 0, bn: int = 128,
                           interpret: bool | None = None) -> dict:
     """Fused decision-statistic deltas for one escalation round.
 
@@ -169,8 +172,11 @@ def decision_stats_pallas(y_mu, x_sigma, m, sel, cfg: GRNGConfig,
     sel: [R, B, 16] or [R, 16] selection vectors; x_sigsq: [B, N]
     (required when ``cfg.read_sigma > 0``); sample_idx: [R, B] or [R]
     absolute stream indices (the read-noise key — required on degraded
-    instances, matching ``adaptive.stream_indices``); mask: [B] bool —
-    slots whose stats should advance (None = all).
+    instances, matching ``adaptive.stream_indices``); rows: [B] uint32
+    GLOBAL slot ids for the read-noise hash (None = ``arange(B)``; a
+    shard passes its global offsets so sharded draws match the
+    single-device stream); mask: [B] bool — slots whose stats should
+    advance (None = all).
 
     Returns the per-round deltas, already masked (inactive rows are 0):
     ``{sum_p [B,N] f32, sum_psq [B,N], sum_ent [B], sum_entsq [B]}`` —
@@ -215,11 +221,16 @@ def decision_stats_pallas(y_mu, x_sigma, m, sel, cfg: GRNGConfig,
         sample_idx = jnp.asarray(sample_idx, jnp.uint32)
         if sample_idx.ndim == 1:
             sample_idx = jnp.broadcast_to(sample_idx[:, None], (r, b))
+        if rows is None:
+            rows = jnp.arange(b, dtype=jnp.uint32)
+        rows = jnp.asarray(rows, jnp.uint32).reshape(b, 1)
         operands += [pad2(x_sigsq),
-                     jnp.pad(sample_idx, ((0, 0), (0, bp - b)))]
+                     jnp.pad(sample_idx, ((0, 0), (0, bp - b))),
+                     jnp.pad(rows, ((0, bp - b), (0, 0)))]
         in_specs += [
             pl.BlockSpec((bb, bn), lambda i, p, k: (i, k)),      # x_sigsq
             pl.BlockSpec((r, bb), lambda i, p, k: (0, i)),       # sample_idx
+            pl.BlockSpec((bb, 1), lambda i, p, k: (i, 0)),       # rows
         ]
 
     out = pl.pallas_call(
@@ -247,3 +258,75 @@ def decision_stats_pallas(y_mu, x_sigma, m, sel, cfg: GRNGConfig,
     sum_p, sum_psq, sum_ent, sum_entsq = out
     return {"sum_p": sum_p[:b, :n], "sum_psq": sum_psq[:b, :n],
             "sum_ent": sum_ent[:b, 0], "sum_entsq": sum_entsq[:b, 0]}
+
+
+def decision_stats_sharded(y_mu, x_sigma, m, sel, cfg: GRNGConfig, *,
+                           mesh, axis: str, x_sigsq=None, sample_idx=None,
+                           mask=None, rows=None, bb: int = 0, bn: int = 128,
+                           interpret: bool | None = None) -> dict:
+    """Shard_map-native fused decision update over the slot (batch) axis.
+
+    Each shard runs its own ``decision_stats_pallas`` grid on its local
+    slots — every statistic in the output dict is slot-local, so the
+    round's data path needs NO cross-device collectives.  Bit-identity
+    with the single-device kernel comes from two global keys that shard
+    trivially along B: ``sample_idx`` (absolute selection-stream index,
+    already per-slot) and ``rows`` (global slot ids for the hash3
+    read-noise stream; default ``arange(B)`` so shard k hashes with its
+    true global offsets instead of local 0..B/k-1).
+
+    ``interpret`` is resolved ONCE here (per-call arg > scoped override
+    > env > backend auto-detect — see kernels/backend.py) and passed as
+    a concrete bool into every shard, so all shards lower identically.
+
+    Requires ``B % mesh.shape[axis] == 0``; callers fall back to the
+    unsharded kernel otherwise.
+    """
+    from repro.launch.mesh import shard_map_compat
+
+    interpret = resolve_interpret(interpret)
+    b, _ = y_mu.shape
+    shards = mesh.shape[axis]
+    if b % shards:
+        raise ValueError(
+            f"batch {b} not divisible by mesh axis {axis!r}={shards}")
+    if sel.ndim == 2:
+        sel = jnp.broadcast_to(sel[:, None, :], (sel.shape[0], b, 16))
+    r = sel.shape[0]
+    if mask is None:
+        mask = jnp.ones((b,), jnp.bool_)
+    P = jax.sharding.PartitionSpec
+
+    if cfg.read_sigma:
+        assert x_sigsq is not None, "degraded instance needs x_sigsq"
+        assert sample_idx is not None, \
+            "degraded instance needs absolute stream indices"
+        sample_idx = jnp.asarray(sample_idx, jnp.uint32)
+        if sample_idx.ndim == 1:
+            sample_idx = jnp.broadcast_to(sample_idx[:, None], (r, b))
+        if rows is None:
+            rows = jnp.arange(b, dtype=jnp.uint32)
+        rows = jnp.asarray(rows, jnp.uint32)
+
+        def local(y_mu, x_sigma, m, sel, mask, x_sigsq, sample_idx, rows):
+            return decision_stats_pallas(
+                y_mu, x_sigma, m, sel, cfg, x_sigsq=x_sigsq,
+                sample_idx=sample_idx, mask=mask, rows=rows,
+                bb=bb, bn=bn, interpret=interpret)
+
+        args = (y_mu, x_sigma, m, sel, mask, x_sigsq, sample_idx, rows)
+        in_specs = (P(axis), P(axis), P(axis), P(None, axis), P(axis),
+                    P(axis), P(None, axis), P(axis))
+    else:
+
+        def local(y_mu, x_sigma, m, sel, mask):
+            return decision_stats_pallas(
+                y_mu, x_sigma, m, sel, cfg, mask=mask,
+                bb=bb, bn=bn, interpret=interpret)
+
+        args = (y_mu, x_sigma, m, sel, mask)
+        in_specs = (P(axis), P(axis), P(axis), P(None, axis), P(axis))
+
+    fn = shard_map_compat(local, mesh=mesh, in_specs=in_specs,
+                          out_specs=P(axis))
+    return fn(*args)

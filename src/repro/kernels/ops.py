@@ -19,7 +19,8 @@ from repro.kernels.backend import interpret_default  # noqa: F401
 from repro.kernels.bayes_mvm import bayes_mvm_pallas
 from repro.kernels.cim_mvm import cim_mvm_pallas
 from repro.kernels.clt_grng_kernel import grng_eps_pallas
-from repro.kernels.decision_kernel import decision_stats_pallas
+from repro.kernels.decision_kernel import (decision_stats_pallas,
+                                           decision_stats_sharded)
 
 
 def grng_eps(cfg: g.GRNGConfig, n_rows: int, n_cols: int, num_samples: int,
@@ -70,7 +71,8 @@ def bayes_head_mvm(x: jnp.ndarray, mu_prime: jnp.ndarray, sigma: jnp.ndarray,
 
 def decision_update(stats: dict, abasis: dict, sel: jnp.ndarray,
                     cfg: g.GRNGConfig, sample_idx=None, mask=None,
-                    interpret: bool | None = None) -> dict:
+                    interpret: bool | None = None, shard=None,
+                    rows=None) -> dict:
     """Fused drop-in for ``update_stats(stats, mix_samples(...), mask)``.
 
     Folds one escalation round into the running sufficient statistics
@@ -85,14 +87,29 @@ def decision_update(stats: dict, abasis: dict, sel: jnp.ndarray,
     ``adaptive.stream_indices``) — the read-noise key on degraded
     instances; mask: [B] bool, False rows keep their old sums.
 
+    shard: optional ``(mesh, axis_name)`` — route the round through the
+    shard_map-native kernel (``decision_stats_sharded``): each device
+    runs its own Pallas grid on its slot shard, stats stay slot-local,
+    and ``rows`` ([B] uint32 global slot ids, default ``arange(B)``)
+    keys the read-noise hash so sharded draws are bit-identical to the
+    single-device stream.
+
     Verdict-equivalent to the jnp path (tests/test_decision_kernel.py);
     numerics agree to fp32 tolerance (online vs one-shot logsumexp
     reduction order).
     """
-    delta = decision_stats_pallas(
-        abasis["y_mu"], abasis["x_sigma"], abasis["m"], sel, cfg,
-        x_sigsq=abasis.get("x_sigsq"), sample_idx=sample_idx, mask=mask,
-        interpret=interpret)
+    if shard is not None:
+        mesh, axis = shard
+        delta = decision_stats_sharded(
+            abasis["y_mu"], abasis["x_sigma"], abasis["m"], sel, cfg,
+            mesh=mesh, axis=axis, x_sigsq=abasis.get("x_sigsq"),
+            sample_idx=sample_idx, mask=mask, rows=rows,
+            interpret=interpret)
+    else:
+        delta = decision_stats_pallas(
+            abasis["y_mu"], abasis["x_sigma"], abasis["m"], sel, cfg,
+            x_sigsq=abasis.get("x_sigsq"), sample_idx=sample_idx, mask=mask,
+            rows=rows, interpret=interpret)
     r = sel.shape[0]
     n_delta = jnp.full_like(stats["n"], r)
     if mask is not None:

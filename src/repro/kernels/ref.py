@@ -165,7 +165,8 @@ def selections_ref(lfsr_seed: int, num_samples: int, sample0: int = 0):
 
 def decision_stats_ref(y_mu: jnp.ndarray, x_sigma: jnp.ndarray,
                        m: jnp.ndarray, sel: jnp.ndarray, cfg: g.GRNGConfig,
-                       x_sigsq=None, sample_idx=None, mask=None) -> dict:
+                       x_sigsq=None, sample_idx=None, mask=None,
+                       rows=None) -> dict:
     """Fused decision-kernel oracle: one round's masked stat deltas.
 
     The no-blocking ground truth for ``decision_kernel.py`` — it DOES
@@ -192,8 +193,12 @@ def decision_stats_ref(y_mu: jnp.ndarray, x_sigma: jnp.ndarray,
         key = jnp.asarray(sample_idx, jnp.uint32)
         if key.ndim == 1:
             key = key[:, None]
+        # rows: global slot ids for the hash stream — a shard of a
+        # sharded pool passes its global offsets (default: local ids).
+        row_ids = (jnp.arange(b, dtype=jnp.uint32) if rows is None
+                   else jnp.asarray(rows, jnp.uint32))
         h = hash3(key[..., None],
-                  jnp.arange(b, dtype=jnp.uint32)[None, :, None],
+                  row_ids[None, :, None],
                   jnp.arange(n, dtype=jnp.uint32)[None, None, :],
                   cfg.noise_seed)
         sigma_read = cfg.read_sigma * jnp.sqrt(

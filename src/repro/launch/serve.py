@@ -265,6 +265,80 @@ def serve_sar(*, n_requests: int = 128, n_slots: int = 32,
     return out
 
 
+def serve_sar_fleet(*, n_requests: int = 256, n_pools: int = 4,
+                    slots_per_pool: int = 32, adaptive: bool = True,
+                    policy: TriagePolicy | None = None,
+                    corrupt_frac: float = 0.0, corruption: str = "fog",
+                    params=None, cfg=None, seed: int = 0,
+                    chip_instance=None, calibrated: bool = True,
+                    fused: bool = True, gang: bool | None = None,
+                    queue_cap: int | None = None,
+                    telemetry: bool | TelemetryConfig = True,
+                    profiler=True) -> dict:
+    """Mesh-of-pools SAR serving (serving/fleet.py).
+
+    ``n_pools`` complete serving pools tiled over a 1-D ``("pool",)``
+    device mesh behind a least-loaded admission router; each fleet tick
+    runs ONE shard_map'd gang round for every pool (``gang=None``
+    auto-enables it when the process has >= n_pools devices — use
+    XLA_FLAGS=--xla_force_host_platform_device_count=N or ``--mesh N``
+    to simulate a mesh on CPU).  Verdicts are bit-identical to
+    ``serve_sar`` pools fed the same admission sequences; the summary
+    is the exact sum of the per-pool reports (energy, telemetry,
+    decisions) plus router stats (``routed_per_pool``,
+    ``backlog_peak``).
+
+    ``chip_instance``/``calibrated``: as in ``serve_sar`` — every pool
+    serves the same die's digital twin.
+    """
+    from repro.hw import compile_network
+    from repro.models.sar_cnn import SarCnnConfig, init_sar_cnn
+    from repro.serving import SarServingFleet
+    cfg = cfg or SarCnnConfig()
+    if params is None:
+        params = init_sar_cnn(jax.random.PRNGKey(3 + seed), cfg)
+    policy = policy or TriagePolicy(conf_threshold=0.7, mi_threshold=0.05)
+    layers = sar_layer_shapes(cfg)
+    program = compile_network(layers)
+    head = hcfg = None
+    if chip_instance is not None:
+        from repro.core.bayes_layer import sigma_of
+        from repro.core.sampling import BayesHeadConfig
+        from repro.hw import prepare_instance_head, sample_instances
+        if not hasattr(chip_instance, "grng"):
+            chip_instance = sample_instances(int(chip_instance), 1)[0]
+        base_hcfg = BayesHeadConfig(
+            num_samples=policy.r_max, mode="rank16", grng=cfg.grng,
+            compute_dtype=jnp.float32, hoist_basis=True)
+        head, hcfg = prepare_instance_head(
+            params["head"]["mu"], sigma_of(params["head"]), base_hcfg,
+            chip_instance, calibrated=calibrated)
+    fleet = SarServingFleet(
+        params, cfg, n_pools=n_pools, slots_per_pool=slots_per_pool,
+        policy=policy, adaptive_mode=adaptive, head=head, hcfg=hcfg,
+        chip=chip_instance, fused=fused, telemetry=telemetry,
+        layers=layers, tile_program=program, queue_cap=queue_cap,
+        gang=gang, profiler=profiler)
+    for r in make_sar_stream(n_requests, corrupt_frac=corrupt_frac,
+                             corruption=corruption,
+                             image_size=cfg.image_size):
+        fleet.submit(r)
+    out = fleet.run()
+    if chip_instance is not None:
+        out["chip_id"] = chip_instance.chip_id
+        out["chip_device_seed"] = chip_instance.device_seed
+        out["calibrated"] = bool(calibrated)
+    out["flagged_fraction"] = out.get("flag_fraction", float("nan"))
+    out["verdicts"] = [
+        {"rid": r.rid, "pool": fleet.routes.get(r.rid),
+         "verdict": r.verdict, "confidence": r.confidence,
+         "mutual_information": r.mutual_information,
+         "n_samples": r.n_samples}
+        for eng in fleet.engines for r in eng.metrics.records]
+    out["verdicts"].sort(key=lambda v: v["rid"])
+    return out
+
+
 def serve_sar_lifetime(*, lifetime, chip_instance,
                        n_requests: int = 128, n_slots: int = 32,
                        adaptive: bool = True,
@@ -405,6 +479,19 @@ def main() -> None:
     ap.add_argument("--mi-threshold", type=float, default=0.5)
     ap.add_argument("--r-min", type=int, default=4)
     ap.add_argument("--r-max", type=int, default=20)
+    ap.add_argument("--pools", type=int, default=None,
+                    help="sar_cnn only: serve through the mesh-of-pools "
+                         "fleet with this many engine pools "
+                         "(serving/fleet.py; one shard_map'd gang "
+                         "dispatch per tick when devices allow)")
+    ap.add_argument("--slots-per-pool", type=int, default=32,
+                    help="decode slots per fleet pool (with --pools)")
+    ap.add_argument("--mesh", type=int, default=None, metavar="N",
+                    help="simulate an N-device host mesh: re-execs the "
+                         "process with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N so "
+                         "--pools can gang-dispatch over a real device "
+                         "mesh on CPU")
     ap.add_argument("--corrupt-frac", type=float, default=0.0)
     ap.add_argument("--corruption", default="fog",
                     choices=("fog", "frost", "motion", "snow"))
@@ -445,6 +532,22 @@ def main() -> None:
                          "and record compiled-cost analyses of the "
                          "engine's hot functions")
     args = ap.parse_args()
+    if args.mesh:
+        import os
+        import sys
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            # The import chain above already initialized the backend,
+            # which reads XLA_FLAGS exactly once — re-exec with the
+            # device-count flag in place (same argv; this branch is a
+            # no-op on the second pass).
+            env = dict(os.environ)
+            env["XLA_FLAGS"] = (
+                flags + f" --xla_force_host_platform_device_count"
+                f"={args.mesh}").strip()
+            os.execvpe(sys.executable,
+                       [sys.executable, "-m", "repro.launch.serve",
+                        *sys.argv[1:]], env)
     policy = TriagePolicy(conf_threshold=args.conf_threshold,
                           mi_threshold=args.mi_threshold,
                           r_min=args.r_min, r_max=args.r_max)
@@ -463,7 +566,23 @@ def main() -> None:
                 args.chip_instance, 1,
                 VariationSpec().scaled(args.chip_severity))[0]
         with trace_capture(args.profile):
-            if args.age_rate > 0.0 or args.auto_recalibrate:
+            if args.pools:
+                out = serve_sar_fleet(
+                    n_requests=args.requests or 128,
+                    n_pools=args.pools,
+                    slots_per_pool=args.slots_per_pool,
+                    adaptive=not args.fixed, policy=policy,
+                    corrupt_frac=args.corrupt_frac,
+                    corruption=args.corruption, chip_instance=chip,
+                    calibrated=not args.uncalibrated, fused=args.fused,
+                    telemetry=args.telemetry)
+                log.info("fleet", pools=out["n_pools"],
+                         gang=out["gang"],
+                         routed=out["routed_per_pool"],
+                         backlog_peak=out["backlog_peak"],
+                         host_syncs_per_decision=round(
+                             out["host_syncs_per_decision"], 4))
+            elif args.age_rate > 0.0 or args.auto_recalibrate:
                 from repro.hw.redeploy import LifetimeConfig
                 out = serve_sar_lifetime(
                     lifetime=LifetimeConfig(
@@ -493,19 +612,24 @@ def main() -> None:
                                 tracer=tracer,
                                 cost_records=bool(args.profile))
         chip_note = ""
-        if chip is not None:
+        if chip is not None and "tile_area_mm2" in out:
             chip_note = (f" [chip seed={args.chip_instance} "
                          f"T={chip.temp_c:.0f}C "
                          f"{'cal' if not args.uncalibrated else 'UNCAL'} "
                          f"area={out['tile_area_mm2']:.2f}mm2 "
                          f"util={out['tile_utilization']:.2f}]")
+        grng_note = ""
+        if "grng_energy_per_decision_aJ" in out:
+            grng_note = (f"; GRNG "
+                         f"{out['grng_energy_per_decision_aJ']:.0f} "
+                         f"aJ/decision")
         log.info(
             f"[sar] {out['decisions']} decisions in "
             f"{out['wall_s']:.2f}s ({out['decisions_per_s']:.1f}/s); "
-            f"mean samples/decision {out['mean_samples_per_decision']:.1f}; "
-            f"{100*out['flagged_fraction']:.1f}% flagged; "
-            f"GRNG {out['grng_energy_per_decision_aJ']:.0f} aJ/decision"
-            + chip_note)
+            f"mean samples/decision "
+            f"{out.get('mean_samples_per_decision', float('nan')):.1f}; "
+            f"{100*out['flagged_fraction']:.1f}% flagged"
+            + grng_note + chip_note)
         if out.get("drift"):
             log.info("drift", drifted=out["drift"]["drifted"],
                      z_mean=round(out["drift"]["z_mean"], 2),

@@ -74,7 +74,8 @@ def sar_mission_cost(cfg) -> DecisionCost:
 def _episode_fn(wcfg: WorldConfig, ucfg: UavConfig, pol: MissionPolicy,
                 snn_cfg, hcfg, chip, cost: DecisionCost, fused: bool,
                 n_steps: int, n_batch: int, n_classes: int,
-                tcfg: TelemetryConfig | None = None, step0: int = 0):
+                tcfg: TelemetryConfig | None = None, step0: int = 0,
+                slot_axis: str | None = None, mesh=None):
     """jit (params, head, logit_bias, worlds, fleet0, maps0, bind)
            -> (fleet, maps, logs [n_steps, n_batch] pytree).
 
@@ -89,6 +90,14 @@ def _episode_fn(wcfg: WorldConfig, ucfg: UavConfig, pol: MissionPolicy,
     a segmented mission draws the same GRNG sample streams a
     single-dispatch mission would.  ``step0=0`` with ``n_steps`` equal
     to the mission length is exactly the pre-lifetime episode.
+
+    ``slot_axis``/``mesh``: shard the fleet×episodes batch axis over a
+    device mesh — the decision rounds run through the shard_map-native
+    fused kernel (kernels/decision_stats_sharded), read-noise streams
+    keyed on GLOBAL lane ids so sharded missions replay the
+    single-device sample streams bit for bit.  ``n_batch`` must divide
+    evenly; ``_lm_token_fn`` falls back to the unsharded kernel
+    otherwise.
 
     With ``tcfg`` set (obs/telemetry), the episode takes a telemetry
     pytree as an eighth argument and returns it as a fourth output: it
@@ -107,10 +116,11 @@ def _episode_fn(wcfg: WorldConfig, ucfg: UavConfig, pol: MissionPolicy,
                     if pol.mode == "bayes_adaptive" else (tri.r_max,))
         decide_fn = _lm_token_fn(hcfg, tri, pol.mode == "bayes_adaptive",
                                  schedule, fused, n_batch, n_classes,
-                                 tcfg)
+                                 tcfg, slot_axis=slot_axis, mesh=mesh)
         if pol.flag_action == "orbit":
             orbit_fn = _lm_token_fn(hcfg, tri, False, (tri.r_max,),
-                                    fused, n_batch, n_classes, tcfg)
+                                    fused, n_batch, n_classes, tcfg,
+                                    slot_axis=slot_axis, mesh=mesh)
     r_max = jnp.uint32(tri.r_max)
     lane = jnp.arange(n_batch, dtype=jnp.uint32)
 
@@ -372,7 +382,8 @@ def operating_point_bias(params, cfg, head, chip,
 
 def _fly_group_lifetime(wcfg, ucfg, pol, cfg, chip, cost, fused,
                         n_steps, n_episodes, tcfg, params, calibrated,
-                        worlds, fleet0_g, maps0, bind_g, rows, lifetime):
+                        worlds, fleet0_g, maps0, bind_g, rows, lifetime,
+                        slot_axis=None, mesh=None):
     """One AGED die group's mission: segmented rollout with in-flight
     drift watch and (optionally) recalibrate-and-redeploy.
 
@@ -415,7 +426,8 @@ def _fly_group_lifetime(wcfg, ucfg, pol, cfg, chip, cost, fused,
             # the stale view keeps it and only a heal re-derives it.
             head, hcfg = ctl.advance(lifetime.age_rate * step0)
         fn = _episode_fn(wcfg, ucfg, pol, cfg, hcfg, chip, cost, fused,
-                         ns, len(rows), cfg.n_classes, tcfg, step0)
+                         ns, len(rows), cfg.n_classes, tcfg, step0,
+                         slot_axis, mesh)
         fleet_c, maps_c, logs_c, telem_c = fn(
             params, head, jnp.asarray(bias), worlds, fleet_c, maps_c,
             bind_g, telem_c)
@@ -443,7 +455,8 @@ def fly_mission(wcfg: WorldConfig, ucfg: UavConfig, pol: MissionPolicy,
                 calibrated: bool = True, n_steps: int = 96,
                 n_episodes: int = 1, fused: bool = True,
                 telemetry: bool | TelemetryConfig = True,
-                lifetime=None) -> MissionResult:
+                lifetime=None, slot_axis: str | None = None,
+                mesh=None) -> MissionResult:
     """Run ``n_episodes`` independent missions for the whole fleet.
 
     ``lifetime`` (hw/redeploy.LifetimeConfig): age each CHIP-BOUND die
@@ -468,6 +481,12 @@ def fly_mission(wcfg: WorldConfig, ucfg: UavConfig, pol: MissionPolicy,
     status (obs/drift, z-tested against the group's calibration-time
     belief) land in ``MissionResult.telemetry`` without any extra host
     pull; False compiles the exact pre-telemetry episode.
+
+    ``slot_axis``/``mesh``: shard each die group's episodes×drones
+    batch over a device mesh axis (the same axis the serving engine
+    shards its slot dimension over) — shard_map-native decision rounds
+    with GLOBAL-lane read-noise keys keep sharded mission verdicts
+    bit-identical to the single-device rollout.
     """
     from repro.models.sar_cnn import SarCnnConfig, init_sar_cnn
     cfg = cfg or SarCnnConfig()
@@ -523,7 +542,8 @@ def fly_mission(wcfg: WorldConfig, ucfg: UavConfig, pol: MissionPolicy,
              advisories) = _fly_group_lifetime(
                 wcfg, ucfg, pol, cfg, chip, cost, fused, n_steps,
                 n_episodes, tcfg, params, calibrated, worlds,
-                sub(fleet0), maps0, sub(bind), rows, lifetime)
+                sub(fleet0), maps0, sub(bind), rows, lifetime,
+                slot_axis, mesh)
             host_syncs += n_syncs
             snap = telemetry_snapshot(telem_g, tcfg)
             gname = f"chip{chip.chip_id}_seed{chip.device_seed}"
@@ -560,7 +580,8 @@ def fly_mission(wcfg: WorldConfig, ucfg: UavConfig, pol: MissionPolicy,
         bias = operating_point_bias(params, cfg, head, chip) \
             if calibrated else np.zeros((cfg.n_classes,), np.float32)
         fn = _episode_fn(wcfg, ucfg, pol, cfg, hcfg, chip, cost, fused,
-                         n_steps, len(rows), cfg.n_classes, tcfg)
+                         n_steps, len(rows), cfg.n_classes, tcfg,
+                         slot_axis=slot_axis, mesh=mesh)
         if tcfg is None:
             fleet_g, maps_g, logs_g = fn(params, head, jnp.asarray(bias),
                                          worlds, sub(fleet0), maps0,

@@ -5,6 +5,9 @@ Modules:
   adaptive  incremental predictive stats + sequential escalation
   triage    the paper Fig. 1 accept / escalate / flag policy
   metrics   per-request latency, samples/decision, energy accounting
+  fleet     mesh-of-pools scale-out: one engine pool per device, a
+            least-loaded admission router with backpressure, and one
+            shard_map'd gang round dispatch per fleet tick
 
 The escalation math leans on the rank-16 structure of the shared
 selection lines (core/sampling.py): per-slot activation bases make
@@ -18,6 +21,7 @@ from repro.serving.adaptive import (escalation_schedule, finalize,
                                     update_stats_streamed)
 from repro.serving.engine import (LMServingEngine, Request,
                                   SarServingEngine)
+from repro.serving.fleet import SarServingFleet, make_pool_mesh
 from repro.serving.metrics import (DecisionCost, RequestRecord,
                                    ServingMetrics, decision_cost,
                                    decision_energy, decision_latency,
@@ -27,9 +31,10 @@ from repro.serving.triage import (ACCEPT, ESCALATE, FLAG, TriagePolicy,
 
 __all__ = [
     "ACCEPT", "DecisionCost", "ESCALATE", "FLAG", "LMServingEngine",
-    "Request", "RequestRecord", "SarServingEngine", "ServingMetrics",
-    "TriagePolicy", "decide", "decision_cost", "decision_energy",
-    "decision_latency", "energy_terms", "escalation_schedule", "finalize",
-    "fixed_r_decide", "init_stats", "request_energy", "stream_indices",
+    "Request", "RequestRecord", "SarServingEngine", "SarServingFleet",
+    "ServingMetrics", "TriagePolicy", "decide", "decision_cost",
+    "decision_energy", "decision_latency", "energy_terms",
+    "escalation_schedule", "finalize", "fixed_r_decide", "init_stats",
+    "make_pool_mesh", "request_energy", "stream_indices",
     "stream_selections", "update_stats", "update_stats_streamed",
 ]

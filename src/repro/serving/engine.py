@@ -187,9 +187,14 @@ def _sar_featurize_fn(cfg, hcfg: BayesHeadConfig, chip,
 def _one_round(pool, stats, base, active, *, hcfg: BayesHeadConfig,
                policy: TriagePolicy, adaptive_mode: bool, r_step: int,
                fused: bool, constrain, tcfg: TelemetryConfig | None = None,
-               telem=None):
+               telem=None, shard=None):
     """One escalation round: draw r_step per active slot, fold into the
     running stats (fused kernel or jnp), finalize, decide.
+
+    ``shard`` is an optional ``(mesh, axis_name)``: the fused kernel
+    then runs shard_map-native over the slot axis (its own Pallas grid
+    per device, slot-local stats, global-row hash keys — bit-identical
+    to the unsharded kernel).
 
     With ``tcfg``/``telem`` set, the round also folds the device-resident
     telemetry pytree (round counters + GRNG probe moments) — pure extra
@@ -200,7 +205,7 @@ def _one_round(pool, stats, base, active, *, hcfg: BayesHeadConfig,
     if fused:
         from repro.kernels.ops import decision_update
         stats = decision_update(stats, pool, sel, grng,
-                                sample_idx=idx, mask=active)
+                                sample_idx=idx, mask=active, shard=shard)
     else:
         samples = mix_samples(pool, sel, hcfg, sample_idx=idx)
         stats = adaptive.update_stats(stats, samples, mask=active)
@@ -216,32 +221,22 @@ def _one_round(pool, stats, base, active, *, hcfg: BayesHeadConfig,
     return stats, verdict, fin, telem
 
 
-@functools.lru_cache(maxsize=128)
-def _sar_round_fn(hcfg: BayesHeadConfig, policy: TriagePolicy,
-                  adaptive_mode: bool, r_step: int, fused: bool,
-                  slot_axis: str | None,
-                  tcfg: TelemetryConfig | None = None):
-    """jit (pool, stats, base, active) -> (stats, verdict, fin, rounds).
+def _build_multi_round(*, hcfg: BayesHeadConfig, policy: TriagePolicy,
+                       adaptive_mode: bool, r_step: int, fused: bool,
+                       constrain, tcfg: TelemetryConfig | None = None,
+                       shard=None):
+    """Un-jitted device-resident escalation loop — the shared core of
+    ``_sar_round_fn`` (per-engine dispatch) and the fleet gang round
+    (serving/fleet.py shard_maps it over the pool axis).
 
-    Device-resident escalation: a ``lax.while_loop`` keeps drawing
-    r_step-sample rounds for the active slots while EVERY one of them
-    is still in the sequential test's ambiguity band; it exits the
-    moment any slot's verdict leaves ESCALATE (that slot must retire —
-    a host decision) or the budget forces a decision.  ``rounds`` is
-    the number of rounds executed this dispatch (every active slot drew
-    ``r_step · rounds`` samples).
-
-    With ``tcfg`` set the signature becomes
-    (pool, stats, base, active, telem) -> (..., rounds, telem): the
-    telemetry pytree rides the while_loop carry and is donated back,
-    so enabling it changes neither dispatch count nor sync count.
-    Decisions are recorded once, after the loop: the loop only exits
-    when a verdict leaves ESCALATE (or the pool idles), so every
-    intermediate round is all-escalate by construction."""
-    prof.count_build("sar_round")
-    constrain = _constrainer(slot_axis)
+    Returns (pool, stats, base, active) -> (stats, verdict, fin, rounds)
+    — or the telemetry-carrying variant when ``tcfg`` is set (telem
+    rides the while_loop carry; decisions recorded once after the loop,
+    which only exits when a verdict leaves ESCALATE or the pool idles).
+    """
     kw = dict(hcfg=hcfg, policy=policy, adaptive_mode=adaptive_mode,
-              r_step=r_step, fused=fused, constrain=constrain)
+              r_step=r_step, fused=fused, constrain=constrain,
+              shard=shard)
 
     if tcfg is None:
         def multi_round(pool, stats, base, active):
@@ -261,7 +256,7 @@ def _sar_round_fn(hcfg: BayesHeadConfig, policy: TriagePolicy,
             return lax.while_loop(cond, body,
                                   (stats, verdict, fin, jnp.int32(1)))
 
-        return jax.jit(multi_round, donate_argnums=(1,))
+        return multi_round
 
     kw_t = dict(kw, tcfg=tcfg)
 
@@ -287,14 +282,59 @@ def _sar_round_fn(hcfg: BayesHeadConfig, policy: TriagePolicy,
         telem = count_dispatch(telem)
         return stats, verdict, fin, rounds, telem
 
-    return jax.jit(multi_round_t, donate_argnums=(1, 4))
+    return multi_round_t
+
+
+@functools.lru_cache(maxsize=128)
+def _sar_round_fn(hcfg: BayesHeadConfig, policy: TriagePolicy,
+                  adaptive_mode: bool, r_step: int, fused: bool,
+                  slot_axis: str | None,
+                  tcfg: TelemetryConfig | None = None,
+                  mesh=None):
+    """jit (pool, stats, base, active) -> (stats, verdict, fin, rounds).
+
+    Device-resident escalation: a ``lax.while_loop`` keeps drawing
+    r_step-sample rounds for the active slots while EVERY one of them
+    is still in the sequential test's ambiguity band; it exits the
+    moment any slot's verdict leaves ESCALATE (that slot must retire —
+    a host decision) or the budget forces a decision.  ``rounds`` is
+    the number of rounds executed this dispatch (every active slot drew
+    ``r_step · rounds`` samples).
+
+    With both ``slot_axis`` and ``mesh`` set (a hashable
+    jax.sharding.Mesh — engines capture the ambient one at
+    construction), the fused kernel inside every round runs
+    shard_map-native over the slot axis: one Pallas grid per device on
+    its local slots, slot-local statistics, no collectives in the
+    round's data path.  The only cross-shard coordination left is the
+    while_loop exit predicate (one bool per shard per round) — required
+    because retirement is a global host decision.  Without a mesh the
+    old behavior stands: XLA partitions the interpret-mode lowering
+    under ``with_sharding_constraint``.
+
+    With ``tcfg`` set the signature becomes
+    (pool, stats, base, active, telem) -> (..., rounds, telem): the
+    telemetry pytree rides the while_loop carry and is donated back,
+    so enabling it changes neither dispatch count nor sync count."""
+    prof.count_build("sar_round")
+    constrain = _constrainer(slot_axis)
+    shard = (mesh, slot_axis) if (mesh is not None
+                                  and slot_axis is not None) else None
+    fn = _build_multi_round(
+        hcfg=hcfg, policy=policy, adaptive_mode=adaptive_mode,
+        r_step=r_step, fused=fused, constrain=constrain, tcfg=tcfg,
+        shard=shard)
+    if tcfg is None:
+        return jax.jit(fn, donate_argnums=(1,))
+    return jax.jit(fn, donate_argnums=(1, 4))
 
 
 @functools.lru_cache(maxsize=128)
 def _lm_token_fn(hcfg: BayesHeadConfig, policy: TriagePolicy,
                  adaptive_mode: bool, schedule: tuple, fused: bool,
                  n_slots: int, n_classes: int,
-                 tcfg: TelemetryConfig | None = None):
+                 tcfg: TelemetryConfig | None = None,
+                 slot_axis: str | None = None, mesh=None):
     """jit (abasis, base, active) -> (verdict, fin, spent).
 
     One whole token decision on device: zeroed stats, then the full
@@ -303,6 +343,11 @@ def _lm_token_fn(hcfg: BayesHeadConfig, policy: TriagePolicy,
     active & undecided slots, exactly the old per-round host loop but
     in a single dispatch.
 
+    With ``slot_axis``+``mesh`` set (and ``n_slots`` divisible over the
+    axis) the fused kernel runs shard_map-native over the slot/batch
+    dimension — the mission rollout threads its fleet×episodes batch
+    axis here so die-group episodes shard like serving pools do.
+
     With ``tcfg`` set the signature becomes
     (abasis, base, active, telem) -> (..., spent, telem): telemetry
     rides the ``lax.cond`` state (it skips with the round), and every
@@ -310,6 +355,11 @@ def _lm_token_fn(hcfg: BayesHeadConfig, policy: TriagePolicy,
     a decision at r_max), so decisions are recorded once on ``active``."""
     prof.count_build("lm_token")
     grng = hcfg.grng
+    shard = None
+    if mesh is not None and slot_axis is not None:
+        size = dict(mesh.shape).get(slot_axis, 0)
+        if size > 0 and n_slots % size == 0:
+            shard = (mesh, slot_axis)
     identity = lambda st: st                                 # noqa: E731
 
     def token_decision(abasis, base, active, telem=None):
@@ -332,7 +382,8 @@ def _lm_token_fn(hcfg: BayesHeadConfig, policy: TriagePolicy,
                 if fused:
                     from repro.kernels.ops import decision_update
                     stats = decision_update(stats, abasis, sel, grng,
-                                            sample_idx=idx, mask=upd)
+                                            sample_idx=idx, mask=upd,
+                                            shard=shard)
                 else:
                     samples = mix_samples(abasis, sel, hcfg,
                                           sample_idx=idx)
@@ -487,6 +538,7 @@ class SarServingEngine(_EngineBase):
                  head: dict | None = None,
                  hcfg: BayesHeadConfig | None = None,
                  chip=None, slot_axis: str | None = None,
+                 mesh=None,
                  fused: bool = True,
                  telemetry: bool | TelemetryConfig = True,
                  tracer=None,
@@ -512,6 +564,13 @@ class SarServingEngine(_EngineBase):
         dimension over — construct and run the engine inside
         ``mesh_context`` and admission scatters stay slot-local while
         every pool round executes data-parallel over the slots.
+        ``mesh``: the jax.sharding.Mesh carrying ``slot_axis`` (default:
+        captured from the ambient mesh context at construction).  When
+        the mesh is known and ``n_slots`` divides over the axis, the
+        fused kernel runs shard_map-native per shard
+        (kernels/decision_kernel.decision_stats_sharded) instead of
+        relying on XLA to partition the interpret-mode lowering —
+        verdicts are bit-identical either way (tests/test_spmd.py).
 
         ``fused``: fold escalation rounds through the fused Pallas
         decision kernel (kernels/decision_kernel.py) instead of the
@@ -546,14 +605,35 @@ class SarServingEngine(_EngineBase):
                                             imgs)
         self._scatter = _scatter_fn(slot_axis)
         self._stats_reset = _stats_reset_fn()
+        self._mesh = self._resolve_mesh(mesh, slot_axis, n_slots)
         self._round = _sar_round_fn(self.hcfg, policy, adaptive_mode,
                                     self.r_step, fused, slot_axis,
-                                    self.tcfg)
+                                    self.tcfg, mesh=self._mesh)
         self._chip = chip
         self._slot_axis = slot_axis
         self.pool = None
         self.stats = None
         self.base = None
+
+    @staticmethod
+    def _resolve_mesh(mesh, slot_axis: str | None, n_slots: int):
+        """The mesh the shard_map-native round runs over, or None.
+
+        Captures the ambient mesh when ``slot_axis`` is set but no mesh
+        was passed; drops back to None (= XLA-partitioned lowering)
+        when the axis is absent from the mesh or n_slots doesn't divide
+        over it."""
+        if slot_axis is None:
+            return None
+        if mesh is None:
+            from repro.launch.mesh import abstract_mesh_or
+            mesh = abstract_mesh_or(None)
+        if mesh is None:
+            return None
+        size = dict(mesh.shape).get(slot_axis, 0)
+        if size <= 0 or n_slots % size:
+            return None
+        return mesh
 
     # -- lifetime -------------------------------------------------------
     def swap_head(self, head: dict, hcfg: BayesHeadConfig) -> None:
@@ -587,7 +667,8 @@ class SarServingEngine(_EngineBase):
                                             imgs)
         self._round = _sar_round_fn(hcfg, self.policy, self.adaptive_mode,
                                     self.r_step, self.fused,
-                                    self._slot_axis, self.tcfg)
+                                    self._slot_axis, self.tcfg,
+                                    mesh=self._mesh)
 
     # -- admission ------------------------------------------------------
     def _admit(self) -> None:
@@ -613,13 +694,42 @@ class SarServingEngine(_EngineBase):
                 self.slots[s].admit_s = now
                 self.base[s] = bases[j]
             idxj = jnp.asarray(idx)
-            if self.pool is None:
-                n_classes = rows["y_mu"].shape[-1]
-                self.pool = jax.tree.map(jnp.zeros_like, rows)
-                self.stats = adaptive.init_stats(self.n_slots, n_classes)
+            self.ensure_pool(like=rows)
             self.pool = self._scatter(self.pool, rows, idxj)
             self.stats = self._stats_reset(self.stats, idxj)
             self.metrics.mark(now)
+
+    def ensure_pool(self, like: dict | None = None) -> None:
+        """Materialize the (pool, stats) device state without waiting
+        for the first admission.  ``like`` is an activation-basis pytree
+        with leading dim ``n_slots`` (another engine's pool works) —
+        the fleet gang stacks every pool engine's state into one
+        dispatch, so an idle pool must still hold real zero buffers."""
+        if self.pool is not None:
+            return
+        if like is None:
+            raise ValueError("ensure_pool needs a template basis pytree")
+        self.pool = jax.tree.map(jnp.zeros_like, like)
+        self.stats = adaptive.init_stats(self.n_slots,
+                                         like["y_mu"].shape[-1])
+
+    def active_mask(self) -> np.ndarray:
+        """[n_slots] bool — which slots hold an in-flight request."""
+        return np.array([s.req is not None for s in self.slots])
+
+    def _retire_decided(self, active, verdict, fin, spent: int) -> int:
+        """Post-dispatch draining shared with the fleet: charge samples
+        to every active slot, retire those whose verdict left ESCALATE.
+        Returns the number retired."""
+        retired = 0
+        for i in np.nonzero(active)[0]:
+            self.slots[i].n_samples += spent
+            if verdict[i] != ESCALATE:
+                self.slots[i].n_decisions = 1
+                # n_samples already accumulated; fin["n"] agrees
+                self._retire(i, verdict[i], fin, extra_samples=0)
+                retired += 1
+        return retired
 
     # -- main loop ------------------------------------------------------
     def run(self, max_ticks: int = 100_000) -> dict:
@@ -630,9 +740,7 @@ class SarServingEngine(_EngineBase):
                 if not self.queue:
                     break
                 continue
-            active = np.zeros((self.n_slots,), bool)
-            for i, s in enumerate(self.slots):
-                active[i] = s.req is not None
+            active = self.active_mask()
             t_disp = self.tracer.now()
             with self.profiler.span("dispatch"):
                 if self.tcfg is None:
@@ -659,12 +767,7 @@ class SarServingEngine(_EngineBase):
                     rounds=int(rounds), n_active=int(active.sum()),
                     samples_per_slot=spent)
             with self.profiler.span("retirement"):
-                for i in np.nonzero(active)[0]:
-                    self.slots[i].n_samples += spent
-                    if verdict[i] != ESCALATE:
-                        self.slots[i].n_decisions = 1
-                        # n_samples already accumulated; fin["n"] agrees
-                        self._retire(i, verdict[i], fin, extra_samples=0)
+                self._retire_decided(active, verdict, fin, spent)
         if self.tcfg is not None:
             self.metrics.attach_telemetry(self.telemetry_snapshot())
         self._attach_perf()

@@ -1,0 +1,148 @@
+"""Mesh-of-pools fleet tests that run on ONE device (the sequential
+dispatch fallback): router determinism, admission backpressure, and
+fleet-level energy/telemetry reconciliation.
+
+The multi-device gates — gang-dispatch bit-identity vs standalone
+pools and the shard_map-native kernel equivalence — live in
+tests/test_spmd.py (fresh subprocess with forced host devices)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.launch.serve import make_sar_stream, sar_layer_shapes
+from repro.models.sar_cnn import SarCnnConfig, init_sar_cnn
+from repro.serving import SarServingEngine, TriagePolicy
+from repro.serving.fleet import SarServingFleet
+from repro.serving.metrics import request_energy
+
+CFG = SarCnnConfig()
+POLICY = TriagePolicy(conf_threshold=0.6, mi_threshold=0.05,
+                      r_min=4, r_max=12)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_sar_cnn(jax.random.PRNGKey(3), CFG)
+
+
+def _verdicts(metrics_records):
+    return {r.rid: (int(r.prediction), r.verdict, int(r.n_samples),
+                    float(r.confidence), float(r.mutual_information))
+            for r in metrics_records}
+
+
+def test_single_pool_fleet_matches_standalone_engine(params):
+    """A 1-pool fleet is the engine plus a trivial router — verdicts,
+    sample counts and confidences must be bit-for-bit identical."""
+    eng = SarServingEngine(params, CFG, n_slots=8, policy=POLICY,
+                           adaptive_mode=True)
+    for r in make_sar_stream(20, corrupt_frac=0.25, batch=8):
+        eng.submit(r)
+    eng.run()
+    ref = _verdicts(eng.metrics.records)
+
+    fleet = SarServingFleet(params, CFG, n_pools=1, slots_per_pool=8,
+                            policy=POLICY, adaptive_mode=True)
+    for r in make_sar_stream(20, corrupt_frac=0.25, batch=8):
+        fleet.submit(r)
+    out = fleet.run()
+    got = _verdicts(fleet.engines[0].metrics.records)
+
+    assert set(ref) == set(got) == set(range(20))
+    for rid in ref:
+        assert ref[rid] == got[rid], (rid, ref[rid], got[rid])
+    assert out["gang"] is False
+    assert out["routed_per_pool"] == [20]
+
+
+def test_router_is_consistent_least_loaded(params):
+    """Same submission sequence → same routes, and the router balances:
+    with equal pools the split is even."""
+    outs = []
+    for _ in range(2):
+        fleet = SarServingFleet(params, CFG, n_pools=2, slots_per_pool=4,
+                                policy=POLICY)
+        for r in make_sar_stream(16, batch=8):
+            fleet.submit(r)
+        fleet.run()
+        outs.append(dict(fleet.routes))
+    assert outs[0] == outs[1]
+    counts = [sum(1 for p in outs[0].values() if p == q) for q in (0, 1)]
+    assert counts == [8, 8]
+
+
+def test_router_backpressure_skips_saturated_pool(params):
+    """ISSUE satellite: a pool with a full admission queue must receive
+    NOTHING (backpressure), traffic goes to pools with headroom, and
+    when every pool is saturated the remainder holds in the fleet
+    backlog — then drains to completion once capacity frees."""
+    fleet = SarServingFleet(params, CFG, n_pools=2, slots_per_pool=4,
+                            policy=POLICY, queue_cap=2)
+    stream = make_sar_stream(10, batch=8)
+    # saturate pool 0's admission queue out-of-band (as if earlier
+    # traffic filled it): queue length == queue_cap
+    for r in stream[:2]:
+        fleet.engines[0].queue.append(r)
+    for r in stream[2:]:
+        fleet.submit(r)
+    fleet._route()
+    # pool 0 saturated: none of the new requests may land there
+    assert len(fleet.engines[0].queue) == 2
+    assert all(p == 1 for p in fleet.routes.values())
+    # pool 1 absorbed up to its cap; the rest held in the fleet backlog
+    assert len(fleet.engines[1].queue) == 2
+    assert len(fleet.backlog) == 6
+    assert fleet.backlog_peak >= 6
+
+    out = fleet.run()
+    # backpressure is flow control, not loss: every request retires
+    assert out["requests"] == 10
+    assert out["decisions"] == 10
+    assert len(fleet.backlog) == 0
+    assert all(not e.queue for e in fleet.engines)
+    # once pool 0 drained its queue, later backlog items reached it
+    assert sum(1 for p in fleet.routes.values() if p == 0) > 0
+
+
+def test_fleet_energy_reconciles_to_per_request_sum(params):
+    """Σ_pools Σ_requests request_energy ≡ fleet ``energy_total_J`` —
+    the fleet summary is an exact sum of pool sums, which are exact
+    sums of per-record energies (no double counting, nothing dropped)."""
+    layers = sar_layer_shapes(CFG)
+    fleet = SarServingFleet(params, CFG, n_pools=2, slots_per_pool=8,
+                            policy=POLICY, layers=layers)
+    for r in make_sar_stream(24, corrupt_frac=0.25, batch=8):
+        fleet.submit(r)
+    out = fleet.run()
+    per_record = sum(request_energy(r, layers)
+                     for eng in fleet.engines
+                     for r in eng.metrics.records)
+    per_pool = sum(e.metrics.summary()["energy_total_J"]
+                   for e in fleet.engines)
+    assert out["energy_total_J"] == pytest.approx(per_record, rel=1e-9)
+    assert out["energy_total_J"] == pytest.approx(per_pool, rel=1e-12)
+    # per-pool breakdown rides in the summary and reconciles too
+    assert sum(p["energy_total_J"] for p in out["pools"]) == \
+        pytest.approx(out["energy_total_J"], rel=1e-12)
+
+
+def test_fleet_telemetry_merges_without_double_counting(params):
+    """Each request's device-telemetry counters live in exactly one
+    pool's snapshot; the merged fleet snapshot must equal the sums."""
+    fleet = SarServingFleet(params, CFG, n_pools=2, slots_per_pool=8,
+                            policy=POLICY, telemetry=True)
+    for r in make_sar_stream(24, corrupt_frac=0.25, batch=8):
+        fleet.submit(r)
+    out = fleet.run()
+    snaps = [e.metrics.telemetry for e in fleet.engines]
+    assert all(s is not None for s in snaps)
+    merged = out["telemetry"]
+    for key in ("rounds", "dispatches", "samples", "decisions"):
+        assert merged[key] == sum(s[key] for s in snaps), key
+    # decisions counted on-device must equal the host-side retirements
+    assert merged["decisions"] == out["decisions"] == 24
+    # sample spend also reconciles with the host-side mean
+    host_samples = sum(r.n_samples for e in fleet.engines
+                       for r in e.metrics.records)
+    assert merged["samples"] == host_samples

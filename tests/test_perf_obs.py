@@ -213,6 +213,24 @@ def test_regress_deterministic_band_is_tight():
         ["serving.adaptive.host_syncs_per_decision"]
 
 
+def test_regress_floor_band_is_absolute():
+    """FLOOR_BANDS gate on the committed constant, not the baseline
+    value: a weak committed baseline must not weaken the gate, and a
+    strong baseline must not tighten it into a wall-clock-style ratio."""
+    base = {"fleet.scaling_efficiency_4pools": 2.0,
+            "fleet.speedup_4pools": 8.0}
+    # above the floors but far below baseline: still a PASS
+    cur = {"fleet.scaling_efficiency_4pools": 0.75,
+           "fleet.speedup_4pools": 3.5}
+    assert regress.compare(cur, base, wall_ratio=1.0) == []
+    # below a floor: FAIL even if the baseline were weaker than the floor
+    cur["fleet.speedup_4pools"] = 2.9
+    fails = regress.compare(cur, {**base, "fleet.speedup_4pools": 2.5},
+                            wall_ratio=100.0)
+    assert [f["metric"] for f in fails] == ["fleet.speedup_4pools"]
+    assert fails[0]["kind"] == "floor" and fails[0]["limit"] == 3.0
+
+
 def test_regress_current_metrics_extraction(tmp_path):
     serving = tmp_path / "s.json"
     kernels = tmp_path / "k.json"
@@ -242,10 +260,29 @@ def test_regress_current_metrics_extraction(tmp_path):
     assert cur["lifetime.static.healed_clean_acc_dev"] == 0.01
     assert cur["lifetime.gates_all_pass"] == 1.0
     assert "serving.adaptive.energy_total_J" not in cur   # not gated
+    # fleet snapshot (BENCH_fleet.json) flattens per-pool structural
+    # metrics plus the floor-gated scaling quantities
+    fleet = tmp_path / "f.json"
+    fleet.write_text(json.dumps({
+        "pools": {"1": {"decisions_per_s_warm": 10.0,
+                        "decisions_per_s_mesh": 11.0,
+                        "host_syncs_per_decision": 0.03,
+                        "per_pool_syncs_per_decision": 0.03},
+                  "4": {"decisions_per_s_warm": 30.0,
+                        "decisions_per_s_mesh": 44.0,
+                        "host_syncs_per_decision": 0.01,
+                        "per_pool_syncs_per_decision": 0.04}},
+        "speedup_4pools": 4.0, "scaling_efficiency_4pools": 1.0}))
+    cur = regress.current_metrics(serving, kernels, lifetime, fleet)
+    assert cur["fleet.pools4.decisions_per_s_mesh"] == 44.0
+    assert cur["fleet.pools1.per_pool_syncs_per_decision"] == 0.03
+    assert cur["fleet.speedup_4pools"] == 4.0
+    assert cur["fleet.scaling_efficiency_4pools"] == 1.0
     # no snapshots at all -> empty (regress exits 2 in main)
     assert regress.current_metrics(tmp_path / "a.json",
                                    tmp_path / "b.json",
-                                   tmp_path / "c.json") == {}
+                                   tmp_path / "c.json",
+                                   tmp_path / "d.json") == {}
 
 
 def test_committed_baseline_gates_clean(tmp_path):

@@ -140,6 +140,116 @@ print("OK")
 """, devices=2)
 
 
+def test_shard_map_fused_kernel_bit_identical():
+    """ISSUE gate (shard_map-native decision kernel): on a fixed
+    192-request SARD stream the sharded fused engine must produce
+    verdicts BIT-FOR-BIT identical to the single-device fused engine
+    (confidence/MI floats included — the hash3 read-noise/GRNG streams
+    are keyed on global sample index, so shard-local execution draws
+    the same noise), and verdict-identical to the materializing jnp
+    path.  Ideal die AND a severity-2.5 chip instance (the chip path
+    exercises the global-row ``rows`` operand of
+    kernels.decision_kernel.decision_stats_sharded).  Host-sync counts
+    and the compiled round's largest live intermediate must not grow."""
+    run_spmd("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.launch.hlo_analysis import largest_intermediate_bytes
+from repro.launch.mesh import make_mesh_compat, mesh_context
+from repro.launch.serve import make_sar_stream
+from repro.models.sar_cnn import SarCnnConfig, init_sar_cnn
+from repro.serving import SarServingEngine, TriagePolicy
+from repro.serving import adaptive as ad
+
+cfg = SarCnnConfig()
+params = init_sar_cnn(jax.random.PRNGKey(3), cfg)
+policy = TriagePolicy(conf_threshold=0.7, mi_threshold=0.05,
+                      r_min=4, r_max=20)
+
+def chip_head():
+    from repro.core.bayes_layer import sigma_of
+    from repro.core.sampling import BayesHeadConfig
+    from repro.hw import VariationSpec, prepare_instance_head, \\
+        sample_instances
+    chip = sample_instances(0, 1, VariationSpec().scaled(2.5))[0]
+    base = BayesHeadConfig(num_samples=policy.r_max, mode="rank16",
+                           grng=cfg.grng, compute_dtype=jnp.float32,
+                           hoist_basis=True)
+    head, hcfg = prepare_instance_head(
+        params["head"]["mu"], sigma_of(params["head"]), base, chip,
+        calibrated=True)
+    return dict(chip=chip, head=head, hcfg=hcfg)
+
+def run(slot_axis, mesh, fused, extra):
+    eng = SarServingEngine(params, cfg, n_slots=32, policy=policy,
+                           adaptive_mode=True, slot_axis=slot_axis,
+                           mesh=mesh, fused=fused, telemetry=False,
+                           **extra)
+    for r in make_sar_stream(192, corrupt_frac=0.25):
+        eng.submit(r)
+    eng.run()
+    recs = {r.rid: (int(r.prediction), r.verdict, int(r.n_samples),
+                    float(r.confidence), float(r.mutual_information))
+            for r in eng.metrics.records}
+    return recs, eng
+
+def round_peak(eng):
+    b, n = 32, cfg.n_classes
+    pool = jax.tree.map(lambda x: jnp.zeros_like(x), eng.pool)
+    txt = eng._round.lower(pool, ad.init_stats(b, n),
+                           jnp.zeros((b,), jnp.uint32),
+                           jnp.ones((b,), bool)).compile().as_text()
+    return largest_intermediate_bytes(txt)
+
+mesh = make_mesh_compat((2, 1), ("data", "model"))
+for tag, extra in (("ideal", {}), ("chip2.5", chip_head())):
+    ref, eng_ref = run(None, None, True, extra)
+    jnp_ref, _ = run(None, None, False, extra)
+    with mesh_context(mesh):
+        got, eng_sh = run("data", mesh, True, extra)
+    assert eng_sh._mesh is not None, tag   # shard_map-native path taken
+    assert set(ref) == set(got) == set(range(192)), tag
+    for rid in ref:
+        assert ref[rid] == got[rid], (tag, rid, ref[rid], got[rid])
+        assert ref[rid][:3] == jnp_ref[rid][:3], (tag, rid)
+    assert eng_ref.host_syncs == eng_sh.host_syncs, (
+        tag, eng_ref.host_syncs, eng_sh.host_syncs)
+    peak_ref = round_peak(eng_ref)
+    with mesh_context(mesh):
+        peak_sh = round_peak(eng_sh)
+    assert peak_sh <= peak_ref * 1.01, (tag, peak_sh, peak_ref)
+    print(tag, "OK", eng_ref.host_syncs, peak_ref, peak_sh)
+print("OK")
+""", devices=2)
+
+
+def test_fleet_gang_matches_standalone_pools():
+    """ISSUE gate (mesh-of-pools fleet): the ONE-gang-dispatch-per-tick
+    fleet over a 4-device ("pool",) mesh must produce bit-for-bit the
+    verdicts of the sequential fallback — which dispatches each pool
+    through its OWN engine round, i.e. standalone pools fed the same
+    admission sequences (the router is deterministic)."""
+    run_spmd("""
+import jax
+from repro.launch.serve import serve_sar_fleet
+from repro.models.sar_cnn import SarCnnConfig, init_sar_cnn
+
+cfg = SarCnnConfig()
+params = init_sar_cnn(jax.random.PRNGKey(3), cfg)
+kw = dict(n_requests=256, n_pools=4, slots_per_pool=16,
+          corrupt_frac=0.25, params=params, cfg=cfg)
+a = serve_sar_fleet(gang=True, **kw)
+b = serve_sar_fleet(gang=False, **kw)
+assert a["gang"] is True and b["gang"] is False
+assert a["decisions"] == b["decisions"] == 256
+assert a["routed_per_pool"] == b["routed_per_pool"]
+assert a["verdicts"] == b["verdicts"]   # bitwise: floats + pool ids
+# the gang folds P pools into one sync per tick: strictly fewer host
+# syncs than one-dispatch-per-pool, at the same decision count
+assert a["host_syncs"] < b["host_syncs"]
+print("OK")
+""", devices=8)
+
+
 def test_microbatched_step_matches_full_batch():
     run_spmd("""
 import jax, jax.numpy as jnp, numpy as np

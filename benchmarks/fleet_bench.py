@@ -115,6 +115,20 @@ def _mesh_time_s(tick_log: list[dict], a: float, b: float) -> float:
     return sum(a + b * max(t["trips"]) for t in tick_log)
 
 
+def _persist_ticks(n_pools: int, tick_log: list[dict]) -> None:
+    """Raw per-tick records -> artifacts/fleet/ticks.jsonl (one line
+    per tick, tagged with the sweep point) so straggler analysis can
+    rerun offline without redoing the sweep."""
+    d = Path(__file__).parent.parent / "artifacts" / "fleet"
+    d.mkdir(parents=True, exist_ok=True)
+    mode = "w" if n_pools == POOLS[0] else "a"
+    with open(d / "ticks.jsonl", mode) as f:
+        for i, t in enumerate(tick_log):
+            f.write(json.dumps({"pools": n_pools, "tick": i,
+                                "wall_s": t["wall_s"],
+                                "trips": list(t["trips"])}) + "\n")
+
+
 def _measure(params, cfg, n_pools: int) -> dict:
     from repro.launch.serve import serve_sar_fleet
     kw = dict(n_requests=REQS_PER_POOL * n_pools, n_pools=n_pools,
@@ -175,6 +189,15 @@ def _report() -> dict:
         rec["scaling_efficiency"] = rec["speedup"] / p
         rec["speedup_wall"] = rec["decisions_per_s_warm"] / base_wall
         rec["scaling_efficiency_wall"] = rec["speedup_wall"] / p
+        # straggler share: fraction of the mesh critical path that is
+        # waiting on the slowest pool vs the mean — 0 when every pool
+        # runs the same trip count every tick
+        mean_trips = sum(sum(t["trips"]) / len(t["trips"])
+                         for t in rec["tick_log"])
+        max_trips = sum(float(max(t["trips"])) for t in rec["tick_log"])
+        rec["straggler_share"] = (1.0 - mean_trips / max_trips
+                                  if max_trips > 0 else 0.0)
+        _persist_ticks(p, rec["tick_log"])
         del rec["tick_log"]                 # raw log stays out of JSON
     return {
         "workload": {
@@ -198,6 +221,7 @@ def _report() -> dict:
         "scaling_efficiency_4pools": sweep["4"]["scaling_efficiency"],
         "speedup_8pools": sweep["8"]["speedup"],
         "scaling_efficiency_8pools": sweep["8"]["scaling_efficiency"],
+        "straggler_share_8pools": sweep["8"]["straggler_share"],
     }
 
 

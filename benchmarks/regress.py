@@ -48,10 +48,13 @@ from typing import Any
 BASELINE_PATH = Path(__file__).resolve().parent / "baseline.json"
 FLEET_BASELINE_PATH = Path(__file__).resolve().parent \
     / "baseline_fleet.json"
+SLO_BASELINE_PATH = Path(__file__).resolve().parent \
+    / "baseline_slo.json"
 SERVING_JSON = Path("BENCH_serving.json")
 KERNELS_JSON = Path("BENCH_kernels.json")
 LIFETIME_JSON = Path("BENCH_lifetime.json")
 FLEET_JSON = Path("BENCH_fleet.json")
+SLO_JSON = Path("BENCH_slo.json")
 
 # metric-name suffix -> (direction, band).  "lower": regression when
 # current > baseline * band; "higher": regression when
@@ -73,6 +76,11 @@ DETERMINISTIC_BANDS: dict[str, tuple[str, float]] = {
     # fleet (BENCH_fleet.json): one gang sync serves P pools, so the
     # per-POOL structural sync cost must hold the single-engine budget
     "per_pool_syncs_per_decision": ("lower", 1.25),
+    # SLO bench (BENCH_slo.json): the tracker is pure host bookkeeping
+    # around the existing sync points, so syncs/decision under traffic
+    # must hold the same structural budget (wide band: open-loop runs
+    # add idle admission ticks, never per-round syncs).
+    "slo_syncs_per_decision": ("lower", 2.0),
 }
 # absolute floors, independent of the baseline VALUE: regression when
 # current < floor.  These are the ROADMAP item-1 fleet acceptance
@@ -88,6 +96,10 @@ ABS_BANDS: dict[str, float] = {
     "gates_all_pass": 0.0,
     "false_advisories": 0.0,
     "healed_clean_acc_dev": 0.01,
+    # SLO bench: queue-wait share at nominal offered load is a
+    # structural property of the arrival schedule vs capacity, but
+    # scheduling jitter on shared runners moves it — wide absolute band
+    "queue_wait_share": 0.45,
 }
 # wall-clock metrics: band comes from --wall-ratio
 WALL_LOWER_SUFFIXES = ("us_per_call_warm",)
@@ -108,6 +120,7 @@ def current_metrics(serving_path: Path | str = SERVING_JSON,
                     kernels_path: Path | str = KERNELS_JSON,
                     lifetime_path: Path | str = LIFETIME_JSON,
                     fleet_path: Path | str = FLEET_JSON,
+                    slo_path: Path | str = SLO_JSON,
                     ) -> dict[str, float]:
     """Flat {metric_name: value} from the BENCH_*.json snapshots.
 
@@ -170,6 +183,20 @@ def current_metrics(serving_path: Path | str = SERVING_JSON,
             v = doc.get(key)
             if isinstance(v, (int, float)) and v == v:
                 out[f"fleet.{key}"] = float(v)
+    slo_path = Path(slo_path)
+    if slo_path.exists():
+        doc = json.loads(slo_path.read_text())
+        gates = doc.get("gates", {})
+        if gates:
+            out["slo.gates_all_pass"] = float(
+                all(bool(v) for v in gates.values()))
+        rec = doc.get("configs", {}).get("poisson_engine", {})
+        v = rec.get("queue_wait_share")
+        if isinstance(v, (int, float)) and v == v:
+            out["slo.poisson_engine.queue_wait_share"] = float(v)
+        v = rec.get("host_syncs_per_decision")
+        if isinstance(v, (int, float)) and v == v:
+            out["slo.poisson_engine.slo_syncs_per_decision"] = float(v)
     return out
 
 
@@ -249,6 +276,7 @@ def main(argv=None) -> int:
     ap.add_argument("--kernels", default=str(KERNELS_JSON))
     ap.add_argument("--lifetime", default=str(LIFETIME_JSON))
     ap.add_argument("--fleet", default=str(FLEET_JSON))
+    ap.add_argument("--slo", default=str(SLO_JSON))
     ap.add_argument("--wall-ratio", type=float, default=1.5,
                     help="tolerance ratio for wall-clock metrics "
                          "(CI interpret-mode runs pass a generous "
@@ -260,7 +288,7 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     current = current_metrics(args.serving, args.kernels,
-                              args.lifetime, args.fleet)
+                              args.lifetime, args.fleet, args.slo)
     if not current:
         print("regress: no BENCH_*.json snapshots found — run "
               "benchmarks first", file=sys.stderr)

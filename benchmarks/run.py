@@ -48,6 +48,7 @@ MODULES = [
     "sec5a_energy",
     "kernel_bench",
     "serving_bench",
+    "slo_bench",
     "fleet_bench",
     "hw_variation",
     "fig16_uq",
@@ -57,8 +58,8 @@ MODULES = [
     "roofline",
 ]
 FAST_SKIP = {"fig16_uq", "table2_corr", "serving_bench",
-             "fleet_bench", "hw_variation", "mission_bench",
-             "lifetime_bench"}  # SAR training
+             "slo_bench", "fleet_bench", "hw_variation",
+             "mission_bench", "lifetime_bench"}  # SAR training
 
 
 def main() -> None:

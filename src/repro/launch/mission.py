@@ -170,6 +170,19 @@ def main() -> None:
                      z_std=round(drift["z_std"], 2),
                      decisions=t["telemetry"]["decisions"])
 
+    # Unified alert bus (obs/alerts): fold the per-die-group drift
+    # statuses and lifetime heal events into one typed advisory stream
+    # — post-hoc over the finished summary, so the mission hot path is
+    # untouched.
+    from repro.obs.alerts import AlertBus
+    bus = AlertBus()
+    for group, t in (res.telemetry or {}).items():
+        bus.observe_drift(t.get("drift"), source=f"mission/{group}")
+    for group, lt in (res.lifetime or {}).items():
+        for ev in lt.get("events", []):
+            bus.observe_heal(ev, source=f"mission/{group}")
+    alerts = bus.to_json() if bus.advisories else None
+
     if args.trace:
         import json
         import os
@@ -182,7 +195,7 @@ def main() -> None:
         log.info("trace written", path=args.trace)
     if args.metrics_out:
         from repro.obs.registry import mission_registry
-        reg = mission_registry(s, telemetry=res.telemetry,
+        reg = mission_registry(s, telemetry=res.telemetry, alerts=alerts,
                                policy=args.policy, planner=args.planner)
         prom, js = reg.write(args.metrics_out)
         log.info("metrics written", prom=prom, json=js)

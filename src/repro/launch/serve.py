@@ -50,6 +50,32 @@ from repro.serving import (LMServingEngine, Request, SarServingEngine,
 log = get_logger("serve")
 
 
+def _open_loop_offsets(arrival, n: int, seed: int):
+    """Resolve an ``--arrival`` spec (string or ArrivalSpec) into the
+    parsed spec + its [n] seeded offsets."""
+    from repro.serving.load import ArrivalSpec
+    spec = (ArrivalSpec.parse(arrival) if isinstance(arrival, str)
+            else arrival)
+    return spec, spec.offsets(n, seed=seed)
+
+
+def collect_alerts(out: dict, source: str):
+    """Run the unified alert bus over a finished serve summary: drift
+    advisories, lifetime heal events, SLO burn breaches, and fleet
+    backpressure saturation become one typed advisory stream (logged as
+    they are emitted; attached as ``out["alerts"]`` when non-empty)."""
+    from repro.obs.alerts import AlertBus
+    bus = AlertBus()
+    bus.observe_drift(out.get("drift"), source=source)
+    for ev in (out.get("lifetime") or {}).get("events", []):
+        bus.observe_heal(ev, source=source)
+    bus.observe_slo(out.get("slo"), source=source)
+    bus.observe_backpressure(out.get("slo"), source=source)
+    if bus.advisories:
+        out["alerts"] = bus.to_json()
+    return bus
+
+
 def lm_layer_shapes(cfg) -> list:
     """Analytic energy layers: d_model-square trunk approximation + the
     Bayesian vocab head (the R-sampled part)."""
@@ -179,9 +205,16 @@ def serve_sar(*, n_requests: int = 128, n_slots: int = 32,
               chip_instance=None, calibrated: bool = True,
               slot_axis: str | None = None, fused: bool = True,
               telemetry: bool | TelemetryConfig = True,
-              tracer=None, profiler=True,
-              cost_records: bool = False) -> dict:
+              tracer=None, profiler=True, slo=(),
+              arrival=None, cost_records: bool = False) -> dict:
     """SAR image-stream serving. Untrained params unless provided.
+
+    ``slo``: SLO spec strings (``"0.25:p99"``) the time-to-verdict
+    tracker evaluates — attainment/burn-rate land in ``out["slo"]``.
+    ``arrival``: an ``--arrival`` spec (``"poisson:8"`` etc.) — the
+    stream is then driven OPEN-LOOP by serving/load.py on a seeded
+    arrival schedule instead of being enqueued all at once, so queue
+    wait and time-to-verdict measure a real traffic regime.
 
     ``chip_instance``: a hw.ChipInstance (or an int seed — one chip is
     sampled from the default VariationSpec) — the engine then serves
@@ -225,19 +258,32 @@ def serve_sar(*, n_requests: int = 128, n_slots: int = 32,
         }
     metrics = ServingMetrics(layers=layers, extra=extra,
                              tile_program=program)
+    from repro.obs.slo import SloTracker
+    slo_tracker = SloTracker(slos=tuple(slo)) if slo else True
     engine = SarServingEngine(params, cfg, n_slots=n_slots, policy=policy,
                               adaptive_mode=adaptive, metrics=metrics,
                               head=head, hcfg=hcfg, chip=chip_instance,
                               slot_axis=slot_axis, fused=fused,
                               telemetry=telemetry, tracer=tracer,
-                              profiler=profiler)
-    for r in make_sar_stream(n_requests, corrupt_frac=corrupt_frac,
-                             corruption=corruption,
-                             image_size=cfg.image_size):
-        engine.submit(r)
+                              profiler=profiler, slo=slo_tracker)
+    reqs = make_sar_stream(n_requests, corrupt_frac=corrupt_frac,
+                           corruption=corruption,
+                           image_size=cfg.image_size)
     t0 = time.perf_counter()
-    out = engine.run()
+    if arrival is not None:
+        from repro.serving.load import run_open_loop
+        spec, offsets = _open_loop_offsets(arrival, len(reqs), seed)
+        out = run_open_loop(engine, reqs, offsets)
+        out["arrival"] = spec.to_dict()
+    else:
+        for r in reqs:
+            engine.submit(r)
+        out = engine.run()
     out["wall_s"] = time.perf_counter() - t0
+    if slo:
+        # engine shares the caller-built tracker (so the SLO specs ride
+        # along) — attach its snapshot here
+        out["slo"] = slo_tracker.snapshot()
     out["host_syncs"] = engine.host_syncs
     out["host_syncs_per_decision"] = (engine.host_syncs
                                       / max(out["decisions"], 1))
@@ -262,6 +308,7 @@ def serve_sar(*, n_requests: int = 128, n_slots: int = 32,
         out["drift"] = drift_status(out["telemetry"], ref).to_dict()
         if out["drift"]["advisory"]:
             log.warning(out["drift"]["advisory"])
+    collect_alerts(out, "serve_sar")
     return out
 
 
@@ -274,8 +321,16 @@ def serve_sar_fleet(*, n_requests: int = 256, n_pools: int = 4,
                     fused: bool = True, gang: bool | None = None,
                     queue_cap: int | None = None,
                     telemetry: bool | TelemetryConfig = True,
-                    profiler=True) -> dict:
+                    tracer=None, profiler=True, slo=(),
+                    arrival=None) -> dict:
     """Mesh-of-pools SAR serving (serving/fleet.py).
+
+    ``tracer``: a shared obs.trace.Tracer — the fleet stitches router
+    tick spans (pid 0) and per-pool dispatch/slot tracks (pid p+1) into
+    ONE Chrome/Perfetto timeline, with flow arrows router → slot per
+    request.  ``slo``/``arrival``: as in :func:`serve_sar` (the SLO
+    tracker is fleet-wide: one snapshot covering router latency, queue
+    depths, and backpressure).
 
     ``n_pools`` complete serving pools tiled over a 1-D ``("pool",)``
     device mesh behind a least-loaded admission router; each fleet tick
@@ -313,17 +368,26 @@ def serve_sar_fleet(*, n_requests: int = 256, n_pools: int = 4,
         head, hcfg = prepare_instance_head(
             params["head"]["mu"], sigma_of(params["head"]), base_hcfg,
             chip_instance, calibrated=calibrated)
+    from repro.obs.slo import SloTracker
+    slo_tracker = SloTracker(slos=tuple(slo)) if slo else True
     fleet = SarServingFleet(
         params, cfg, n_pools=n_pools, slots_per_pool=slots_per_pool,
         policy=policy, adaptive_mode=adaptive, head=head, hcfg=hcfg,
         chip=chip_instance, fused=fused, telemetry=telemetry,
         layers=layers, tile_program=program, queue_cap=queue_cap,
-        gang=gang, profiler=profiler)
-    for r in make_sar_stream(n_requests, corrupt_frac=corrupt_frac,
-                             corruption=corruption,
-                             image_size=cfg.image_size):
-        fleet.submit(r)
-    out = fleet.run()
+        gang=gang, tracer=tracer, profiler=profiler, slo=slo_tracker)
+    reqs = make_sar_stream(n_requests, corrupt_frac=corrupt_frac,
+                           corruption=corruption,
+                           image_size=cfg.image_size)
+    if arrival is not None:
+        from repro.serving.load import run_open_loop
+        spec, offsets = _open_loop_offsets(arrival, len(reqs), seed)
+        out = run_open_loop(fleet, reqs, offsets)
+        out["arrival"] = spec.to_dict()
+    else:
+        for r in reqs:
+            fleet.submit(r)
+        out = fleet.run()
     if chip_instance is not None:
         out["chip_id"] = chip_instance.chip_id
         out["chip_device_seed"] = chip_instance.device_seed
@@ -336,6 +400,7 @@ def serve_sar_fleet(*, n_requests: int = 256, n_pools: int = 4,
          "n_samples": r.n_samples}
         for eng in fleet.engines for r in eng.metrics.records]
     out["verdicts"].sort(key=lambda v: v["rid"])
+    collect_alerts(out, "serve_sar_fleet")
     return out
 
 
@@ -455,6 +520,7 @@ def serve_sar_lifetime(*, lifetime, chip_instance,
                            advisories=advisories,
                            age_rate=lifetime.age_rate,
                            auto_recalibrate=lifetime.auto_recalibrate)
+    collect_alerts(out, "serve_sar_lifetime")
     return out
 
 
@@ -520,7 +586,21 @@ def main() -> None:
                          "(compiles the exact pre-telemetry graph)")
     ap.add_argument("--trace", type=str, default=None, metavar="PATH",
                     help="write a Chrome/Perfetto trace JSON of the "
-                         "run's request spans to PATH")
+                         "run's request spans to PATH (with --pools: "
+                         "ONE stitched fleet timeline — router ticks, "
+                         "per-pool gang-dispatch tracks, and request "
+                         "flow arrows router -> pool -> slot)")
+    ap.add_argument("--arrival", type=str, default=None, metavar="SPEC",
+                    help="sar_cnn: drive serving OPEN-LOOP on a seeded "
+                         "arrival schedule instead of enqueueing "
+                         "everything up front — poisson:RATE, "
+                         "burst:RATE[:FACTOR], or ramp:LO:HI (req/s)")
+    ap.add_argument("--slo", action="append", default=None,
+                    metavar="TARGET:PCT[:BURN]",
+                    help="time-to-verdict SLO, e.g. 0.25:p99 — "
+                         "repeatable; attainment and error-budget burn "
+                         "rate land in the summary, breaches on the "
+                         "alert bus")
     ap.add_argument("--metrics-out", type=str, default=None,
                     metavar="PREFIX",
                     help="write PREFIX.prom (Prometheus text) and "
@@ -575,7 +655,8 @@ def main() -> None:
                     corrupt_frac=args.corrupt_frac,
                     corruption=args.corruption, chip_instance=chip,
                     calibrated=not args.uncalibrated, fused=args.fused,
-                    telemetry=args.telemetry)
+                    telemetry=args.telemetry, tracer=tracer,
+                    slo=tuple(args.slo or ()), arrival=args.arrival)
                 log.info("fleet", pools=out["n_pools"],
                          gang=out["gang"],
                          routed=out["routed_per_pool"],
@@ -610,6 +691,8 @@ def main() -> None:
                                 fused=args.fused,
                                 telemetry=args.telemetry,
                                 tracer=tracer,
+                                slo=tuple(args.slo or ()),
+                                arrival=args.arrival,
                                 cost_records=bool(args.profile))
         chip_note = ""
         if chip is not None and "tile_area_mm2" in out:
@@ -634,6 +717,18 @@ def main() -> None:
             log.info("drift", drifted=out["drift"]["drifted"],
                      z_mean=round(out["drift"]["z_mean"], 2),
                      z_std=round(out["drift"]["z_std"], 2))
+        if out.get("slo"):
+            snap = out["slo"]
+            log.info("slo", p50_s=round(snap["p50_s"], 4),
+                     p95_s=round(snap["p95_s"], 4),
+                     p99_s=round(snap["p99_s"], 4),
+                     queue_wait_share=round(
+                         snap.get("queue_wait_share", float("nan")), 3))
+            for s in snap.get("slos", []):
+                log.info("slo target", name=s["name"],
+                         attainment=round(s["attainment"], 4),
+                         burn_rate=round(s["burn_rate"], 2),
+                         breach=s["breach"])
     else:
         with trace_capture(args.profile):
             out = serve(args.arch, smoke=args.smoke,
@@ -668,6 +763,7 @@ def main() -> None:
             profile=out.get("stage_profile"),
             compile_counters=out.get("compile_counters"),
             compiled_costs=out.get("compiled_costs"),
+            slo=out.get("slo"), alerts=out.get("alerts"),
             arch=args.arch)
         prom, js = reg.write(args.metrics_out)
         log.info("metrics written", prom=prom, json=js)

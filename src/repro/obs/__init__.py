@@ -23,9 +23,18 @@ touching the device-resident fast path:
   drift      streaming conformance monitor: per-die z-scores of the
              served GRNG probe moments against the calibration-time
              Fig. 9 reference; emits recalibration advisories
+  slo        request-lifecycle SLO tracking: time-to-verdict /
+             queue-wait / service histograms folded at the existing
+             host-sync points, SLO attainment + error-budget burn
+             rate, and fleet queue/backpressure gauges
+  alerts     unified alert bus: drift advisories, lifetime heal
+             events, SLO burn breaches, and backpressure saturation
+             as one typed advisory stream (logged + exported)
   registry   Prometheus-text / JSON metric exporters
   log        structured logger (REPRO_LOG_LEVEL / REPRO_LOG_JSON)
 """
+
+from repro.obs.alerts import Advisory, AlertBus
 
 from repro.obs.drift import (DriftGate, DriftMonitor, DriftReference,
                              DriftStatus, drift_status)
@@ -35,7 +44,8 @@ from repro.obs.prof import (NULL_PROFILER, CostRegistry, StageProfiler,
                             compiled_cost, trace_capture,
                             xla_compile_events)
 from repro.obs.registry import (MetricsRegistry, mission_registry,
-                                serving_registry)
+                                quantile, serving_registry)
+from repro.obs.slo import NULL_SLO, SLO, SloTracker
 from repro.obs.telemetry import (TelemetryConfig, count_dispatch,
                                  init_telemetry, merge_snapshots,
                                  record_decisions, record_round,
@@ -43,12 +53,13 @@ from repro.obs.telemetry import (TelemetryConfig, count_dispatch,
 from repro.obs.trace import NULL_TRACER, Tracer, mission_trace
 
 __all__ = [
-    "CostRegistry", "DriftGate", "DriftMonitor", "DriftReference",
-    "DriftStatus", "MetricsRegistry", "NULL_PROFILER", "NULL_TRACER",
-    "StageProfiler", "TelemetryConfig", "Tracer", "builder_builds",
-    "compile_counters", "compiled_cost", "count_dispatch",
-    "drift_status", "get_logger", "init_telemetry", "merge_snapshots",
-    "mission_registry", "mission_trace", "record_decisions",
-    "record_round", "serving_registry", "snapshot", "trace_capture",
+    "Advisory", "AlertBus", "CostRegistry", "DriftGate", "DriftMonitor",
+    "DriftReference", "DriftStatus", "MetricsRegistry", "NULL_PROFILER",
+    "NULL_SLO", "NULL_TRACER", "SLO", "SloTracker", "StageProfiler",
+    "TelemetryConfig", "Tracer", "builder_builds", "compile_counters",
+    "compiled_cost", "count_dispatch", "drift_status", "get_logger",
+    "init_telemetry", "merge_snapshots", "mission_registry",
+    "mission_trace", "quantile", "record_decisions", "record_round",
+    "serving_registry", "snapshot", "trace_capture",
     "xla_compile_events",
 ]

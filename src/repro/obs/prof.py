@@ -118,13 +118,16 @@ class StageProfiler:
             self.observe(stage, time.perf_counter() - t0)
 
     def snapshot(self) -> dict[str, Any]:
-        """{stage: {count, total_s, mean_s, counts, overflow, edges}}."""
+        """{stage: {count, total_s, mean_s, p50/p95/p99_s, counts,
+        overflow, edges}} — percentiles read straight from the binned
+        histogram via the shared registry.quantile interpolator."""
+        from repro.obs.registry import quantile
         out: dict[str, Any] = {}
         order = [s for s in SERVING_STAGES if s in self._counts]
         order += [s for s in self._counts if s not in SERVING_STAGES]
         for stage in order:
             n = int(self._n[stage])
-            out[stage] = {
+            rec = {
                 "count": n,
                 "total_s": float(self._total_s[stage]),
                 "mean_s": float(self._total_s[stage]) / n if n else
@@ -133,6 +136,10 @@ class StageProfiler:
                 "overflow": int(self._over[stage]),
                 "edges": _EDGES.tolist(),
             }
+            rec["p50_s"] = quantile(rec, 0.50)
+            rec["p95_s"] = quantile(rec, 0.95)
+            rec["p99_s"] = quantile(rec, 0.99)
+            out[stage] = rec
         return out
 
 

@@ -138,6 +138,37 @@ class MetricsRegistry:
         return prom, js
 
 
+def quantile(hist: dict[str, Any], q: float) -> float:
+    """Estimate the ``q``-quantile (0..1) of a binned histogram.
+
+    ``hist`` is the shared snapshot shape: ``counts`` (len(edges)-1
+    bins), ``edges`` (ascending), optional ``overflow`` above the last
+    edge.  Within the landing bin the mass is interpolated
+    geometrically when both edges are positive (the edges are
+    log-spaced, so log-linear interpolation is the unbiased choice),
+    linearly otherwise.  Overflow mass resolves to the last edge — a
+    deliberate underestimate that keeps the readout monotone.  NaN on
+    an empty histogram.
+    """
+    counts = [float(c) for c in hist["counts"]]
+    edges = [float(e) for e in hist["edges"]]
+    over = float(hist.get("overflow", 0))
+    total = sum(counts) + over
+    if total <= 0:
+        return float("nan")
+    target = min(max(float(q), 0.0), 1.0) * total
+    cum = 0.0
+    for i, c in enumerate(counts):
+        if c > 0 and cum + c >= target:
+            frac = (target - cum) / c
+            lo, hi = edges[i], edges[i + 1]
+            if lo > 0 and hi > 0:
+                return lo * (hi / lo) ** frac
+            return lo + (hi - lo) * frac
+        cum += c
+    return edges[-1]
+
+
 def add_summary(reg: MetricsRegistry, summary: dict[str, Any],
                 **labels) -> None:
     """Map a ServingMetrics / mission summary's scalars to gauges."""
@@ -229,12 +260,85 @@ def add_compiled_costs(reg: MetricsRegistry, records: list,
                 reg.gauge(f"compiled_{k}", rec[k], **lb)
 
 
+def add_slo(reg: MetricsRegistry, snap: dict[str, Any],
+            **labels) -> None:
+    """Map an obs.slo.SloTracker snapshot into the registry."""
+    if not snap:
+        return
+    reg.counter("slo_requests_total", snap.get("requests", 0), **labels)
+    for key, metric in (("time_to_verdict", "slo_time_to_verdict_seconds"),
+                        ("queue_wait", "slo_queue_wait_seconds"),
+                        ("service", "slo_service_seconds"),
+                        ("router", "slo_router_decision_seconds")):
+        h = snap.get(key)
+        if h and h.get("count"):
+            reg.histogram(metric, h["counts"], h["edges"],
+                          overflow=h.get("overflow", 0),
+                          sum=h.get("total_s"), **labels)
+    for verdict, h in (snap.get("by_verdict") or {}).items():
+        reg.histogram("slo_time_to_verdict_seconds", h["counts"],
+                      h["edges"], overflow=h.get("overflow", 0),
+                      sum=h.get("total_s"), verdict=verdict, **labels)
+    for r, h in (snap.get("by_r") or {}).items():
+        reg.gauge("slo_ttv_p99_seconds", quantile(h, 0.99),
+                  help="p99 time-to-verdict by samples-at-verdict",
+                  r_at_verdict=r, **labels)
+        reg.counter("slo_requests_by_r_total", h["count"],
+                    r_at_verdict=r, **labels)
+    for k in ("p50_s", "p95_s", "p99_s", "mean_s", "queue_wait_share"):
+        if k in snap:
+            reg.gauge(f"slo_ttv_{k}" if k.endswith("_s") else f"slo_{k}",
+                      snap[k], **labels)
+    for s in snap.get("slos") or []:
+        lb = dict(labels, slo=s["name"])
+        reg.gauge("slo_attainment", s["attainment"],
+                  help="fraction of requests within the SLO target", **lb)
+        reg.gauge("slo_burn_rate", s["burn_rate"],
+                  help="observed miss rate over the error budget", **lb)
+        reg.gauge("slo_breach", 1.0 if s["breach"] else 0.0, **lb)
+    fleet = snap.get("fleet")
+    if fleet:
+        reg.counter("fleet_ticks_total", fleet["ticks"], **labels)
+        reg.counter("fleet_backpressure_ticks_total",
+                    fleet["backpressure_ticks"],
+                    help="fleet ticks where routing left backlog behind",
+                    **labels)
+        reg.gauge("fleet_backlog_peak", fleet["backlog_peak"], **labels)
+        reg.gauge("fleet_backlog_mean", fleet["backlog_mean"], **labels)
+        for p, peak in enumerate(fleet.get("queue_depth_peak", [])):
+            reg.gauge("fleet_queue_depth_peak", peak, pool=p, **labels)
+        for p, mean in enumerate(fleet.get("queue_depth_mean", [])):
+            reg.gauge("fleet_queue_depth_mean", mean, pool=p, **labels)
+
+
+def add_alerts(reg: MetricsRegistry, advisories: list,
+               **labels) -> None:
+    """Map an obs.alerts advisory stream into the registry: counters
+    per (kind, severity) plus the last-event timestamp per kind."""
+    if not advisories:
+        return
+    counts: dict[tuple, int] = {}
+    last_ts: dict[str, float] = {}
+    for a in advisories:
+        d = a if isinstance(a, dict) else a.to_dict()
+        counts[(d["kind"], d["severity"])] = \
+            counts.get((d["kind"], d["severity"]), 0) + 1
+        last_ts[d["kind"]] = max(last_ts.get(d["kind"], 0.0),
+                                 float(d.get("ts_s", 0.0)))
+    for (kind, sev), n in sorted(counts.items()):
+        reg.counter("alerts_total", n, kind=kind, severity=sev, **labels)
+    for kind, ts in sorted(last_ts.items()):
+        reg.gauge("alert_last_ts_seconds", ts, kind=kind, **labels)
+
+
 def serving_registry(summary: dict[str, Any], *,
                      telemetry: dict[str, Any] | None = None,
                      drift: dict[str, Any] | None = None,
                      profile: dict[str, Any] | None = None,
                      compile_counters: dict[str, Any] | None = None,
                      compiled_costs: list | None = None,
+                     slo: dict[str, Any] | None = None,
+                     alerts: list | None = None,
                      **labels) -> MetricsRegistry:
     """One-call registry for a serving run's summary + telemetry.
 
@@ -259,11 +363,17 @@ def serving_registry(summary: dict[str, Any], *,
                              **labels)
     if compiled_costs:
         add_compiled_costs(reg, compiled_costs, job="serving", **labels)
+    slo = slo if slo is not None else summary.get("slo")
+    if slo:
+        add_slo(reg, slo, job="serving", **labels)
+    if alerts:
+        add_alerts(reg, alerts, job="serving", **labels)
     return reg
 
 
 def mission_registry(summary: dict[str, Any], *,
                      telemetry: dict[str, Any] | None = None,
+                     alerts: list | None = None,
                      **labels) -> MetricsRegistry:
     """Registry for a mission run; ``telemetry`` maps group name →
     {"telemetry": snapshot, "drift": status}."""
@@ -276,4 +386,6 @@ def mission_registry(summary: dict[str, Any], *,
         if t.get("drift"):
             add_drift(reg, t["drift"], job="mission", die_group=group,
                       **labels)
+    if alerts:
+        add_alerts(reg, alerts, job="mission", **labels)
     return reg

@@ -11,6 +11,13 @@ Track layout for serving: tid 0 is the engine loop (admit / featurize
 tracks, one complete span per request from admit to retirement with
 verdict / sample-count args.  :func:`mission_trace` builds the same
 format post-hoc from mission logs on the SIMULATED mission clock.
+
+Fleet runs stitch all pools into ONE timeline: pid 0 is the router
+(fleet_tick spans + flow starts), pid p+1 is pool p (gang-dispatch
+track at tid 0 plus that pool's slot tracks).  Each request carries a
+Perfetto flow (ph "s"/"f" keyed by rid) from the router tick that
+routed it to the slot span where its verdict landed, so one request is
+followable router → pool → slot across tracks.
 """
 
 from __future__ import annotations
@@ -30,7 +37,8 @@ class Tracer:
         self.t0 = time.perf_counter()
         self.process_name = process_name
         self.events: list[dict[str, Any]] = []
-        self._thread_names: dict[int, str] = {}
+        self._thread_names: dict[tuple[int, int], str] = {}
+        self._process_names: dict[int, str] = {}
 
     @property
     def enabled(self) -> bool:
@@ -40,8 +48,11 @@ class Tracer:
         """Seconds since tracer start (monotonic)."""
         return time.perf_counter() - self.t0
 
-    def name_thread(self, tid: int, name: str) -> None:
-        self._thread_names[int(tid)] = name
+    def name_thread(self, tid: int, name: str, pid: int = 0) -> None:
+        self._thread_names[(int(pid), int(tid))] = name
+
+    def name_process(self, pid: int, name: str) -> None:
+        self._process_names[int(pid)] = name
 
     def complete(self, name: str, ts_s: float, dur_s: float, *,
                  tid: int = 0, pid: int = 0, **args) -> None:
@@ -71,11 +82,42 @@ class Tracer:
             self.complete(name, start, self.now() - start,
                           tid=tid, pid=pid, **args)
 
+    def _flow(self, ph: str, name: str, flow_id: int, ts_s: float, *,
+              tid: int, pid: int, cat: str) -> None:
+        ev = {"name": name, "ph": ph, "cat": cat, "id": int(flow_id),
+              "pid": int(pid), "tid": int(tid), "ts": float(ts_s) * 1e6}
+        if ph == "f":
+            ev["bp"] = "e"  # bind to the enclosing slice, not the next
+        self.events.append(ev)
+
+    def flow_start(self, name: str, flow_id: int,
+                   ts_s: float | None = None, *, tid: int = 0,
+                   pid: int = 0, cat: str = "req") -> None:
+        """Open a Perfetto flow arrow at ``ts_s`` (must land inside a
+        slice on that track; Perfetto draws the arrow slice-to-slice)."""
+        self._flow("s", name, flow_id, self.now() if ts_s is None
+                   else ts_s, tid=tid, pid=pid, cat=cat)
+
+    def flow_step(self, name: str, flow_id: int,
+                  ts_s: float | None = None, *, tid: int = 0,
+                  pid: int = 0, cat: str = "req") -> None:
+        self._flow("t", name, flow_id, self.now() if ts_s is None
+                   else ts_s, tid=tid, pid=pid, cat=cat)
+
+    def flow_end(self, name: str, flow_id: int,
+                 ts_s: float | None = None, *, tid: int = 0,
+                 pid: int = 0, cat: str = "req") -> None:
+        self._flow("f", name, flow_id, self.now() if ts_s is None
+                   else ts_s, tid=tid, pid=pid, cat=cat)
+
     def to_chrome(self) -> dict[str, Any]:
-        meta = [{"name": "process_name", "ph": "M", "pid": 0, "tid": 0,
-                 "args": {"name": self.process_name}}]
-        for tid, name in sorted(self._thread_names.items()):
-            meta.append({"name": "thread_name", "ph": "M", "pid": 0,
+        pnames = dict(self._process_names)
+        pnames.setdefault(0, self.process_name)
+        meta = [{"name": "process_name", "ph": "M", "pid": pid, "tid": 0,
+                 "args": {"name": name}}
+                for pid, name in sorted(pnames.items())]
+        for (pid, tid), name in sorted(self._thread_names.items()):
+            meta.append({"name": "thread_name", "ph": "M", "pid": pid,
                          "tid": tid, "args": {"name": name}})
         return {"traceEvents": meta + self.events,
                 "displayTimeUnit": "ms"}
@@ -95,13 +137,19 @@ class _NullTracer(Tracer):
     def enabled(self) -> bool:
         return False
 
-    def name_thread(self, tid, name):
+    def name_thread(self, tid, name, pid=0):
+        pass
+
+    def name_process(self, pid, name):
         pass
 
     def complete(self, *a, **k):
         pass
 
     def instant(self, *a, **k):
+        pass
+
+    def _flow(self, *a, **k):
         pass
 
     @contextmanager

@@ -8,6 +8,10 @@ Modules:
   fleet     mesh-of-pools scale-out: one engine pool per device, a
             least-loaded admission router with backpressure, and one
             shard_map'd gang round dispatch per fleet tick
+  load      closed-loop load harness: seeded Poisson/burst/ramp
+            arrival schedules driving an engine or fleet OPEN-LOOP
+            (arrivals don't wait for the system), for latency-vs-
+            offered-load curves and SLO measurement
 
 The escalation math leans on the rank-16 structure of the shared
 selection lines (core/sampling.py): per-slot activation bases make
@@ -22,6 +26,7 @@ from repro.serving.adaptive import (escalation_schedule, finalize,
 from repro.serving.engine import (LMServingEngine, Request,
                                   SarServingEngine)
 from repro.serving.fleet import SarServingFleet, make_pool_mesh
+from repro.serving.load import ArrivalSpec, run_open_loop
 from repro.serving.metrics import (DecisionCost, RequestRecord,
                                    ServingMetrics, decision_cost,
                                    decision_energy, decision_latency,
@@ -30,11 +35,12 @@ from repro.serving.triage import (ACCEPT, ESCALATE, FLAG, TriagePolicy,
                                   decide, fixed_r_decide)
 
 __all__ = [
-    "ACCEPT", "DecisionCost", "ESCALATE", "FLAG", "LMServingEngine",
-    "Request", "RequestRecord", "SarServingEngine", "SarServingFleet",
-    "ServingMetrics", "TriagePolicy", "decide", "decision_cost",
-    "decision_energy", "decision_latency", "energy_terms",
-    "escalation_schedule", "finalize", "fixed_r_decide", "init_stats",
-    "make_pool_mesh", "request_energy", "stream_indices",
-    "stream_selections", "update_stats", "update_stats_streamed",
+    "ACCEPT", "ArrivalSpec", "DecisionCost", "ESCALATE", "FLAG",
+    "LMServingEngine", "Request", "RequestRecord", "SarServingEngine",
+    "SarServingFleet", "ServingMetrics", "TriagePolicy", "decide",
+    "decision_cost", "decision_energy", "decision_latency",
+    "energy_terms", "escalation_schedule", "finalize", "fixed_r_decide",
+    "init_stats", "make_pool_mesh", "request_energy", "run_open_loop",
+    "stream_indices", "stream_selections", "update_stats",
+    "update_stats_streamed",
 ]

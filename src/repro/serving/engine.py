@@ -92,6 +92,7 @@ from repro.obs.telemetry import (TelemetryConfig, count_dispatch,
                                  init_telemetry, record_decisions,
                                  record_round)
 from repro.obs.telemetry import snapshot as telemetry_snapshot
+from repro.obs.slo import NULL_SLO, SloTracker
 from repro.obs.trace import NULL_TRACER
 from repro.serving import adaptive, triage
 from repro.serving.metrics import RequestRecord, ServingMetrics
@@ -118,6 +119,7 @@ class Request:
 class _Slot:
     req: Request | None = None
     admit_s: float = 0.0              # perf_counter stamp at admission
+    first_dispatch_s: float = 0.0     # first dispatch covering this slot
     n_samples: int = 0                # accumulated over the request
     n_decisions: int = 0              # tokens decided (LM) / 1 (SAR)
 
@@ -424,7 +426,9 @@ class _EngineBase:
                  metrics: ServingMetrics | None,
                  telemetry: bool | TelemetryConfig = True,
                  tracer=None,
-                 profiler: bool | StageProfiler = True):
+                 profiler: bool | StageProfiler = True,
+                 slo=True,
+                 trace_pid: int = 0):
         self.n_slots = n_slots
         self.policy = policy
         self.queue: deque[Request] = deque()
@@ -450,8 +454,24 @@ class _EngineBase:
         if profiler is True:
             profiler = StageProfiler()
         self.profiler: StageProfiler = profiler or NULL_PROFILER
+        # Host-side SLO lifecycle tracking (obs/slo): retired records
+        # stream into time-to-verdict histograms.  True for a fresh
+        # tracker this engine owns (and attaches to its summary), an
+        # existing SloTracker to share one fleet-wide (the owner then
+        # attaches it), False/None to disable.  Pure host bookkeeping
+        # at the existing sync points: no graph change, no extra syncs.
+        if slo is True:
+            slo = SloTracker()
+            self._own_slo = True
+        else:
+            self._own_slo = False
+        self.slo: SloTracker = slo or NULL_SLO
+        # Trace process id: 0 standalone; the fleet assigns pid p+1 so
+        # every pool lands on its own named process track in ONE trace.
+        self.trace_pid = int(trace_pid)
         for i in range(n_slots):
-            self.tracer.name_thread(i + 1, f"slot {i}")
+            self.tracer.name_thread(i + 1, f"slot {i}",
+                                    pid=self.trace_pid)
 
     def submit(self, request: Request) -> None:
         if request.arrival_s == 0.0:
@@ -464,6 +484,11 @@ class _EngineBase:
     def n_active(self) -> int:
         return self.n_slots - len(self.free)
 
+    @property
+    def pending(self) -> int:
+        """Requests admitted to the queue but not yet slotted."""
+        return len(self.queue)
+
     def _next_bases(self, count: int) -> np.ndarray:
         """Reserve fresh selection-stream regions: each decision owns
         [id·r_max, (id+1)·r_max) of the global stream."""
@@ -473,12 +498,13 @@ class _EngineBase:
         return ids * np.uint32(self.policy.r_max)
 
     def _retire(self, slot_idx: int, verdict: int, fin: dict,
-                extra_samples: int) -> None:
+                extra_samples: int,
+                verdict_s: float = float("nan")) -> None:
         slot = self.slots[slot_idx]
         req = slot.req
         now = time.perf_counter()
         self.metrics.mark(now)
-        self.metrics.record(RequestRecord(
+        rec = RequestRecord(
             rid=req.rid, verdict=int(verdict),
             n_samples=slot.n_samples + extra_samples,
             n_decisions=max(slot.n_decisions, 1),
@@ -487,16 +513,26 @@ class _EngineBase:
             confidence=float(fin["confidence"][slot_idx]),
             mutual_information=float(fin["mutual_information"][slot_idx]),
             arrival_pc=req.arrival_pc,
-        ))
+            first_dispatch_s=(slot.first_dispatch_s or float("nan")),
+            verdict_s=verdict_s,
+        )
+        self.metrics.record(rec)
+        self.slo.observe(rec)
         if self.tracer.enabled:
             start = slot.admit_s - self.tracer.t0
             self.tracer.complete(
                 f"req {req.rid}", start, now - slot.admit_s,
-                tid=slot_idx + 1, verdict=int(verdict),
+                tid=slot_idx + 1, pid=self.trace_pid,
+                verdict=int(verdict),
                 n_samples=slot.n_samples + extra_samples,
                 n_decisions=max(slot.n_decisions, 1))
+            # Close this request's Perfetto flow on the slot span —
+            # a fleet's router opened it when the request was routed.
+            self.tracer.flow_end(f"req {req.rid}", req.rid, start,
+                                 tid=slot_idx + 1, pid=self.trace_pid)
         slot.req = None
         slot.n_samples = slot.n_decisions = 0
+        slot.first_dispatch_s = 0.0
         self.free.append(slot_idx)
 
     def telemetry_snapshot(self) -> dict | None:
@@ -511,6 +547,17 @@ class _EngineBase:
         ``compile_counters`` keys; obs.registry picks both up)."""
         snap = self.profiler.snapshot()
         self.metrics.attach_profile(snap or None, prof.compile_counters())
+        if self._own_slo:
+            self.metrics.attach_slo(self.slo.snapshot())
+
+    def _stamp_first_dispatch(self, active) -> None:
+        """Host-side lifecycle stamp: the first dispatch that covers a
+        slot.  Cheap clock arithmetic before the (already-pending)
+        device round — no sync, no graph change."""
+        now = time.perf_counter()
+        for i in np.nonzero(active)[0]:
+            if self.slots[i].first_dispatch_s == 0.0:
+                self.slots[i].first_dispatch_s = now
 
 
 # ----------------------------------------------------------------------
@@ -542,7 +589,9 @@ class SarServingEngine(_EngineBase):
                  fused: bool = True,
                  telemetry: bool | TelemetryConfig = True,
                  tracer=None,
-                 profiler: bool | StageProfiler = True):
+                 profiler: bool | StageProfiler = True,
+                 slo=True,
+                 trace_pid: int = 0):
         """``head``/``hcfg``: pre-deployed serving head + its config —
         the repro/hw chip-instance path (hw.calib.prepare_instance_head
         returns both; the rank-16 fast path below runs unchanged on the
@@ -583,9 +632,13 @@ class SarServingEngine(_EngineBase):
         False to compile the exact pre-telemetry graph.  ``tracer``: an
         obs.trace.Tracer collecting per-request/per-dispatch spans.
         Neither adds host syncs or changes verdicts (tests/test_obs.py).
+        ``slo``: host-side time-to-verdict tracking (obs/slo) — True
+        for an owned tracker, a shared SloTracker (fleet), or False;
+        like the profiler it is free at the decision level
+        (tests/test_slo.py).
         """
         super().__init__(n_slots, policy, metrics, telemetry, tracer,
-                         profiler)
+                         profiler, slo, trace_pid)
         from repro.core.bayes_layer import to_serving
         self.cfg = cfg
         self.adaptive_mode = adaptive_mode
@@ -681,7 +734,8 @@ class SarServingEngine(_EngineBase):
             if take < self.n_slots:                   # fixed-shape batch
                 pad = np.repeat(imgs[-1:], self.n_slots - take, axis=0)
                 imgs = np.concatenate([imgs, pad], axis=0)
-            with self.tracer.span("featurize", n_admitted=take), \
+            with self.tracer.span("featurize", pid=self.trace_pid,
+                                  n_admitted=take), \
                     self.profiler.span("featurize"):
                 rows = self._featurize(jnp.asarray(imgs))
             idx = np.full((self.n_slots,), self.n_slots, np.int32)  # drop
@@ -717,61 +771,84 @@ class SarServingEngine(_EngineBase):
         """[n_slots] bool — which slots hold an in-flight request."""
         return np.array([s.req is not None for s in self.slots])
 
-    def _retire_decided(self, active, verdict, fin, spent: int) -> int:
+    def _retire_decided(self, active, verdict, fin, spent: int,
+                        verdict_s: float = float("nan")) -> int:
         """Post-dispatch draining shared with the fleet: charge samples
         to every active slot, retire those whose verdict left ESCALATE.
-        Returns the number retired."""
+        ``verdict_s`` is the perf_counter stamp of the host sync that
+        pulled these verdicts.  Returns the number retired."""
         retired = 0
         for i in np.nonzero(active)[0]:
             self.slots[i].n_samples += spent
             if verdict[i] != ESCALATE:
                 self.slots[i].n_decisions = 1
                 # n_samples already accumulated; fin["n"] agrees
-                self._retire(i, verdict[i], fin, extra_samples=0)
+                self._retire(i, verdict[i], fin, extra_samples=0,
+                             verdict_s=verdict_s)
                 retired += 1
         return retired
 
     # -- main loop ------------------------------------------------------
-    def run(self, max_ticks: int = 100_000) -> dict:
+    def start(self) -> None:
+        """Reset the per-run selection-stream bases.  ``run`` calls
+        this; open-loop drivers (serving/load.py) call it once, then
+        interleave ``submit`` with ``step`` on their own clock."""
         self.base = np.zeros((self.n_slots,), np.uint32)
-        for _ in range(max_ticks):
-            self._admit()
-            if self.n_active == 0:
-                if not self.queue:
-                    break
-                continue
-            active = self.active_mask()
-            t_disp = self.tracer.now()
-            with self.profiler.span("dispatch"):
-                if self.tcfg is None:
-                    self.stats, verdict, fin, rounds = self._round(
-                        self.pool, self.stats, jnp.asarray(self.base),
-                        jnp.asarray(active))
-                else:
-                    (self.stats, verdict, fin, rounds,
-                     self._telem) = self._round(
-                        self.pool, self.stats, jnp.asarray(self.base),
-                        jnp.asarray(active), self._telem)
-            # ONE blocking host↔device round trip per dispatch — the
-            # while_loop above already ran every all-escalate round.
-            # The triage_loop span measures exactly that pull: the host
-            # waiting on the device-resident escalation.
-            with self.profiler.span("triage_loop"):
-                verdict = np.asarray(verdict)
-                fin = {k: np.asarray(v) for k, v in fin.items()}
-                spent = self.r_step * int(rounds)
-            self.host_syncs += 1
-            if self.tracer.enabled:
-                self.tracer.complete(
-                    "sar_rounds", t_disp, self.tracer.now() - t_disp,
-                    rounds=int(rounds), n_active=int(active.sum()),
-                    samples_per_slot=spent)
-            with self.profiler.span("retirement"):
-                self._retire_decided(active, verdict, fin, spent)
+
+    def step(self) -> bool:
+        """One scheduler tick: admit from the queue, dispatch the
+        device-resident escalation round, retire decided slots.
+        Returns False when nothing was active (idle tick)."""
+        self._admit()
+        if self.n_active == 0:
+            return False
+        active = self.active_mask()
+        self._stamp_first_dispatch(active)
+        t_disp = self.tracer.now()
+        with self.profiler.span("dispatch"):
+            if self.tcfg is None:
+                self.stats, verdict, fin, rounds = self._round(
+                    self.pool, self.stats, jnp.asarray(self.base),
+                    jnp.asarray(active))
+            else:
+                (self.stats, verdict, fin, rounds,
+                 self._telem) = self._round(
+                    self.pool, self.stats, jnp.asarray(self.base),
+                    jnp.asarray(active), self._telem)
+        # ONE blocking host↔device round trip per dispatch — the
+        # while_loop above already ran every all-escalate round.
+        # The triage_loop span measures exactly that pull: the host
+        # waiting on the device-resident escalation.
+        with self.profiler.span("triage_loop"):
+            verdict = np.asarray(verdict)
+            fin = {k: np.asarray(v) for k, v in fin.items()}
+            spent = self.r_step * int(rounds)
+        self.host_syncs += 1
+        t_verdict = time.perf_counter()
+        if self.tracer.enabled:
+            self.tracer.complete(
+                "sar_rounds", t_disp, self.tracer.now() - t_disp,
+                pid=self.trace_pid,
+                rounds=int(rounds), n_active=int(active.sum()),
+                samples_per_slot=spent)
+        with self.profiler.span("retirement"):
+            self._retire_decided(active, verdict, fin, spent,
+                                 verdict_s=t_verdict)
+        return True
+
+    def drain(self) -> dict:
+        """Attach telemetry/perf/SLO snapshots and build the summary."""
         if self.tcfg is not None:
             self.metrics.attach_telemetry(self.telemetry_snapshot())
         self._attach_perf()
         return self.metrics.summary()
+
+    def run(self, max_ticks: int = 100_000) -> dict:
+        self.start()
+        for _ in range(max_ticks):
+            if not self.step() and not self.queue:
+                break
+        return self.drain()
 
     # -- compiled-cost capture (profiling path only) --------------------
     def compiled_cost_records(self) -> list[dict]:
@@ -832,9 +909,10 @@ class LMServingEngine(_EngineBase):
                  fused: bool = True,
                  telemetry: bool | TelemetryConfig = True,
                  tracer=None,
-                 profiler: bool | StageProfiler = True):
+                 profiler: bool | StageProfiler = True,
+                 slo=True):
         super().__init__(n_slots, policy, metrics, telemetry, tracer,
-                         profiler)
+                         profiler, slo)
         from repro.models.registry import get_api
         from repro.models.transformer import _head_serving
         assert cfg.bayesian_head, "adaptive serving needs the Bayesian head"
@@ -998,6 +1076,7 @@ class LMServingEngine(_EngineBase):
                 self.cache = None                      # rebase the pool
                 continue
             active = np.array([s.req is not None for s in self.slots])
+            self._stamp_first_dispatch(active)
             # one token decision for every active slot, ONE dispatch:
             # the whole escalation schedule runs device-resident.
             t_disp = self.tracer.now()
@@ -1020,6 +1099,7 @@ class LMServingEngine(_EngineBase):
                 spent = np.asarray(spent)
                 fin = {k: np.asarray(v) for k, v in fin.items()}
             self.host_syncs += 1
+            t_verdict = time.perf_counter()
             if self.tracer.enabled:
                 self.tracer.complete(
                     "lm_token", t_disp, self.tracer.now() - t_disp,
@@ -1035,7 +1115,8 @@ class LMServingEngine(_EngineBase):
                     done = slot.n_decisions >= slot.req.max_new_tokens
                     if verdict[i] == FLAG or (verdict[i] == ACCEPT
                                               and done):
-                        self._retire(i, verdict[i], fin, extra_samples=0)
+                        self._retire(i, verdict[i], fin, extra_samples=0,
+                                     verdict_s=t_verdict)
             if self.n_active == 0 and not self.queue:
                 break                       # nothing left to decode for
             # advance the pool clock: committed tokens -> next hidden

@@ -66,7 +66,9 @@ import numpy as np
 
 from repro.obs import prof
 from repro.obs.prof import NULL_PROFILER, StageProfiler
+from repro.obs.slo import NULL_SLO, SloTracker
 from repro.obs.telemetry import TelemetryConfig, merge_snapshots
+from repro.obs.trace import NULL_TRACER
 from repro.serving.engine import (Request, SarServingEngine,
                                   _build_multi_round)
 from repro.serving.metrics import ServingMetrics
@@ -182,7 +184,9 @@ class SarServingFleet:
                  layers=None, tile_program=None,
                  queue_cap: int | None = None,
                  gang: bool | None = None,
-                 profiler: bool | StageProfiler = True):
+                 profiler: bool | StageProfiler = True,
+                 tracer=None,
+                 slo=True):
         if n_pools < 1:
             raise ValueError("n_pools must be >= 1")
         self.n_pools = n_pools
@@ -194,6 +198,22 @@ class SarServingFleet:
         if profiler is True:
             profiler = StageProfiler()
         self.profiler: StageProfiler = profiler or NULL_PROFILER
+        # One tracer stitches the whole fleet into a single timeline:
+        # pid 0 = router (fleet_tick spans + request flow starts),
+        # pid p+1 = pool p (its engine loop, gang-dispatch track, and
+        # slot tracks).  One shared SloTracker receives every pool's
+        # retirements plus the fleet-level router/queue/backpressure
+        # samples — both are pure host bookkeeping (tests/test_slo.py).
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        if slo is True:
+            slo = SloTracker()
+        self.slo: SloTracker = slo or NULL_SLO
+        if self.tracer.enabled:
+            self.tracer.name_process(0, "router")
+            self.tracer.name_thread(0, "fleet ticks", pid=0)
+            for p in range(n_pools):
+                self.tracer.name_process(p + 1, f"pool {p}")
+                self.tracer.name_thread(0, "pool loop", pid=p + 1)
         self.engines = [
             SarServingEngine(
                 params, cfg, n_slots=slots_per_pool, policy=policy,
@@ -202,7 +222,8 @@ class SarServingFleet:
                                        extra={"pool": p},
                                        tile_program=tile_program),
                 head=head, hcfg=hcfg, chip=chip, fused=fused,
-                telemetry=telemetry, profiler=profiler)
+                telemetry=telemetry, profiler=profiler,
+                tracer=self.tracer, slo=self.slo, trace_pid=p + 1)
             for p in range(n_pools)]
         e0 = self.engines[0]
         self.tcfg = e0.tcfg
@@ -252,6 +273,8 @@ class SarServingFleet:
         return best
 
     def _route(self) -> None:
+        had_work = bool(self.backlog)
+        t0 = time.perf_counter()
         while self.backlog:
             p = self._pick_pool()
             if p is None:
@@ -259,6 +282,19 @@ class SarServingFleet:
             req = self.backlog.popleft()
             self.routes[req.rid] = p
             self.engines[p].queue.append(req)
+            if self.tracer.enabled:
+                # open this request's flow on the router track; the
+                # owning pool's slot span closes it at retirement
+                self.tracer.flow_start(f"req {req.rid}", req.rid,
+                                       tid=0, pid=0)
+        if had_work:
+            self.slo.observe_router(time.perf_counter() - t0)
+        if self.backlog:
+            # every pool's bounded queue is full: this tick backpressures
+            self.slo.backpressure(len(self.backlog))
+            if self.tracer.enabled:
+                self.tracer.instant("backpressure", tid=0, pid=0,
+                                    backlog=len(self.backlog))
 
     @property
     def pending(self) -> int:
@@ -296,6 +332,7 @@ class SarServingFleet:
             rounds = np.asarray(rounds)
             fins = {k: np.asarray(v) for k, v in fins.items()}
         self.host_syncs += 1
+        t_verdict = time.perf_counter()
         with self.profiler.span("retirement"):
             for p, eng in enumerate(self.engines):
                 eng.stats = stats_out[p]
@@ -303,7 +340,7 @@ class SarServingFleet:
                     fin_p = {k: v[p] for k, v in fins.items()}
                     spent = eng.r_step * int(rounds[p])
                     eng._retire_decided(actives[p], verdicts[p], fin_p,
-                                        spent)
+                                        spent, verdict_s=t_verdict)
         return [int(r) for r in rounds]
 
     def _dispatch_sequential(self, actives: list[np.ndarray]) -> list[int]:
@@ -329,38 +366,82 @@ class SarServingFleet:
             self.host_syncs += 1
             eng.host_syncs += 1
             trips[p] = int(rounds)
+            t_verdict = time.perf_counter()
             with self.profiler.span("retirement"):
-                eng._retire_decided(active, verdict, fin, spent)
+                eng._retire_decided(active, verdict, fin, spent,
+                                    verdict_s=t_verdict)
         return trips
 
     # -- main loop ------------------------------------------------------
-    def run(self, max_ticks: int = 100_000) -> dict:
-        t0 = time.perf_counter()
+    def start(self) -> None:
+        """Reset per-pool stream bases.  ``run`` calls this; open-loop
+        drivers (serving/load.py) call it once, then interleave
+        ``submit`` with ``tick`` on their own clock."""
         for eng in self.engines:
-            eng.base = np.zeros((eng.n_slots,), np.uint32)
-        for _ in range(max_ticks):
-            t_tick = time.perf_counter()
+            eng.start()
+
+    def tick(self) -> bool:
+        """One fleet tick: route the backlog, admit per pool, one gang
+        (or sequential) dispatch, retire.  Returns False when no pool
+        had active work (idle tick)."""
+        t_tick = time.perf_counter()
+        t_tr = self.tracer.now()
+        with self.profiler.span("route"):
             self._route()
-            for eng in self.engines:
-                eng._admit()
-            actives = [eng.active_mask() for eng in self.engines]
-            if not any(a.any() for a in actives):
-                if not self.backlog and not any(
-                        e.queue for e in self.engines):
-                    break
-                continue
-            if self._gang is not None:
-                trips = self._dispatch_gang(actives)
-            else:
-                trips = self._dispatch_sequential(actives)
-            self.tick_log.append(
-                {"wall_s": time.perf_counter() - t_tick, "trips": trips})
-        self.wall_s = time.perf_counter() - t0
+        for eng in self.engines:
+            eng._admit()
+        self.slo.sample_queues(
+            [len(e.queue) for e in self.engines],
+            [e.n_active for e in self.engines], len(self.backlog))
+        actives = [eng.active_mask() for eng in self.engines]
+        if not any(a.any() for a in actives):
+            return False
+        for eng, active in zip(self.engines, actives):
+            eng._stamp_first_dispatch(active)
+        t_disp = self.tracer.now()
+        if self._gang is not None:
+            trips = self._dispatch_gang(actives)
+        else:
+            trips = self._dispatch_sequential(actives)
+        self.tick_log.append(
+            {"wall_s": time.perf_counter() - t_tick, "trips": trips})
+        if self.tracer.enabled:
+            now = self.tracer.now()
+            tick_no = len(self.tick_log) - 1
+            # per-pool gang-dispatch tracks: one span per pool per tick
+            # carrying that pool's OWN while_loop trip count
+            for p in range(self.n_pools):
+                if actives[p].any():
+                    self.tracer.complete(
+                        "gang_dispatch", t_disp, now - t_disp,
+                        tid=0, pid=p + 1, tick=tick_no, trips=trips[p],
+                        n_active=int(actives[p].sum()))
+            self.tracer.complete(
+                "fleet_tick", t_tr, now - t_tr, tid=0, pid=0,
+                tick=tick_no, backlog=len(self.backlog),
+                n_active=sum(int(a.sum()) for a in actives),
+                max_trips=max(trips))
+        return True
+
+    def drain(self) -> dict:
+        """Attach per-pool telemetry/perf and build the fleet summary
+        (the shared SLO snapshot lands on the fleet summary only)."""
         for eng in self.engines:
             if eng.tcfg is not None:
                 eng.metrics.attach_telemetry(eng.telemetry_snapshot())
             eng._attach_perf()
         return self.summary()
+
+    def run(self, max_ticks: int = 100_000) -> dict:
+        t0 = time.perf_counter()
+        self.start()
+        for _ in range(max_ticks):
+            if not self.tick():
+                if not self.backlog and not any(
+                        e.queue for e in self.engines):
+                    break
+        self.wall_s = time.perf_counter() - t0
+        return self.drain()
 
     # -- aggregation ----------------------------------------------------
     def summary(self) -> dict:
@@ -427,4 +508,8 @@ class SarServingFleet:
         snap = self.profiler.snapshot()
         if snap:
             out["stage_profile"] = snap
+        slo_snap = self.slo.snapshot()
+        if slo_snap:
+            out["slo"] = slo_snap
+            out["backpressure_ticks"] = self.slo.backpressure_ticks
         return out

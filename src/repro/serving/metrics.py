@@ -59,6 +59,12 @@ class RequestRecord:
     confidence: float = float("nan")
     mutual_information: float = float("nan")
     arrival_pc: float = float("nan")
+    # Remaining lifecycle stamps (perf_counter clock, NaN when the
+    # engine predates them or the request never dispatched): first time
+    # a dispatch covered this request's slot, and the instant the host
+    # pulled its verdict (done_s is the later retirement bookkeeping).
+    first_dispatch_s: float = float("nan")
+    verdict_s: float = float("nan")
 
     @property
     def _arrival(self) -> float:
@@ -76,6 +82,18 @@ class RequestRecord:
     @property
     def latency_s(self) -> float:
         return self.done_s - self._arrival
+
+    @property
+    def dispatch_wait_s(self) -> float:
+        """Admit → first dispatch that covered this slot."""
+        return self.first_dispatch_s - self.admit_s
+
+    @property
+    def verdict_latency_s(self) -> float:
+        """Time-to-verdict: arrival → the host sync that pulled the
+        verdict (NaN without the stamp — callers fall back to
+        ``latency_s``, which additionally includes retirement)."""
+        return self.verdict_s - self._arrival
 
 
 @dataclasses.dataclass(frozen=True)
@@ -284,6 +302,9 @@ class ServingMetrics:
         # both automatically).
         self.stage_profile: dict | None = None
         self.compile_counters: dict | None = None
+        # obs/slo tracker snapshot, attached at drain time; surfaced
+        # under summary()["slo"].
+        self.slo: dict | None = None
 
     def record(self, rec: RequestRecord) -> None:
         self.records.append(rec)
@@ -295,6 +316,9 @@ class ServingMetrics:
                        compile_counters: dict | None = None) -> None:
         self.stage_profile = stage_profile
         self.compile_counters = compile_counters
+
+    def attach_slo(self, snapshot: dict | None) -> None:
+        self.slo = snapshot or None
 
     def mark(self, t: float) -> None:
         if self.wall_start is None:
@@ -309,8 +333,10 @@ class ServingMetrics:
             out = {"requests": 0, "decisions": 0, "wall_s": nan,
                    "decisions_per_s": nan, "mean_samples_per_decision": nan,
                    "p50_latency_s": nan, "p95_latency_s": nan,
-                   "mean_service_s": nan, "accept_fraction": nan,
-                   "flag_fraction": nan}
+                   "p99_latency_s": nan, "mean_service_s": nan,
+                   "mean_queue_wait_s": nan, "queue_wait_total_s": nan,
+                   "service_total_s": nan, "queue_wait_share": nan,
+                   "accept_fraction": nan, "flag_fraction": nan}
             if self.layers is not None:
                 out.update(energy_per_decision_pJ=nan,
                            grng_energy_per_decision_aJ=nan,
@@ -332,9 +358,16 @@ class ServingMetrics:
                             for r in self.records], np.float64)
         lat = np.array([r.latency_s for r in self.records], np.float64)
         service = np.array([r.service_latency_s for r in self.records])
+        queue = np.array([r.queue_latency_s for r in self.records],
+                         np.float64)
         verdicts = np.array([r.verdict for r in self.records])
         wall = ((self.wall_end - self.wall_start)
                 if self.wall_start is not None else float("nan"))
+        # Per record, latency ≡ queue_wait + service exactly (shared
+        # arithmetic on the same stamps) — so the totals below
+        # reconcile against the wall span by construction; the
+        # queue-wait share says where a run's time actually went.
+        q_tot, s_tot = float(queue.sum()), float(service.sum())
         out = {
             "requests": len(self.records),
             "decisions": n_dec,
@@ -344,7 +377,13 @@ class ServingMetrics:
             "mean_samples_per_decision": float(samples.mean()),
             "p50_latency_s": float(np.percentile(lat, 50)),
             "p95_latency_s": float(np.percentile(lat, 95)),
+            "p99_latency_s": float(np.percentile(lat, 99)),
             "mean_service_s": float(service.mean()),
+            "mean_queue_wait_s": float(queue.mean()),
+            "queue_wait_total_s": q_tot,
+            "service_total_s": s_tot,
+            "queue_wait_share": q_tot / (q_tot + s_tot)
+                                if (q_tot + s_tot) > 0 else 0.0,
         }
         for code, name in VERDICT_NAMES.items():
             if name != "escalate":
@@ -391,6 +430,8 @@ class ServingMetrics:
             out["stage_profile"] = self.stage_profile
         if self.compile_counters is not None:
             out["compile_counters"] = self.compile_counters
+        if self.slo is not None:
+            out["slo"] = self.slo
         return out
 
     def _tile_summary(self) -> dict:

@@ -278,11 +278,26 @@ def test_regress_current_metrics_extraction(tmp_path):
     assert cur["fleet.pools1.per_pool_syncs_per_decision"] == 0.03
     assert cur["fleet.speedup_4pools"] == 4.0
     assert cur["fleet.scaling_efficiency_4pools"] == 1.0
+    # SLO snapshot (BENCH_slo.json) contributes the gate boolean plus
+    # the nominal-Poisson structural metrics
+    slo = tmp_path / "s.json"
+    slo.write_text(json.dumps({
+        "gates": {"slo_report_well_formed": True,
+                  "burn_alert_fires_under_spike": True,
+                  "quiet_under_nominal": True, "gates_all_pass": True},
+        "configs": {"poisson_engine": {
+            "queue_wait_share": 0.3,
+            "host_syncs_per_decision": 0.25}}}))
+    cur = regress.current_metrics(serving, kernels, lifetime, fleet, slo)
+    assert cur["slo.gates_all_pass"] == 1.0
+    assert cur["slo.poisson_engine.queue_wait_share"] == 0.3
+    assert cur["slo.poisson_engine.slo_syncs_per_decision"] == 0.25
     # no snapshots at all -> empty (regress exits 2 in main)
     assert regress.current_metrics(tmp_path / "a.json",
                                    tmp_path / "b.json",
                                    tmp_path / "c.json",
-                                   tmp_path / "d.json") == {}
+                                   tmp_path / "d.json",
+                                   tmp_path / "e.json") == {}
 
 
 def test_committed_baseline_gates_clean(tmp_path):
